@@ -1,0 +1,46 @@
+"""Beyond-paper ablation: the paper fixes best-fit bin packing (§6.1) — how
+much of the saving is the *scheduler* vs the autoscaling machinery?
+Swap in first-fit, worst-fit (Docker Swarm 'spread') and the default-K8s
+scorer under the same NBR-BAS policies."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+from repro.core import ExperimentSpec, run_experiment
+
+
+def run(seeds=(0, 1, 2), workload: str = "slow") -> List[Dict]:
+    rows = []
+    for sched in ("best-fit", "first-fit", "worst-fit", "k8s-default"):
+        costs, rams = [], []
+        t0 = time.time()
+        for seed in seeds:
+            r = run_experiment(ExperimentSpec(
+                workload=workload, scheduler=sched,
+                rescheduler="non-binding", autoscaler="binding", seed=seed))
+            costs.append(r.cost)
+            rams.append(r.avg_ram_ratio)
+        rows.append({
+            "scheduler": sched, "workload": workload,
+            "cost_mean": statistics.fmean(costs),
+            "ram_ratio": statistics.fmean(rams),
+            "us_per_call": (time.time() - t0) / len(seeds) * 1e6,
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    base = next(r for r in rows if r["scheduler"] == "best-fit")
+    for r in rows:
+        delta = 100 * (r["cost_mean"] / base["cost_mean"] - 1)
+        print(f"ablation/{r['workload']}/{r['scheduler']},"
+              f"{r['us_per_call']:.0f},"
+              f"cost=${r['cost_mean']:.2f}({delta:+.1f}%);"
+              f"ram={r['ram_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

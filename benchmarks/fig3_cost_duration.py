@@ -1,0 +1,43 @@
+"""Paper Fig. 3: cost + scheduling duration for the six rescheduler x
+autoscaler combinations on each workload (multi-seed)."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+from repro.core import run_all_combos
+
+
+def run(seeds=(0, 1, 2), workloads=("bursty", "slow", "mixed")) -> List[Dict]:
+    rows = []
+    for wl in workloads:
+        per_combo: Dict[str, Dict[str, List[float]]] = {}
+        t0 = time.time()
+        for seed in seeds:
+            for r in run_all_combos(wl, seed=seed):
+                d = per_combo.setdefault(r.combo(), {"cost": [], "dur": []})
+                d["cost"].append(r.cost)
+                d["dur"].append(r.duration_s)
+        elapsed = (time.time() - t0) / max(len(seeds) * 6, 1)
+        for combo, d in per_combo.items():
+            rows.append({
+                "workload": wl, "combo": combo,
+                "cost_mean": statistics.fmean(d["cost"]),
+                "cost_stdev": statistics.stdev(d["cost"]) if len(d["cost"]) > 1 else 0.0,
+                "duration_mean_s": statistics.fmean(d["dur"]),
+                "us_per_call": elapsed * 1e6,
+            })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(f"fig3/{row['workload']}/{row['combo']},"
+              f"{row['us_per_call']:.0f},"
+              f"cost=${row['cost_mean']:.2f}±{row['cost_stdev']:.2f};"
+              f"dur={row['duration_mean_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import rows as roofline_rows
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+
+def dryrun_table() -> str:
+    out = ["| arch | shape | mesh | chips | peak GiB/dev | coll GiB/dev | "
+           "compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(ART, "dryrun", "*.json"))):
+        if "__bf16gather" in p or "__kvint8" in p or "__padheads" in p:
+            continue
+        d = json.load(open(p))
+        peak = d["memory"]["peak_estimate_bytes"] / 2**30
+        out.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                   f"{d['devices']} | {peak:.2f} | "
+                   f"{d['collectives_per_device']['total']/2**30:.1f} | "
+                   f"{d['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | useful % | roofline frac % |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in roofline_rows():
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"**{r['dominant']}** | {100*r['useful_ratio']:.0f} | "
+            f"{100*r['roofline_fraction']:.0f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    print(dryrun_table() if which == "dryrun" else roofline_table())

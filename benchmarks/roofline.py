@@ -1,0 +1,133 @@
+"""§Roofline: three-term roofline per (arch x shape) on the single-pod mesh.
+
+Reads the dry-run artifacts (memory + while-aware collective bytes) and the
+compositional cost probes (scan-corrected FLOPs/bytes), then derives:
+
+  compute    = FLOPs / (chips x 197 TFLOP/s bf16)
+  memory     = HLO bytes / (chips x 819 GB/s HBM)
+  collective = collective bytes / (chips x 50 GB/s/link ICI)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (serve) with N = active params, and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs.  All terms are reported in
+seconds per step; the dominant term is the bottleneck the §Perf loop works
+on.  FLOPs/bytes from cost_analysis/probes are per-device; collective bytes
+are per-device as parsed from post-SPMD HLO.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, list_archs
+from repro.launch.shapes import SHAPES, applicable
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+# XLA:CPU HloCostAnalysis counts 1 "flop" per multiply-accumulate; doubling
+# recovers true FLOPs (calibrated on a single unrolled layer vs the analytic
+# count: 2x matches to within 1.3%).
+FMA_FACTOR = 2.0
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts")
+
+
+def _load(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for serving (global).
+    N from the real parameter tree; MoE subtracts inactive routed experts."""
+    from repro.models.params import count_params
+    from repro.models import transformer as _tf
+    cfg = get_config(arch)
+    n = count_params(_tf.model_specs(cfg))
+    if cfg.n_experts:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        inactive = (cfg.n_experts - cfg.experts_per_token) * \
+            3 * cfg.d_model * ff
+        n -= (cfg.num_layers - cfg.first_k_dense) * inactive
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per row
+
+
+def rows(tag: str = "") -> List[Dict]:
+    out = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if not applicable(cfg, SHAPES[shape_name])[0]:
+                continue
+            suffix = f"__{tag}" if tag else ""
+            dry = _load(os.path.join(
+                ART, "dryrun", f"{arch}__{shape_name}__single{suffix}.json"))
+            probe = _load(os.path.join(
+                ART, "costprobe", f"{arch}__{shape_name}{suffix}.json"))
+            if dry is None:
+                continue
+            chips = dry["devices"]
+            # the gradient-accumulation microbatch loop is a lax.scan whose
+            # body XLA's cost analysis counts once — scale train cells by
+            # the accumulation factor (the loop is homogeneous).
+            accum = cfg.train_accum if SHAPES[shape_name].kind == "train" \
+                else 1
+            flops_dev = accum * FMA_FACTOR * (probe or {}).get(
+                "flops_per_device_full", dry["cost"]["flops_per_device"])
+            bytes_dev = accum * (probe or {}).get(
+                "bytes_per_device_full", dry["cost"]["bytes_per_device"])
+            coll_dev = dry["collectives_per_device"]["total"]
+            t_compute = flops_dev / PEAK_FLOPS
+            t_memory = bytes_dev / HBM_BW
+            t_coll = coll_dev / ICI_BW
+            dominant = max(
+                (("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)), key=lambda kv: kv[1])[0]
+            mf = model_flops(arch, shape_name)
+            hlo_flops_global = flops_dev * chips
+            out.append({
+                "arch": arch, "shape": shape_name, "chips": chips,
+                "compute_s": t_compute, "memory_s": t_memory,
+                "collective_s": t_coll, "dominant": dominant,
+                "model_flops": mf,
+                "useful_ratio": mf / hlo_flops_global if hlo_flops_global else 0.0,
+                "roofline_bound_s": max(t_compute, t_memory, t_coll),
+                "roofline_fraction": t_compute / max(t_compute, t_memory,
+                                                     t_coll, 1e-30),
+                "fits_hbm": dry["memory"]["peak_estimate_bytes"] < 16 * 2**30,
+                "temp_gib": dry["memory"]["temp_bytes"] / 2**30,
+                "probe": probe is not None,
+            })
+    return out
+
+
+def main() -> None:
+    table = rows()
+    if not table:
+        print("roofline/missing,0,run launch.dryrun + launch.costprobe first")
+        return
+    for r in table:
+        print(f"roofline/{r['arch']}/{r['shape']},0,"
+              f"compute={r['compute_s']*1e3:.1f}ms;"
+              f"memory={r['memory_s']*1e3:.1f}ms;"
+              f"collective={r['collective_s']*1e3:.1f}ms;"
+              f"dominant={r['dominant']};"
+              f"useful={100*r['useful_ratio']:.0f}%;"
+              f"roofline_frac={100*r['roofline_fraction']:.0f}%;"
+              f"temp={r['temp_gib']:.1f}GiB;fits={int(r['fits_hbm'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measured cell).
+  * fig3   — cost & scheduling duration, 6 policy combos x 3 workloads
+  * fig4   — cost reduction vs. default-K8s static baseline (58 % headline)
+  * table5 — median pending time, RAM/CPU req/cap ratios, pods/node
+  * roofline — three-term roofline per (arch x shape) from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (ablation_schedulers, fig3_cost_duration,
+                            fig4_vs_k8s, roofline, table5_utilization)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    benches = {
+        "fig3": fig3_cost_duration.main,
+        "fig4": fig4_vs_k8s.main,
+        "table5": table5_utilization.main,
+        "ablation": ablation_schedulers.main,
+        "roofline": roofline.main,
+    }
+    for name, fn in benches.items():
+        if only and name != only:
+            continue
+        print(f"# --- {name} ---")
+        fn()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 5: median scheduling time, RAM/CPU request-to-capacity
+ratios, pods per node — per rescheduler x autoscaler combination."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+from repro.core import run_all_combos
+
+
+def run(seeds=(0, 1, 2), workloads=("mixed", "slow", "bursty")) -> List[Dict]:
+    rows = []
+    for wl in workloads:
+        acc: Dict[str, Dict[str, List[float]]] = {}
+        t0 = time.time()
+        for seed in seeds:
+            for r in run_all_combos(wl, seed=seed):
+                d = acc.setdefault(r.combo(), {k: [] for k in
+                                               ("pend", "ram", "cpu", "ppn")})
+                d["pend"].append(r.median_pending_s)
+                d["ram"].append(r.avg_ram_ratio)
+                d["cpu"].append(r.avg_cpu_ratio)
+                d["ppn"].append(r.avg_pods_per_node)
+        elapsed = (time.time() - t0) / max(len(seeds) * 6, 1)
+        for combo, d in acc.items():
+            rows.append({
+                "workload": wl, "combo": combo,
+                "median_pending_s": statistics.fmean(d["pend"]),
+                "ram_ratio": statistics.fmean(d["ram"]),
+                "cpu_ratio": statistics.fmean(d["cpu"]),
+                "pods_per_node": statistics.fmean(d["ppn"]),
+                "us_per_call": elapsed * 1e6,
+            })
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(f"table5/{row['workload']}/{row['combo']},"
+              f"{row['us_per_call']:.0f},"
+              f"pend={row['median_pending_s']:.1f}s;"
+              f"ram={row['ram_ratio']:.2f};cpu={row['cpu_ratio']:.2f};"
+              f"ppn={row['pods_per_node']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

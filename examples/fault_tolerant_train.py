@@ -1,0 +1,74 @@
+"""Fault-tolerant training end to end: the *checkpointable batch job*
+contract that makes the paper's eviction/recreation semantics real.
+
+1. Train; checkpoint every `--checkpoint-every` steps.
+2. A "node failure" kills the trainer mid-run (cooperative preemption from a
+   watchdog thread — the orchestrator's evict signal).
+3. A fresh Trainer (the rescheduled pod on another node) resumes from the
+   last durable step and finishes; loss history is continuous.
+
+Run: ``PYTHONPATH=src python examples/fault_tolerant_train.py``
+"""
+import argparse
+import tempfile
+import threading
+import time
+
+from repro.configs import get_config
+from repro.train.data import DataConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--kill-after-s", type=float, default=3.0)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=True)
+    opt = OptimizerConfig(learning_rate=3e-3, warmup_steps=5,
+                          total_steps=args.steps)
+    data = DataConfig(batch_size=4, seq_len=64)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(total_steps=args.steps,
+                             checkpoint_every=args.checkpoint_every,
+                             checkpoint_dir=ckpt_dir, log_every=10)
+
+        print("== incarnation 1 (will be preempted) ==")
+        t1 = Trainer(cfg, opt, data, tcfg)
+        killer = threading.Timer(args.kill_after_s, t1.request_stop)
+        killer.start()
+        out1 = t1.run()
+        killer.cancel()
+        assert out1["completed"] == 0.0, "expected a preemption"
+        print(f"   preempted at step {t1.step}; durable checkpoint on disk")
+
+        print("== incarnation 2 (rescheduled; resumes) ==")
+        t2 = Trainer(cfg, opt, data, tcfg)
+        assert t2.step > 0, "resume failed"
+        out2 = t2.run()
+        assert out2["completed"] == 1.0 and t2.step == args.steps
+        print(f"   resumed from step {out1['step']:.0f} -> finished "
+              f"{args.steps}; final loss {out2['final_loss']:.3f}")
+
+        # determinism check: the data pipeline is step-keyed, so the resumed
+        # run consumed exactly the batches the preempted run would have.
+        print("== determinism: one uninterrupted run for comparison ==")
+        with tempfile.TemporaryDirectory() as d2:
+            t3 = Trainer(cfg, opt, data,
+                         TrainerConfig(total_steps=args.steps,
+                                       checkpoint_every=0,
+                                       checkpoint_dir=d2, log_every=10))
+            out3 = t3.run()
+        delta = abs(out3["final_loss"] - out2["final_loss"])
+        print(f"   |loss(resumed) - loss(uninterrupted)| = {delta:.4f}")
+        assert delta < 0.05, "resume diverged from the uninterrupted run"
+        print("[fault_tolerant_train] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.cloud.adapter import (CloudAdapter, NodeTemplate, SimCloudProvider,
+                                 M2_SMALL, TPU_V5E_HOST)
+
+__all__ = ["CloudAdapter", "NodeTemplate", "SimCloudProvider", "M2_SMALL",
+           "TPU_V5E_HOST"]

@@ -1,0 +1,10 @@
+"""Assigned architecture registry: importing this package registers all 10
+architectures (plus tiny smoke-test twins) with `repro.configs.base`."""
+
+from repro.configs import (command_r_35b, deepseek_7b, deepseek_moe_16b,
+                           glm4_9b, granite_moe_1b_a400m, internvl2_26b,
+                           qwen15_32b, recurrentgemma_9b, whisper_medium,
+                           xlstm_125m)
+from repro.configs.base import ArchConfig, get_config, list_archs
+
+__all__ = ["ArchConfig", "get_config", "list_archs"]

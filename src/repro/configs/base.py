@@ -1,0 +1,245 @@
+"""Architecture configs: one frozen dataclass per assigned architecture.
+
+Every architecture is expressed as a *layer plan* — a sequence of segments,
+each segment being a (possibly repeated) homogeneous superblock.  Homogeneous
+repeats are executed with ``jax.lax.scan`` over stacked parameters (compile
+time and HBM friendly); heterogeneous patterns (hybrids) scan over a
+superblock of several block types.
+
+Block types (``mixer`` / ``mlp`` pairs):
+  mixer: attn | local_attn | mlstm | slstm | rglru | cross_attn (enc-dec)
+  mlp:   dense | moe | none
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One transformer block inside a superblock."""
+
+    mixer: str = "attn"          # attn|local_attn|mlstm|slstm|rglru
+    mlp: str = "dense"           # dense|moe|none
+    cross_attn: bool = False     # enc-dec decoder blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """``repeats`` × superblock of ``blocks`` (scanned if repeats > 1)."""
+
+    blocks: Tuple[BlockSpec, ...]
+    repeats: int = 1
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.blocks) * self.repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense|moe|ssm|hybrid|audio|vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+
+    # attention options
+    use_rope: bool = True           # False -> sinusoidal absolute positions
+    rope_theta: float = 10_000.0
+    rotary_pct: float = 1.0
+    qkv_bias: bool = False
+    sliding_window: int = 0       # 0 = global attention
+    parallel_block: bool = False  # command-r style parallel attn+mlp
+    attn_logit_softcap: float = 0.0
+
+    # norm / mlp
+    norm_type: str = "rmsnorm"    # rmsnorm|layernorm
+    act: str = "silu"
+    gated_mlp: bool = True
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0
+    dense_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # ssm / hybrid
+    slstm_every: int = 0          # xLSTM: every k-th block is sLSTM
+    proj_factor: float = 2.0      # mLSTM up-projection
+    conv_width: int = 4
+    d_rnn: int = 0                # RG-LRU width (0 -> d_model)
+    rglru_pattern: int = 3        # 2 recurrent + 1 local attn per 3 layers
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500       # precomputed frame embeddings (stub)
+
+    # vlm
+    vision_prefix_len: int = 0    # precomputed patch embeddings (stub)
+
+    # memory shape knobs (0 = off).  attn_chunk: blockwise-softmax attention
+    # over query chunks (XLA-level flash-attention analogue — bounds the
+    # (B,H,Tq,Skv) logits tile).  ce_chunk: fused LM-head + cross-entropy
+    # over sequence chunks (never materializes full (B,T,V) logits).
+    attn_chunk: int = 0
+    ce_chunk: int = 0
+    train_accum: int = 1   # gradient-accumulation microbatches at train_4k
+    # perf knobs (§Perf hillclimbs):
+    gather_dtype: str = ""      # "bfloat16" -> cast stacked layer params
+                                # before the layer scan so FSDP all-gathers
+                                # move half the bytes (masters stay f32)
+    kv_quant: bool = False      # int8 KV cache with per-slot scales
+    pad_heads_to: int = 0       # pad attention heads (activations only) so
+                                # the head dim divides the model axis —
+                                # trades a little attention compute for
+                                # full tensor-parallel attention (qwen: 40->48)
+
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # execution: False -> lax.scan over stacked layers (default); True ->
+    # inlined python loop (used by the compositional roofline probes, where
+    # XLA's cost analysis must see every layer's ops).
+    unroll_layers: bool = False
+
+    # per-arch sharding-rule overrides merged over DEFAULT_RULES, e.g.
+    # xlstm-125m (4 heads, d=768) runs pure-DP: no dim is 16-way
+    # model-shardable, so batch shards over (data, model) instead.
+    rule_overrides: Tuple[Tuple[str, Tuple], ...] = ()
+
+    # provenance
+    source: str = ""
+
+    # ---- derived -------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def layer_plan(self) -> List[Segment]:
+        """Decoder-side segments (encoder handled separately)."""
+        if self.family == "ssm":
+            return self._xlstm_plan()
+        if self.family == "hybrid":
+            return self._rglru_plan()
+        if self.n_experts > 0:
+            return self._moe_plan()
+        blocks = (BlockSpec("attn", "dense", cross_attn=self.is_encoder_decoder),)
+        return [Segment(blocks, repeats=self.num_layers)]
+
+    def encoder_plan(self) -> List[Segment]:
+        assert self.is_encoder_decoder
+        return [Segment((BlockSpec("attn", "dense"),),
+                        repeats=self.encoder_layers)]
+
+    def _moe_plan(self) -> List[Segment]:
+        segs: List[Segment] = []
+        if self.first_k_dense:
+            segs.append(Segment((BlockSpec("attn", "dense"),),
+                                repeats=self.first_k_dense))
+        segs.append(Segment((BlockSpec("attn", "moe"),),
+                            repeats=self.num_layers - self.first_k_dense))
+        return segs
+
+    def _xlstm_plan(self) -> List[Segment]:
+        """Pattern: (slstm_every-1) mLSTM blocks then 1 sLSTM, repeated."""
+        k = self.slstm_every or self.num_layers + 1
+        if self.num_layers % k == 0:
+            blocks = tuple(BlockSpec("mlstm", "none") for _ in range(k - 1)) \
+                     + (BlockSpec("slstm", "none"),)
+            return [Segment(blocks, repeats=self.num_layers // k)]
+        return [Segment((BlockSpec("mlstm", "none"),), repeats=self.num_layers)]
+
+    def _rglru_plan(self) -> List[Segment]:
+        """Griffin residual pattern: 2 recurrent blocks, 1 local-attn block."""
+        period = self.rglru_pattern
+        full, extra = divmod(self.num_layers, period)
+        blocks = tuple(BlockSpec("rglru", "dense") for _ in range(period - 1)) \
+                 + (BlockSpec("local_attn", "dense"),)
+        segs = [Segment(blocks, repeats=full)]
+        if extra:
+            segs.append(Segment(tuple(BlockSpec("rglru", "dense")
+                                      for _ in range(extra)), repeats=1))
+        return segs
+
+    # ---- bookkeeping -----------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.head_dim_
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for seg in (self.layer_plan() +
+                    (self.encoder_plan() if self.is_encoder_decoder else [])):
+            for blk in seg.blocks * seg.repeats:
+                if blk.mixer in ("attn", "local_attn"):
+                    total += d * hd * (n_q + 2 * n_kv) + n_q * hd * d
+                    if blk.cross_attn:
+                        total += d * hd * (n_q + 2 * n_kv) + n_q * hd * d
+                elif blk.mixer == "mlstm":
+                    up = int(d * self.proj_factor)
+                    total += 2 * d * up + 3 * up * up // max(n_q, 1) + up * d
+                elif blk.mixer == "slstm":
+                    total += 4 * d * d + 4 * d * (d // max(n_q, 1)) + d * d
+                elif blk.mixer == "rglru":
+                    rnn = self.d_rnn or d
+                    total += 2 * d * rnn + 2 * rnn * rnn // 8 + rnn * d
+                if blk.mlp == "dense":
+                    ff = self.dense_d_ff or self.d_ff
+                    total += d * ff * (3 if self.gated_mlp else 2)
+                elif blk.mlp == "moe":
+                    ff = self.moe_d_ff or self.d_ff
+                    total += self.n_experts * d * ff * 3 + d * self.n_experts
+                    total += self.n_shared_experts * d * ff * 3
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        ff = self.moe_d_ff or self.d_ff
+        inactive = (self.n_experts - self.experts_per_token) * d * ff * 3
+        moe_layers = self.num_layers - self.first_k_dense
+        return self.param_count() - moe_layers * inactive
+
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+_TINY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig, tiny: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    _TINY[cfg.name] = tiny
+    return cfg
+
+
+def get_config(name: str, *, tiny: bool = False) -> ArchConfig:
+    import repro.configs  # noqa: F401  (triggers per-arch registration)
+    table = _TINY if tiny else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return table[name]
+
+
+def list_archs() -> List[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,48 @@
+"""DeepSeekMoE-16B (fine-grained experts: 2 shared + 64 routed top-6).
+
+[arXiv:2401.06066; hf] — 28L d_model=2048 16H (MHA kv=16) d_ff=1408 (per
+routed expert) vocab=102400.  First layer is dense (intermediate 10944, as in
+the release); remaining 27 layers are MoE with 2 shared experts.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    experts_per_token=6,
+    moe_d_ff=1408,
+    first_k_dense=1,
+    dense_d_ff=10944,
+    rope_theta=10_000.0,
+    attn_chunk=1024,
+    ce_chunk=1024,
+    source="arXiv:2401.06066; hf:deepseek-ai/deepseek-moe-16b-base",
+)
+
+TINY = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=48,
+    vocab_size=512,
+    n_experts=8,
+    n_shared_experts=2,
+    experts_per_token=2,
+    moe_d_ff=48,
+    first_k_dense=1,
+    dense_d_ff=128,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

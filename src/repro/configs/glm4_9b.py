@@ -1,0 +1,39 @@
+"""GLM-4-9B.
+
+[hf:THUDM/glm-4-9b; hf] — 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552.  Partial rotary (50%), QKV bias, RMSNorm, SwiGLU, untied.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="glm4-9b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+    rotary_pct=0.5,
+    qkv_bias=True,
+    rope_theta=10_000.0,
+    attn_chunk=1024,
+    ce_chunk=1024,
+    source="hf:THUDM/glm-4-9b",
+)
+
+TINY = ArchConfig(
+    name="glm4-9b",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    rotary_pct=0.5,
+    qkv_bias=True,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

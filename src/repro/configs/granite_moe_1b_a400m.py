@@ -1,0 +1,44 @@
+"""Granite-3.0-1B-A400M (MoE, 32 experts top-8).
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf] — 24L d_model=1024 16H
+(GQA kv=8) d_ff=512 (per expert) vocab=49155, MoE 32e top-8.
+Tied embeddings (granite micro models), RoPE, RMSNorm, SwiGLU experts.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=32,
+    experts_per_token=8,
+    moe_d_ff=512,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    attn_chunk=1024,
+    ce_chunk=1024,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+TINY = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=32,
+    vocab_size=512,
+    n_experts=8,
+    experts_per_token=2,
+    moe_d_ff=32,
+    tie_embeddings=True,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

@@ -1,0 +1,40 @@
+"""InternVL2-26B backbone (InternViT frontend stubbed to patch embeddings).
+
+[arXiv:2404.16821; hf] — 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553.  The LLM backbone is InternLM2-20B-style (llama-family, RoPE,
+GQA, SwiGLU, RMSNorm); `input_specs()` supplies precomputed ViT patch
+embeddings (B, 1024, d_model) prepended to the token sequence.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    vision_prefix_len=1024,
+    attn_chunk=1024,
+    ce_chunk=1024,
+    train_accum=2,
+    source="arXiv:2404.16821; hf:OpenGVLab/InternVL2-26B",
+)
+
+TINY = ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    vision_prefix_len=8,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

@@ -1,0 +1,52 @@
+"""RecurrentGemma-9B (Griffin: RG-LRU + local attention, 2:1).
+
+[arXiv:2402.19427; unverified] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000.  Pattern: (rglru, rglru, local_attn) × 12 + 2 trailing rglru
+blocks; sliding window 2048; GeGLU MLP; RMSNorm; tied embeddings with
+sqrt(d_model) embedding scale; head_dim 256.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    sliding_window=2048,
+    d_rnn=4096,
+    rglru_pattern=3,
+    conv_width=4,
+    act="gelu_tanh",
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    attn_chunk=1024,
+    ce_chunk=1024,
+    train_accum=2,
+    source="arXiv:2402.19427; hf:google/recurrentgemma-9b",
+)
+
+TINY = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=3,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=128,
+    vocab_size=512,
+    head_dim=16,
+    sliding_window=8,
+    d_rnn=64,
+    rglru_pattern=3,
+    conv_width=4,
+    act="gelu_tanh",
+    tie_embeddings=True,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

@@ -1,0 +1,57 @@
+"""Whisper-medium backbone (conv frontend stubbed to frame embeddings).
+
+[arXiv:2212.04356; unverified] — enc-dec, 24+24L d_model=1024 16H d_ff=4096
+vocab=51865.  LayerNorm + GeLU (non-gated) + biases, sinusoidal positions
+(adaptation note: the decoder's learned positions are replaced by sinusoidal
+so the assigned 32k-decode shape needs no 32k-entry learned table), tied
+decoder embedding/output head.  ``input_specs()`` supplies post-conv frame
+embeddings (B, 1500, d_model).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_layers=24,
+    encoder_seq=1500,
+    use_rope=False,
+    norm_type="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    mlp_bias=True,
+    qkv_bias=True,
+    tie_embeddings=True,
+    attn_chunk=1024,
+    source="arXiv:2212.04356; hf:openai/whisper-medium",
+)
+
+TINY = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    is_encoder_decoder=True,
+    encoder_layers=2,
+    encoder_seq=16,
+    use_rope=False,
+    norm_type="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    mlp_bias=True,
+    qkv_bias=True,
+    tie_embeddings=True,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

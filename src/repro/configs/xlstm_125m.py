@@ -1,0 +1,49 @@
+"""xLSTM-125M (sLSTM + mLSTM blocks).
+
+[arXiv:2405.04517; unverified] — 12L d_model=768 4H d_ff=0 vocab=50304.
+d_ff = 0: xLSTM blocks carry their own up/down projections (mLSTM proj
+factor 2); no separate FFN.  Every 4th block is an sLSTM (a 3:1 mix in the
+spirit of the paper's xLSTM[7:1] notation), the rest are mLSTM.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=4,
+    proj_factor=2.0,
+    conv_width=4,
+    # 125M params / 4 heads: nothing is 16-way tensor-shardable, so the
+    # production layout is pure data parallelism over every mesh axis
+    # (weights replicated across `model`; grads all-reduced across it).
+    rule_overrides=(
+        ("act_batch", (("pod", "data", "model"), ("data", "model"),
+                       ("pod", "data"), ("data",))),
+        ("act_seq", ()), ("act_rnn", ()), ("act_heads", ()),
+        ("rnn", ()), ("heads", ()),
+    ),
+    source="arXiv:2405.04517",
+)
+
+TINY = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=512,
+    slstm_every=4,
+    proj_factor=2.0,
+    conv_width=4,
+    source="tiny twin",
+)
+
+register(CONFIG, TINY)

@@ -1,0 +1,39 @@
+"""The paper's contribution: cost-efficient scheduling, rescheduling and
+autoscaling for container/job orchestration (Rodriguez & Buyya, 2018)."""
+
+from repro.core.autoscaler import (AUTOSCALERS, Autoscaler, BindingAutoscaler,
+                                   NodeProvider, SimpleAutoscaler,
+                                   VoidAutoscaler)
+from repro.core.cluster import Cluster, Node, NodeState
+from repro.core.cost import CostModel
+from repro.core.experiment import (ExperimentSpec, build_simulation,
+                                   run_all_combos, run_experiment,
+                                   run_k8s_baseline)
+from repro.core.metrics import ExperimentResult, MetricsCollector
+from repro.core.orchestrator import Orchestrator
+from repro.core.pods import Pod, PodKind, PodPhase, PodSpec
+from repro.core.rescheduler import (RESCHEDULERS, BindingRescheduler,
+                                    NonBindingRescheduler, Rescheduler,
+                                    VoidRescheduler)
+from repro.core.resources import Resources, gi
+from repro.core.scheduler import (SCHEDULERS, BestFitBinPackingScheduler,
+                                  FirstFitScheduler,
+                                  KubernetesDefaultScheduler, Scheduler,
+                                  WorstFitScheduler)
+from repro.core.simulation import SimConfig, Simulation
+from repro.core.workload import (JOB_TYPES, WORKLOAD_MIXES, Arrival,
+                                 generate_workload, make_fleet_job_types)
+
+__all__ = [
+    "AUTOSCALERS", "Autoscaler", "BindingAutoscaler", "NodeProvider",
+    "SimpleAutoscaler", "VoidAutoscaler", "Cluster", "Node", "NodeState",
+    "CostModel", "ExperimentSpec", "build_simulation", "run_all_combos",
+    "run_experiment", "run_k8s_baseline", "ExperimentResult",
+    "MetricsCollector", "Orchestrator", "Pod", "PodKind", "PodPhase",
+    "PodSpec", "RESCHEDULERS", "BindingRescheduler", "NonBindingRescheduler",
+    "Rescheduler", "VoidRescheduler", "Resources", "gi", "SCHEDULERS",
+    "BestFitBinPackingScheduler", "FirstFitScheduler",
+    "KubernetesDefaultScheduler", "Scheduler", "WorstFitScheduler",
+    "SimConfig", "Simulation", "JOB_TYPES", "WORKLOAD_MIXES", "Arrival",
+    "generate_workload", "make_fleet_job_types",
+]

@@ -1,0 +1,197 @@
+"""Autoscalers (paper §6.3, Algorithms 5, 6, 7).
+
+Scale-out policies:
+
+* **Void** — ignore scale requests (static cluster).
+* **Simple / non-binding (NBAS, Alg. 5)** — launch at most one instance per
+  ``provisioning_interval`` (set to the provisioning delay + contingency).
+* **Binding (BAS, Alg. 7)** — track pod↔provisioning-node associations: a pod
+  already assigned to a booting node never triggers another launch, and a
+  booting node with spare planned room absorbs further unschedulable pods.
+
+Scale-in (Alg. 6) is shared by both active autoscalers and runs only after a
+fully successful scheduling cycle:
+
+1. terminate empty dynamically-created nodes;
+2. drain nodes whose pods are all moveable *and* all placeable elsewhere;
+3. for mixed moveable+batch nodes whose moveables are placeable elsewhere,
+   evict the moveables and **taint** the node so it drains as batch completes.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Cluster, Node, NodeState
+from repro.core.pods import Pod
+from repro.core.rescheduler import _ShadowCapacity
+from repro.core.resources import Resources
+
+
+class NodeProvider(abc.ABC):
+    """What the autoscaler needs from the cloud adapter (repro.cloud)."""
+
+    @abc.abstractmethod
+    def launch_node(self, now: float) -> Node:
+        """Request a new worker; returns it in PROVISIONING state."""
+
+    @abc.abstractmethod
+    def terminate_node(self, node: Node, now: float) -> None:
+        """Deprovision (stops billing)."""
+
+
+class Autoscaler(abc.ABC):
+    name = "autoscaler"
+
+    def __init__(self, provider: NodeProvider):
+        self.provider = provider
+
+    @abc.abstractmethod
+    def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
+        """Called per unschedulable pod after rescheduling failed."""
+
+    def scale_in(self, cluster: Cluster, now: float) -> List[str]:
+        """Alg. 6; returns ids of nodes terminated or tainted (for logs)."""
+        return []
+
+    def notify_node_ready(self, node: Node) -> None:
+        """Provider callback once a node joins the cluster."""
+
+    # -- shared Alg. 6 body ----------------------------------------------------
+    def _scale_in_impl(self, cluster: Cluster, now: float) -> List[str]:
+        touched: List[str] = []
+
+        # 1. Shut down empty dynamically-created nodes (READY or TAINTED).
+        for node in list(cluster.nodes.values()):
+            if (node.autoscaled and not node.pods
+                    and node.state in (NodeState.READY, NodeState.TAINTED)):
+                self.provider.terminate_node(node, now)
+                cluster.remove_node(node, now)
+                touched.append(node.node_id)
+
+        # 2./3. Consolidate moveable pods off candidate nodes.
+        for node in list(cluster.nodes.values()):
+            if not node.autoscaled or node.state != NodeState.READY:
+                continue
+            if node.has_only_moveable():
+                if self._all_placeable(cluster, node, node.moveable_pods()):
+                    for pod in list(node.pods.values()):
+                        cluster.unbind(pod, now)   # recreated -> next cycle
+                    self.provider.terminate_node(node, now)
+                    cluster.remove_node(node, now)
+                    touched.append(node.node_id)
+            elif node.has_moveable_and_batch():
+                movers = node.moveable_pods()
+                if movers and self._all_placeable(cluster, node, movers):
+                    for pod in movers:
+                        cluster.unbind(pod, now)
+                    node.taint()                    # drains as batch completes
+                    touched.append(node.node_id)
+        return touched
+
+    @staticmethod
+    def _all_placeable(cluster: Cluster, exclude: Node, pods: List[Pod]) -> bool:
+        """True iff *all* of `pods` fit on other nodes (shadow accounting)."""
+        shadow = _ShadowCapacity(cluster, exclude=exclude)
+        ordered = sorted(pods, key=lambda p: (p.requests.mem_mb, p.uid),
+                         reverse=True)
+        return all(shadow.place_best_fit(p.requests) is not None
+                   for p in ordered)
+
+
+class VoidAutoscaler(Autoscaler):
+    """Paper: ignores scale-out and scale-in — a fixed-size cluster."""
+
+    name = "void"
+
+    def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
+        return
+
+    def scale_in(self, cluster: Cluster, now: float) -> List[str]:
+        return []
+
+
+class SimpleAutoscaler(Autoscaler):
+    """Paper Alg. 5 (+6) — the *non-binding* autoscaler (NBAS)."""
+
+    name = "non-binding"
+
+    def __init__(self, provider: NodeProvider, provisioning_interval_s: float = 60.0):
+        super().__init__(provider)
+        self.provisioning_interval_s = provisioning_interval_s
+        self._last_launch: Optional[float] = None
+
+    def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
+        if (self._last_launch is None
+                or now - self._last_launch >= self.provisioning_interval_s):
+            node = self.provider.launch_node(now)
+            cluster.add_node(node)
+            self._last_launch = now
+        # else: ignore the scale-out request (rate limited)
+
+    def scale_in(self, cluster: Cluster, now: float) -> List[str]:
+        return self._scale_in_impl(cluster, now)
+
+
+@dataclasses.dataclass
+class _ProvisioningTracker:
+    node: Node
+    assigned: Dict[int, Resources]    # pod uid -> its planned requests
+
+    @property
+    def planned_free(self) -> Resources:
+        free = self.node.allocatable
+        for req in self.assigned.values():
+            free = free - req
+        return free
+
+
+class BindingAutoscaler(Autoscaler):
+    """Paper Alg. 7 (+6) — the *binding* autoscaler (BAS).
+
+    Keeps the pod↔booting-node association so that one unschedulable pod
+    triggers at most one launch, and booting capacity is packed before any
+    further launch (the mechanism behind the paper's lowest-cost results).
+    """
+
+    name = "binding"
+
+    def __init__(self, provider: NodeProvider):
+        super().__init__(provider)
+        self._tracked: Dict[str, _ProvisioningTracker] = {}
+        self._pod_to_node: Dict[int, str] = {}
+
+    def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
+        if pod.uid in self._pod_to_node:
+            return  # already associated with a booting node — ignore
+        # Is there still room in one of the nodes being provisioned?
+        for tracker in sorted(self._tracked.values(),
+                              key=lambda t: t.node.node_id):
+            if pod.requests.fits_in(tracker.planned_free):
+                tracker.assigned[pod.uid] = pod.requests
+                self._pod_to_node[pod.uid] = tracker.node.node_id
+                return
+        # Launch a new node and assign the pod to it.
+        node = self.provider.launch_node(now)
+        cluster.add_node(node)
+        self._tracked[node.node_id] = _ProvisioningTracker(
+            node=node, assigned={pod.uid: pod.requests})
+        self._pod_to_node[pod.uid] = node.node_id
+
+    def notify_node_ready(self, node: Node) -> None:
+        tracker = self._tracked.pop(node.node_id, None)
+        if tracker is None:
+            return
+        for uid in tracker.assigned:
+            self._pod_to_node.pop(uid, None)
+        # The scheduler (not the autoscaler) places pods on the new node.
+
+    def scale_in(self, cluster: Cluster, now: float) -> List[str]:
+        return self._scale_in_impl(cluster, now)
+
+
+AUTOSCALERS = {
+    cls.name: cls
+    for cls in (VoidAutoscaler, SimpleAutoscaler, BindingAutoscaler)
+}

@@ -1,0 +1,186 @@
+"""Cluster + node state model (paper §4).
+
+Nodes move through a small state machine::
+
+    PROVISIONING --ready--> READY --taint--> TAINTED --untaint--> READY
+          \\                                   |
+           \\--------------- terminate --------+--> TERMINATED
+
+``TAINTED`` mirrors the paper's *taint as unschedulable* (Alg. 6 step 3):
+schedulers avoid tainted nodes unless no untainted node fits.
+
+Capacity accounting is *request-based*, exactly like the default Kubernetes
+scheduler (§4.1): the sum of requests of pods bound to a node never exceeds
+its allocatable capacity, regardless of actual usage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.pods import Pod
+from repro.core.resources import Resources, sum_resources
+
+
+class NodeState(enum.Enum):
+    PROVISIONING = "provisioning"   # VM requested, not yet joined the cluster
+    READY = "ready"
+    TAINTED = "tainted"             # schedulable only as a last resort
+    TERMINATED = "terminated"
+
+
+_node_seq = itertools.count()
+
+
+@dataclasses.dataclass
+class Node:
+    """One worker (paper: m2.small VM; fleet: one TPU v5e host)."""
+
+    allocatable: Resources
+    node_type: str = "worker"
+    autoscaled: bool = False            # created dynamically (Alg. 6 precondition)
+    node_id: str = ""
+    state: NodeState = NodeState.PROVISIONING
+    provision_time: float = 0.0         # when the provider was asked for it
+    ready_time: Optional[float] = None  # when it joined the cluster
+    terminate_time: Optional[float] = None
+    pods: Dict[int, Pod] = dataclasses.field(default_factory=dict)
+    # Fleet extensions.
+    speed_factor: float = 1.0           # <1.0 models a straggler node
+    failed: bool = False
+    oversub: bool = False               # request-sum may exceed allocatable
+
+    def __post_init__(self):
+        if not self.node_id:
+            self.node_id = f"node-{next(_node_seq)}"
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def used(self) -> Resources:
+        return sum_resources(p.requests for p in self.pods.values())
+
+    @property
+    def free(self) -> Resources:
+        return self.allocatable - self.used
+
+    def fits(self, req: Resources) -> bool:
+        return req.fits_in(self.free)
+
+    # -- queries used by the paper's algorithms ------------------------------
+    @property
+    def schedulable(self) -> bool:
+        return self.state == NodeState.READY
+
+    @property
+    def last_resort(self) -> bool:
+        return self.state == NodeState.TAINTED
+
+    def moveable_pods(self) -> List[Pod]:
+        return [p for p in self.pods.values() if p.moveable]
+
+    def has_only_moveable(self) -> bool:
+        return bool(self.pods) and all(p.moveable for p in self.pods.values())
+
+    def has_moveable_and_batch(self) -> bool:
+        pods = list(self.pods.values())
+        return (any(p.moveable for p in pods)
+                and any(p.is_batch for p in pods)
+                and all(p.moveable or p.is_batch for p in pods))
+
+    # -- lifecycle -----------------------------------------------------------
+    def mark_ready(self, now: float) -> None:
+        assert self.state == NodeState.PROVISIONING
+        self.state = NodeState.READY
+        self.ready_time = now
+
+    def taint(self) -> None:
+        if self.state == NodeState.READY:
+            self.state = NodeState.TAINTED
+
+    def untaint(self) -> None:
+        if self.state == NodeState.TAINTED:
+            self.state = NodeState.READY
+
+    def terminate(self, now: float) -> None:
+        assert not self.pods, f"terminating non-empty node {self.node_id}"
+        self.state = NodeState.TERMINATED
+        self.terminate_time = now
+
+    # -- bindings ------------------------------------------------------------
+    def add_pod(self, pod: Pod) -> None:
+        assert pod.requests.fits_in(self.free), (
+            f"overcommit on {self.node_id}: {pod} does not fit {self.free}")
+        self.pods[pod.uid] = pod
+
+    def remove_pod(self, pod: Pod) -> None:
+        del self.pods[pod.uid]
+
+    def __repr__(self):
+        return (f"Node({self.node_id}, {self.state.value}, "
+                f"pods={len(self.pods)}, free={self.free})")
+
+
+class Cluster:
+    """The live cluster: the single source of truth (paper: etcd)."""
+
+    def __init__(self):
+        self.nodes: Dict[str, Node] = {}
+        self.terminated: List[Node] = []    # kept for cost accounting
+
+    # -- membership ----------------------------------------------------------
+    def add_node(self, node: Node) -> Node:
+        self.nodes[node.node_id] = node
+        return node
+
+    def remove_node(self, node: Node, now: float) -> None:
+        node.terminate(now)
+        self.terminated.append(node)
+        del self.nodes[node.node_id]
+
+    def get(self, node_id: str) -> Node:
+        return self.nodes[node_id]
+
+    # -- views ---------------------------------------------------------------
+    def ready_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.state == NodeState.READY]
+
+    def tainted_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.state == NodeState.TAINTED]
+
+    def schedulable_nodes(self) -> List[Node]:
+        """READY nodes; the scheduler falls back to TAINTED separately."""
+        return self.ready_nodes()
+
+    def provisioning_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values()
+                if n.state == NodeState.PROVISIONING]
+
+    def all_pods(self) -> List[Pod]:
+        return [p for n in self.nodes.values() for p in n.pods.values()]
+
+    def node_of(self, pod: Pod) -> Optional[Node]:
+        return self.nodes.get(pod.node_id) if pod.node_id else None
+
+    # -- bindings (paper §4.2 createBinding) ----------------------------------
+    def bind(self, pod: Pod, node: Node, now: float) -> None:
+        node.add_pod(pod)
+        pod.bind(node.node_id, now)
+
+    def unbind(self, pod: Pod, now: float, *, failed: bool = False) -> None:
+        node = self.node_of(pod)
+        if node is not None:
+            node.remove_pod(pod)
+        pod.evict(now, failed=failed)
+
+    # -- invariant (property-tested) ------------------------------------------
+    def check_invariants(self) -> None:
+        for n in self.nodes.values():
+            if n.oversub:
+                continue   # estimator-driven oversubscription is intentional
+            used = n.used
+            assert used.cpu_m <= n.allocatable.cpu_m, n
+            assert used.mem_mb <= n.allocatable.mem_mb + 1e-6, n
+            for p in n.pods.values():
+                assert p.node_id == n.node_id, (p, n)

@@ -1,0 +1,78 @@
+"""Billing model (paper §7.1).
+
+Per-second billing at $0.011 per worker (Azure B2S-derived), partial seconds
+rounded **up**.  A dynamically-created node is billed from the moment the
+provisioning request is placed until the deprovisioning request; static nodes
+are billed for the whole scheduling duration of the workload.
+
+The fleet adaptation uses the identical model with a per-node-type price table
+(heterogeneous node types are a paper-§8 extension, off by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Node
+
+DEFAULT_PRICE_PER_S = 0.011
+
+
+@dataclasses.dataclass
+class BillingRecord:
+    node_id: str
+    node_type: str
+    start: float
+    end: Optional[float] = None   # None -> still running
+
+    def seconds(self, now: float) -> int:
+        end = self.end if self.end is not None else now
+        return int(math.ceil(max(0.0, end - self.start)))
+
+
+class CostModel:
+    """Tracks provision/deprovision events and prices node-seconds."""
+
+    def __init__(self, price_per_s: float = DEFAULT_PRICE_PER_S,
+                 price_table: Optional[Dict[str, float]] = None):
+        self.price_per_s = price_per_s
+        self.price_table = price_table or {}
+        self.records: Dict[str, BillingRecord] = {}
+        self.closed: List[BillingRecord] = []
+
+    def price_of(self, node_type: str) -> float:
+        return self.price_table.get(node_type, self.price_per_s)
+
+    # -- events ---------------------------------------------------------------
+    def on_provision(self, node: Node, now: float) -> None:
+        assert node.node_id not in self.records, node.node_id
+        self.records[node.node_id] = BillingRecord(
+            node_id=node.node_id, node_type=node.node_type, start=now)
+
+    def on_deprovision(self, node: Node, now: float) -> None:
+        rec = self.records.pop(node.node_id)
+        rec.end = now
+        self.closed.append(rec)
+
+    def close_all(self, now: float) -> None:
+        """End of experiment: static/running nodes stop billing now."""
+        for rec in list(self.records.values()):
+            rec.end = now
+            self.closed.append(rec)
+        self.records.clear()
+
+    # -- queries ---------------------------------------------------------------
+    def total_cost(self, now: Optional[float] = None) -> float:
+        now = now if now is not None else 0.0
+        total = 0.0
+        for rec in self.closed:
+            total += rec.seconds(now) * self.price_of(rec.node_type)
+        for rec in self.records.values():
+            total += rec.seconds(now) * self.price_of(rec.node_type)
+        return total
+
+    def total_node_seconds(self, now: Optional[float] = None) -> int:
+        now = now if now is not None else 0.0
+        return (sum(r.seconds(now) for r in self.closed)
+                + sum(r.seconds(now) for r in self.records.values()))

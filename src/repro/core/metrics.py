@@ -1,0 +1,106 @@
+"""Experiment metrics (paper §7.2, Table 5 + Fig. 3/4 quantities).
+
+* **cost** — from `CostModel` (per-second billing).
+* **scheduling duration** — first job submitted → last batch job completed.
+* **median scheduling time** — median of per-pod pending intervals.
+* **RAM / CPU req/cap ratios** — sampled every 20 s over cluster nodes, then
+  time-averaged (paper's Table 5 definition).
+* **pods per node** — same sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Cluster, NodeState
+
+SAMPLE_PERIOD_S = 20.0
+
+
+@dataclasses.dataclass
+class Sample:
+    time: float
+    n_nodes: int
+    ram_ratio: float
+    cpu_ratio: float
+    pods_per_node: float
+
+
+class MetricsCollector:
+    def __init__(self):
+        self.samples: List[Sample] = []
+        self.pending_intervals: List[float] = []
+        self.node_count_series: List[tuple] = []
+
+    def sample(self, cluster: Cluster, now: float) -> None:
+        nodes = [n for n in cluster.nodes.values()
+                 if n.state in (NodeState.READY, NodeState.TAINTED)]
+        if not nodes:
+            self.samples.append(Sample(now, 0, 0.0, 0.0, 0.0))
+            return
+        ram = statistics.fmean(
+            n.used.mem_mb / n.allocatable.mem_mb for n in nodes)
+        cpu = statistics.fmean(
+            n.used.cpu_m / max(n.allocatable.cpu_m, 1) for n in nodes)
+        ppn = statistics.fmean(len(n.pods) for n in nodes)
+        self.samples.append(Sample(now, len(nodes), ram, cpu, ppn))
+        self.node_count_series.append((now, len(cluster.nodes)))
+
+    def record_pending_interval(self, seconds: float) -> None:
+        self.pending_intervals.append(seconds)
+
+    # -- aggregates -------------------------------------------------------------
+    def median_pending_s(self) -> float:
+        return statistics.median(self.pending_intervals) if self.pending_intervals else 0.0
+
+    def max_pending_s(self) -> float:
+        return max(self.pending_intervals) if self.pending_intervals else 0.0
+
+    def avg_ram_ratio(self) -> float:
+        xs = [s.ram_ratio for s in self.samples if s.n_nodes > 0]
+        return statistics.fmean(xs) if xs else 0.0
+
+    def avg_cpu_ratio(self) -> float:
+        xs = [s.cpu_ratio for s in self.samples if s.n_nodes > 0]
+        return statistics.fmean(xs) if xs else 0.0
+
+    def avg_pods_per_node(self) -> float:
+        xs = [s.pods_per_node for s in self.samples if s.n_nodes > 0]
+        return statistics.fmean(xs) if xs else 0.0
+
+    def max_nodes(self) -> int:
+        return max((s.n_nodes for s in self.samples), default=0)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """One row of Fig. 3 / Table 5."""
+
+    workload: str
+    scheduler: str
+    rescheduler: str
+    autoscaler: str
+    completed: bool
+    cost: float
+    duration_s: float
+    median_pending_s: float
+    max_pending_s: float
+    avg_ram_ratio: float
+    avg_cpu_ratio: float
+    avg_pods_per_node: float
+    max_nodes: int
+    node_seconds: int
+    evictions: int = 0
+    scale_outs: int = 0
+    scale_ins: int = 0
+    failures_injected: int = 0
+
+    def combo(self) -> str:
+        abbrev = {"void": "VR", "non-binding": "NBR", "binding": "BR"}
+        as_abbrev = {"void": "VAS", "non-binding": "NBAS", "binding": "BAS"}
+        return f"{abbrev.get(self.rescheduler, self.rescheduler)}-" \
+               f"{as_abbrev.get(self.autoscaler, self.autoscaler)}"
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)

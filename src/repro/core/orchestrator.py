@@ -1,0 +1,127 @@
+"""The control loop (paper §4.2, Algorithm 1).
+
+::
+
+    while the scheduler exit condition is not satisfied
+        get all pending tasks
+        for each pending task t
+            schedule t
+            if t cannot be placed
+                reschedule
+                if rescheduling failed
+                    scale out
+        scale in
+
+Semantics matched to the paper:
+
+* a successful **non-binding** reschedule leaves the evictees *and* the
+  triggering pod in the queue for the *next* cycle — so that cycle is not
+  "fully successful" and scale-in is skipped;
+* **scale-in runs only when every pending pod of the cycle was placed**;
+* pods created by evictions during a cycle wait until the next cycle
+  (we iterate over a snapshot of the queue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+from repro.core.autoscaler import Autoscaler
+from repro.core.cluster import Cluster
+from repro.core.pods import Pod, PodPhase
+from repro.core.rescheduler import Rescheduler, RescheduleOutcome
+from repro.core.scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class CycleStats:
+    placed: int = 0
+    unschedulable: int = 0
+    rescheduled: int = 0
+    scale_out_requests: int = 0
+    scale_ins: int = 0
+    all_placed: bool = True
+
+
+class Orchestrator:
+    """Glues scheduler + rescheduler + autoscaler over one cluster."""
+
+    def __init__(self, cluster: Cluster, scheduler: Scheduler,
+                 rescheduler: Rescheduler, autoscaler: Autoscaler,
+                 straggler_threshold: float = 0.0,
+                 on_evict: Optional[Callable[[Pod, float], None]] = None):
+        self.cluster = cluster
+        self.scheduler = scheduler
+        self.rescheduler = rescheduler
+        self.autoscaler = autoscaler
+        self.pods: List[Pod] = []          # every pod ever submitted
+        self.total_evictions = 0
+        self.total_scale_outs = 0
+        self.total_scale_ins = 0
+        # Fleet extension: evict checkpointable batch pods running on nodes
+        # slower than `straggler_threshold` × nominal speed (0 disables).
+        self.straggler_threshold = straggler_threshold
+        self.on_evict = on_evict
+
+    # -- queue ------------------------------------------------------------------
+    def submit(self, pod: Pod) -> None:
+        self.pods.append(pod)
+
+    def pending_pods(self) -> List[Pod]:
+        return sorted((p for p in self.pods if p.phase == PodPhase.PENDING),
+                      key=lambda p: (p.pending_since, p.uid))
+
+    def running_pods(self) -> List[Pod]:
+        return [p for p in self.pods if p.phase == PodPhase.BOUND]
+
+    def batch_all_done(self) -> bool:
+        return all(p.phase == PodPhase.SUCCEEDED
+                   for p in self.pods if p.is_batch)
+
+    # -- Algorithm 1 --------------------------------------------------------------
+    def cycle(self, now: float) -> CycleStats:
+        stats = CycleStats()
+        if self.straggler_threshold > 0:
+            self._mitigate_stragglers(now)
+        snapshot = self.pending_pods()
+        for pod in snapshot:
+            if pod.phase != PodPhase.PENDING:
+                continue   # a binding rescheduler may have placed it already
+            if self.scheduler.schedule(self.cluster, pod, now):
+                stats.placed += 1
+                continue
+            stats.unschedulable += 1
+            stats.all_placed = False
+            outcome = self.rescheduler.reschedule(self.cluster, pod, now)
+            if outcome == RescheduleOutcome.WAIT:
+                continue   # age gate: suppress autoscaling for this pod too
+            if outcome == RescheduleOutcome.RESCHEDULED:
+                stats.rescheduled += 1
+                # Binding rescheduler may have bound the pod itself.
+                if pod.phase != PodPhase.PENDING:
+                    stats.placed += 1
+                    stats.unschedulable -= 1
+                continue
+            stats.scale_out_requests += 1
+            self.total_scale_outs += 1
+            self.autoscaler.scale_out(self.cluster, pod, now)
+        if stats.all_placed:
+            removed = self.autoscaler.scale_in(self.cluster, now)
+            stats.scale_ins = len(removed)
+            self.total_scale_ins += len(removed)
+        self.cluster.check_invariants()
+        return stats
+
+    # -- fleet extension: straggler mitigation -----------------------------------
+    def _mitigate_stragglers(self, now: float) -> None:
+        for pod in self.running_pods():
+            if not (pod.is_batch and pod.spec.checkpointable):
+                continue
+            node = self.cluster.node_of(pod)
+            if node is None or node.speed_factor >= self.straggler_threshold:
+                continue
+            if self.on_evict:
+                self.on_evict(pod, now)
+            self.cluster.unbind(pod, now)   # checkpoint + requeue elsewhere
+            node.taint()                    # cordon the straggler
+            self.total_evictions += 1

@@ -1,0 +1,160 @@
+"""Pod / job object model (paper §3, §5.1).
+
+A *pod* is the schedulable unit.  The paper distinguishes:
+
+* **services** — long-running, latency-sensitive (K8s ``Deployment``), may be
+  labelled ``rescheduling: moveable``;
+* **batch jobs** — run-to-completion (K8s ``Job``), labelled ``type: batch``,
+  never moveable.
+
+In the TPU-fleet adaptation a service pod is a serving deployment and a batch
+pod is a training job; *moveable* means *checkpointable* (the eviction →
+recreate cycle becomes checkpoint → restore, see ``repro.train.checkpoint``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Optional
+
+from repro.core.resources import Resources
+
+
+class PodKind(enum.Enum):
+    SERVICE = "service"   # long-running (K8s Deployment / serving job)
+    BATCH = "batch"       # run-to-completion (K8s Job / training job)
+
+
+class PodPhase(enum.Enum):
+    PENDING = "pending"       # in the scheduling queue
+    BOUND = "bound"           # binding created; starts running at bind time
+    SUCCEEDED = "succeeded"   # batch only: ran to completion
+    EVICTED = "evicted"       # shut down for rescheduling; will be recreated
+    FAILED = "failed"         # node failure killed it; will be recreated
+
+
+_uid = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSpec:
+    """Immutable template for a pod (the YAML of Fig. 3/4 in the paper)."""
+
+    type_name: str                 # e.g. "batch_small", "service_med"
+    kind: PodKind
+    requests: Resources            # requests == limits (guaranteed QoS class)
+    duration_s: float = 0.0        # batch only: nominal runtime
+    moveable: bool = False         # services only (label rescheduling:moveable)
+    # Fleet extension: moveable batch jobs are checkpointable training jobs.
+    checkpointable: bool = False
+    checkpoint_interval_s: float = 0.0
+    scheduler_name: str = "customScheduler"
+
+    def __post_init__(self):
+        if self.kind == PodKind.BATCH and self.moveable:
+            raise ValueError("paper §5.1: batch jobs cannot be moveable")
+
+
+@dataclasses.dataclass
+class Pod:
+    """A live pod instance.
+
+    A pod evicted by the rescheduler/autoscaler is *recreated*: in Kubernetes
+    the deployment controller spawns a fresh pod for the same template.  We
+    model that by resetting the instance back to PENDING with a fresh
+    ``pending_since`` and an incremented ``incarnation`` — identity (``uid``)
+    is stable across incarnations so metrics can track the logical task.
+    """
+
+    spec: PodSpec
+    submit_time: float
+    uid: int = dataclasses.field(default_factory=lambda: next(_uid))
+    phase: PodPhase = PodPhase.PENDING
+    node_id: Optional[str] = None
+    pending_since: float = 0.0       # start of the *current* pending interval
+    bound_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    incarnation: int = 0
+    progress_s: float = 0.0          # batch: completed work (checkpoint restore)
+    checkpointed_s: float = 0.0      # batch: durable progress at last checkpoint
+    pending_intervals: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.pending_since = self.submit_time
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return f"{self.spec.type_name}-{self.uid}"
+
+    @property
+    def requests(self) -> Resources:
+        return self.spec.requests
+
+    @property
+    def is_batch(self) -> bool:
+        return self.spec.kind == PodKind.BATCH
+
+    @property
+    def is_service(self) -> bool:
+        return self.spec.kind == PodKind.SERVICE
+
+    @property
+    def moveable(self) -> bool:
+        return self.spec.moveable
+
+    def age(self, now: float) -> float:
+        """Time spent in the current pending interval (rescheduler gate)."""
+        return now - self.pending_since
+
+    def remaining_s(self, now: float) -> float:
+        """Batch only: work left, given progress at the current binding."""
+        assert self.is_batch and self.bound_time is not None
+        done_before = self.progress_s
+        return max(0.0, self.spec.duration_s - done_before - (now - self.bound_time))
+
+    # -- lifecycle -----------------------------------------------------------
+    def bind(self, node_id: str, now: float) -> None:
+        assert self.phase == PodPhase.PENDING, self
+        self.pending_intervals.append(now - self.pending_since)
+        self.phase = PodPhase.BOUND
+        self.node_id = node_id
+        self.bound_time = now
+
+    def evict(self, now: float, *, failed: bool = False) -> None:
+        """Shut down and immediately recreate as a fresh PENDING incarnation."""
+        assert self.phase == PodPhase.BOUND, self
+        if self.is_batch:
+            ran = now - (self.bound_time or now)
+            if self.spec.checkpointable:
+                # Durable progress = last checkpoint boundary (fleet semantics).
+                iv = self.spec.checkpoint_interval_s or 1.0
+                total = self.progress_s + ran
+                self.checkpointed_s = (total // iv) * iv
+                self.progress_s = self.checkpointed_s
+            elif failed:
+                self.progress_s = 0.0     # restart from scratch
+            # moveable batch pods do not exist (guarded in PodSpec)
+        self.phase = PodPhase.FAILED if failed else PodPhase.EVICTED
+        self.node_id = None
+        self.bound_time = None
+        # recreate
+        self.phase = PodPhase.PENDING
+        self.pending_since = now
+        self.incarnation += 1
+
+    def complete(self, now: float) -> None:
+        assert self.is_batch and self.phase == PodPhase.BOUND
+        self.phase = PodPhase.SUCCEEDED
+        self.finish_time = now
+
+    def __hash__(self):
+        return hash(self.uid)
+
+    def __eq__(self, other):
+        return isinstance(other, Pod) and other.uid == self.uid
+
+    def __repr__(self):
+        return (f"Pod({self.name}, {self.phase.value}, node={self.node_id}, "
+                f"inc={self.incarnation})")

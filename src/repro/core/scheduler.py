@@ -1,0 +1,115 @@
+"""Schedulers (paper §6.1 + the default-K8s baseline used in Fig. 4).
+
+All schedulers implement the same two-stage shape Kubernetes uses:
+*filter* (feasibility) then *select* (scoring).  The paper's contribution is
+the selection rule; filtering is request-based feasibility on both axes.
+
+Tainted nodes (Alg. 6 step 3) are used **only as a last resort**: the filter
+first considers READY nodes and falls back to TAINTED nodes only when no
+untainted node fits.
+"""
+from __future__ import annotations
+
+import abc
+from typing import List, Optional
+
+from repro.core.cluster import Cluster, Node
+from repro.core.pods import Pod
+
+
+class Scheduler(abc.ABC):
+    """Base scheduler: filter feasible nodes, pick one, create the binding."""
+
+    name = "scheduler"
+
+    def suitable_nodes(self, cluster: Cluster, pod: Pod) -> List[Node]:
+        """getAllSuitableNodes(p): feasible READY nodes, else TAINTED ones."""
+        ready = [n for n in cluster.ready_nodes() if n.fits(pod.requests)]
+        if ready:
+            return ready
+        # Last resort: tainted nodes (paper: "unless strictly necessary").
+        return [n for n in cluster.tainted_nodes() if n.fits(pod.requests)]
+
+    @abc.abstractmethod
+    def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
+        """Pick the target node among feasible candidates."""
+
+    def schedule(self, cluster: Cluster, pod: Pod, now: float) -> bool:
+        """Paper Alg. 2 skeleton. Returns True iff a binding was created."""
+        nodes = self.suitable_nodes(cluster, pod)
+        node = self.select(nodes, pod) if nodes else None
+        if node is None:
+            return False
+        cluster.bind(pod, node, now)
+        return True
+
+
+class BestFitBinPackingScheduler(Scheduler):
+    """Paper Alg. 2 — online best-fit bin packing.
+
+    Filter nodes with enough free CPU (compressible), then among those that
+    also fit the memory request pick the one with the **least** free memory:
+    the fullest bin that still accommodates the item.  Memory is the best-fit
+    key because it is the non-compressible axis (§6.1).
+    """
+
+    name = "best-fit"
+
+    def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
+        if not nodes:
+            return None
+        # Deterministic tie-break on node_id.
+        return min(nodes, key=lambda n: (n.free.mem_mb, n.node_id))
+
+
+class KubernetesDefaultScheduler(Scheduler):
+    """The Fig. 4 baseline: default kube-scheduler scoring (v1.10 era).
+
+    LeastRequestedPriority + BalancedResourceAllocation, equally weighted —
+    a *spread* strategy that favours the least-loaded node, the opposite of
+    bin packing.  Run on a fixed-size static cluster in the baseline.
+    """
+
+    name = "k8s-default"
+
+    def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
+        if not nodes:
+            return None
+
+        def score(n: Node) -> float:
+            free = n.free - pod.requests
+            cap = n.allocatable
+            cpu_frac = free.cpu_m / max(cap.cpu_m, 1)
+            mem_frac = free.mem_mb / max(cap.mem_mb, 1e-9)
+            least_requested = 10.0 * (cpu_frac + mem_frac) / 2.0
+            balanced = 10.0 * (1.0 - abs(cpu_frac - mem_frac))
+            return (least_requested + balanced) / 2.0
+
+        return max(nodes, key=lambda n: (score(n), n.node_id))
+
+
+class FirstFitScheduler(Scheduler):
+    """Ablation baseline: first feasible node in id order (classic FF)."""
+
+    name = "first-fit"
+
+    def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
+        return min(nodes, key=lambda n: n.node_id) if nodes else None
+
+
+class WorstFitScheduler(Scheduler):
+    """Ablation baseline: emptiest feasible node (Docker Swarm 'spread')."""
+
+    name = "worst-fit"
+
+    def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
+        if not nodes:
+            return None
+        return max(nodes, key=lambda n: (n.free.mem_mb, n.node_id))
+
+
+SCHEDULERS = {
+    cls.name: cls
+    for cls in (BestFitBinPackingScheduler, KubernetesDefaultScheduler,
+                FirstFitScheduler, WorstFitScheduler)
+}

@@ -1,0 +1,225 @@
+"""Discrete-event simulator for the paper's evaluation (§7).
+
+Deterministic (seeded, no wall clock): events are (time, seq, kind, payload)
+on a heap.  Event kinds:
+
+* ``ARRIVAL``     — a job from the workload trace is submitted;
+* ``CYCLE``       — periodic scheduler cycle (paper Alg. 1);
+* ``POD_DONE``    — a batch pod ran to completion (invalidated by eviction
+  via the pod's incarnation counter);
+* ``NODE_READY``  — a provisioning VM joined the cluster (boot delay model);
+* ``SAMPLE``      — 20 s Table-5 utilization sampling;
+* ``NODE_FAIL``   — fleet extension: a node dies (failure injection).
+
+Exit condition: all arrivals submitted and every batch pod SUCCEEDED; services
+are then torn down and billing closed (paper's *scheduling duration* =
+first submission → last batch completion).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.autoscaler import Autoscaler
+from repro.core.cluster import Cluster, Node, NodeState
+from repro.core.cost import CostModel
+from repro.core.metrics import SAMPLE_PERIOD_S, ExperimentResult, MetricsCollector
+from repro.core.orchestrator import Orchestrator
+from repro.core.pods import Pod, PodPhase
+from repro.core.workload import Arrival
+
+ARRIVAL, CYCLE, POD_DONE, NODE_READY, SAMPLE, NODE_FAIL = range(6)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    cycle_period_s: float = 10.0
+    max_sim_time_s: float = 48 * 3600.0
+    sample_period_s: float = SAMPLE_PERIOD_S
+
+
+class Simulation:
+    """Drives one experiment: workload trace × policy combo × cluster."""
+
+    def __init__(self, orchestrator: Orchestrator, cost: CostModel,
+                 arrivals: List[Arrival], config: Optional[SimConfig] = None,
+                 failure_injector=None):
+        self.orch = orchestrator
+        self.cluster = orchestrator.cluster
+        self.cost = cost
+        self.arrivals = sorted(arrivals, key=lambda a: a.time)
+        self.config = config or SimConfig()
+        self.metrics = MetricsCollector()
+        self.failure_injector = failure_injector
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self._completion_scheduled: Dict[Tuple[int, int], bool] = {}
+        self.failures_injected = 0
+        self._stuck = False
+        self.first_submit: Optional[float] = None
+        self.last_batch_done: Optional[float] = None
+
+    # -- event plumbing -----------------------------------------------------------
+    def push(self, t: float, kind: int, payload=None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    # -- public: used by SimProvider ----------------------------------------------
+    def schedule_node_ready(self, node: Node, t: float) -> None:
+        self.push(t, NODE_READY, node)
+
+    # -- main loop ------------------------------------------------------------------
+    def run(self) -> ExperimentResult:
+        for a in self.arrivals:
+            self.push(a.time, ARRIVAL, a)
+        self.push(0.0, CYCLE)
+        self.push(0.0, SAMPLE)
+        if self.failure_injector is not None:
+            self.failure_injector.prime(self)
+
+        completed = False
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > self.config.max_sim_time_s:
+                break
+            self.now = t
+            if kind == ARRIVAL:
+                self._on_arrival(payload)
+            elif kind == CYCLE:
+                self._on_cycle()
+            elif kind == POD_DONE:
+                self._on_pod_done(payload)
+            elif kind == NODE_READY:
+                self._on_node_ready(payload)
+            elif kind == SAMPLE:
+                self._on_sample()
+            elif kind == NODE_FAIL:
+                self._on_node_fail(payload)
+            if self._done():
+                completed = True
+                break
+
+        end = self.last_batch_done if completed and self.last_batch_done else self.now
+        self.cost.close_all(end)
+        return self._result(completed, end)
+
+    # -- handlers --------------------------------------------------------------------
+    def _on_arrival(self, arrival: Arrival) -> None:
+        pod = Pod(spec=arrival.spec, submit_time=self.now)
+        if self.first_submit is None:
+            self.first_submit = self.now
+        self.orch.submit(pod)
+
+    def _on_cycle(self) -> None:
+        stats = self.orch.cycle(self.now)
+        self._schedule_completions()
+        if self._permanently_stuck(stats):
+            self._stuck = True
+            return   # stop perpetuating cycles; heap drains, run() returns
+        self.push(self.now + self.config.cycle_period_s, CYCLE)
+
+    def _permanently_stuck(self, stats) -> bool:
+        """A static (void-autoscaled) cluster with pending pods, nothing
+        running that could free space, and no provisioning in flight can
+        never make progress — bail instead of simulating to max_sim_time."""
+        if len(self.orch.pods) != len(self.arrivals):
+            return False
+        if stats.placed or stats.rescheduled or stats.scale_out_requests == 0:
+            return False
+        if self.cluster.provisioning_nodes():
+            return False
+        if any(p.is_batch for p in self.orch.running_pods()):
+            return False   # a completion may free space later
+        return bool(self.orch.pending_pods())
+
+    def _schedule_completions(self) -> None:
+        """Any batch pod bound (or re-bound) since the last cycle gets a
+        completion event for its current incarnation."""
+        for pod in self.orch.running_pods():
+            if not pod.is_batch:
+                continue
+            key = (pod.uid, pod.incarnation)
+            if key in self._completion_scheduled:
+                continue
+            node = self.cluster.node_of(pod)
+            speed = node.speed_factor if node else 1.0
+            remaining = pod.spec.duration_s - pod.progress_s
+            self.push(self.now + remaining / max(speed, 1e-6), POD_DONE,
+                      (pod, pod.incarnation))
+            self._completion_scheduled[key] = True
+
+    def _on_pod_done(self, payload) -> None:
+        pod, incarnation = payload
+        if pod.phase != PodPhase.BOUND or pod.incarnation != incarnation:
+            return   # stale event: pod was evicted/failed since
+        node = self.cluster.node_of(pod)
+        if node is not None:
+            node.remove_pod(pod)
+        pod.complete(self.now)
+        self.last_batch_done = self.now
+
+    def _on_node_ready(self, node: Node) -> None:
+        if node.state != NodeState.PROVISIONING:
+            return
+        node.mark_ready(self.now)
+        self.orch.autoscaler.notify_node_ready(node)
+        if self.failure_injector is not None:
+            self.failure_injector.arm_node(self, node)
+
+    def _on_sample(self) -> None:
+        self.metrics.sample(self.cluster, self.now)
+        self.push(self.now + self.config.sample_period_s, SAMPLE)
+
+    def _on_node_fail(self, node: Node) -> None:
+        if node.node_id not in self.cluster.nodes:
+            return
+        if node.state == NodeState.TERMINATED:
+            return
+        self.failures_injected += 1
+        for pod in list(node.pods.values()):
+            self.cluster.unbind(pod, self.now, failed=True)
+        if node.state == NodeState.PROVISIONING:
+            node.state = NodeState.READY   # force through the state machine
+            node.ready_time = self.now
+        self.cost.on_deprovision(node, self.now)
+        self.cluster.remove_node(node, self.now)
+
+    # -- termination / results ----------------------------------------------------
+    def _done(self) -> bool:
+        """All jobs placed & executed: every batch SUCCEEDED and every
+        service BOUND (a cluster that never fits its services never
+        completed the workload — this matters for the Fig. 4 baseline)."""
+        if len(self.orch.pods) != len(self.arrivals) or not self.orch.pods:
+            return False
+        if not self.orch.batch_all_done():
+            return False
+        return all(p.phase == PodPhase.BOUND
+                   for p in self.orch.pods if p.is_service)
+
+    def _result(self, completed: bool, end: float) -> ExperimentResult:
+        for pod in self.orch.pods:
+            for iv in pod.pending_intervals:
+                self.metrics.record_pending_interval(iv)
+        start = self.first_submit or 0.0
+        evictions = sum(p.incarnation for p in self.orch.pods)
+        return ExperimentResult(
+            workload="", scheduler=self.orch.scheduler.name,
+            rescheduler=self.orch.rescheduler.name,
+            autoscaler=self.orch.autoscaler.name,
+            completed=completed,
+            cost=self.cost.total_cost(end),
+            duration_s=end - start,
+            median_pending_s=self.metrics.median_pending_s(),
+            max_pending_s=self.metrics.max_pending_s(),
+            avg_ram_ratio=self.metrics.avg_ram_ratio(),
+            avg_cpu_ratio=self.metrics.avg_cpu_ratio(),
+            avg_pods_per_node=self.metrics.avg_pods_per_node(),
+            max_nodes=self.metrics.max_nodes(),
+            node_seconds=self.cost.total_node_seconds(end),
+            evictions=evictions,
+            scale_outs=self.orch.total_scale_outs,
+            scale_ins=self.orch.total_scale_ins,
+            failures_injected=self.failures_injected,
+        )

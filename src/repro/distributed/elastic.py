@@ -1,0 +1,65 @@
+"""Elastic scaling: resume a checkpoint on a different mesh (DESIGN.md §4).
+
+Checkpoints store unsharded leaves (`repro.train.checkpoint`), so elasticity
+reduces to recomputing shardings for the new mesh from the same logical axes
+and `device_put`-ing on restore.  The orchestrator uses this when it resizes
+a job (scale the data axis up/down) instead of merely migrating it.
+
+`plan_resize` also exposes the policy knob: given a new device count, choose
+the (data, model) split that keeps the model axis divisibility constraints
+of the architecture — the fleet-level analogue of the paper's "number and
+type of VMs to launch" decision.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingCtx,
+                                        tree_shardings)
+from repro.models.params import param_axes, param_shapes
+from repro.models import transformer as tf
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import TrainState, train_state_axes
+
+
+def plan_resize(n_devices: int, cfg: ArchConfig,
+                prefer_model: int = 16) -> Tuple[int, int]:
+    """Choose (data, model) for a new device count: the largest model-axis
+    size <= prefer_model that divides both the device count and the arch's
+    shardable dims (heads or d_ff or experts)."""
+    dims = [d for d in (cfg.num_heads, cfg.d_ff or 0, cfg.n_experts or 0,
+                        cfg.d_model) if d]
+    for model in range(min(prefer_model, n_devices), 0, -1):
+        if n_devices % model:
+            continue
+        if any(dim % model == 0 for dim in dims):
+            return n_devices // model, model
+    return n_devices, 1
+
+
+def shardings_for_mesh(mesh: Mesh, cfg: ArchConfig, *, state: bool = True):
+    """NamedSharding tree for a TrainState (or bare params) on `mesh`."""
+    ctx = ShardingCtx(mesh, dict(DEFAULT_RULES))
+    if state:
+        from repro.train.train_step import init_train_state
+        axes = train_state_axes(cfg)
+        shapes = jax.eval_shape(lambda: init_train_state(
+            jax.random.key(0), cfg))
+    else:
+        axes = param_axes(tf.model_specs(cfg))
+        shapes = param_shapes(tf.model_specs(cfg), cfg.param_dtype)
+    return tree_shardings(ctx, shapes, axes)
+
+
+def restore_elastic(ckpt: CheckpointManager, cfg: ArchConfig, mesh: Mesh,
+                    step: Optional[int] = None):
+    """Restore the latest checkpoint resharded for `mesh`."""
+    from repro.train.train_step import init_train_state
+    like = jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg))
+    shardings = shardings_for_mesh(mesh, cfg, state=True)
+    return ckpt.restore(like, step=step, shardings=shardings)

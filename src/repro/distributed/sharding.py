@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules with divisibility fallback (DESIGN.md §4).
+
+Parameters and activations are annotated with *logical* axis names; rules map
+each logical name to an ordered list of candidate mesh axes.  Resolution picks
+the first candidate whose mesh size divides the dimension and whose axes are
+not already taken by another dimension of the same tensor — otherwise the
+dimension is replicated.  This is what lets one model definition serve
+archs from xlstm-125m (d_model=768, 4 heads) to command-r-35b (64 heads)
+on the same (pod, data, model) production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Tuple[str, ...]
+Rule = Tuple[str, Tuple[Union[str, Tuple[str, ...]], ...]]
+
+# Candidate mesh axes per logical axis, in preference order.  ("pod","data")
+# as a single tuple entry means "shard over the flattened pod×data axes".
+DEFAULT_RULES: Dict[str, Tuple] = {
+    # -- parameters ----------------------------------------------------------
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "expert": ("model",),
+    "rnn": ("model",),
+    "rnn_blocks": ("model",),
+    "embed": (("pod", "data"), "data"),       # ZeRO-3/FSDP over DP axes
+    "layer": (),                              # scan stack dim: never sharded
+    "head_dim": (),
+    "conv": (),
+    # -- activations -----------------------------------------------------------
+    "act_batch": (("pod", "data"), "data"),
+    # Megatron-style sequence parallelism for the *residual stream only*:
+    # block inputs/outputs are (batch, seq/model, embed); attention/MLP
+    # internals re-gather seq and shard heads/mlp instead (the transitions
+    # lower to the standard SP all-gather + reduce-scatter pairs).  Without
+    # this, the per-layer saved residuals of command-r-35b@train_4k alone
+    # exceed HBM (40 layers x 1 GB/device).
+    "act_seq": ("model",),
+    # query-sequence dim *inside* attention: context parallelism for archs
+    # whose head count does not divide the model axis (qwen1.5-32b: 40 H).
+    "act_q_seq": (),
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+    "act_rnn": ("model",),
+    "act_kv_seq": ("model",),                 # decode: shard the KV cache seq
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Dict[str, Tuple]
+
+    def axis_size(self, entry) -> int:
+        if isinstance(entry, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in entry]))
+        return int(self.mesh.shape[entry])
+
+    def resolve(self, dims: Sequence[int],
+                axes: Sequence[Optional[str]]) -> P:
+        """Logical axes -> PartitionSpec with divisibility fallback."""
+        assert len(dims) == len(axes), (dims, axes)
+        used: set = set()
+        out: List = []
+        for dim, name in zip(dims, axes):
+            spec = None
+            for entry in self.rules.get(name, ()) if name else ():
+                flat = entry if isinstance(entry, tuple) else (entry,)
+                if any(a in used for a in flat):
+                    continue
+                if any(a not in self.mesh.shape for a in flat):
+                    continue
+                if dim % self.axis_size(entry) != 0:
+                    continue   # divisibility fallback
+                spec = entry
+                used.update(flat)
+                break
+            out.append(spec)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding_for(self, shape: Sequence[int],
+                     axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(shape, axes))
+
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("sharding_ctx",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Optional[Dict[str, Tuple]] = None):
+    """Enable logical-axis sharding constraints inside model code."""
+    token = _CTX.set(ShardingCtx(mesh, dict(rules or DEFAULT_RULES)))
+    try:
+        yield _CTX.get()
+    finally:
+        _CTX.reset(token)
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return _CTX.get()
+
+
+def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a context
+    (CPU smoke tests) so model code stays mesh-agnostic."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding_for(x.shape, axes))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def tree_shardings(ctx: ShardingCtx, shapes_tree, axes_tree):
+    """NamedSharding pytree for jit in_shardings/out_shardings.
+
+    ``axes_tree`` mirrors ``shapes_tree`` with tuples of logical axis names
+    as leaves (the tree is mapped over axes first since a tuple-of-str leaf
+    would otherwise be treated as an inner node).
+    """
+    return jax.tree.map(
+        lambda a, s: ctx.sharding_for(s.shape, a),
+        axes_tree, shapes_tree, is_leaf=_is_axes_leaf)

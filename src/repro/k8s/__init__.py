@@ -1,0 +1,3 @@
+from repro.k8s.objects import Deployment, Job, from_manifest, to_pod_spec
+
+__all__ = ["Deployment", "Job", "from_manifest", "to_pod_spec"]

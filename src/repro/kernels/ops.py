@@ -1,0 +1,47 @@
+"""Jitted public wrappers around the Pallas TPU kernels.
+
+On a TPU backend these call the compiled kernels; everywhere else they fall
+back to the jnp oracle (`ref.py`) unless interpret-mode is forced — which is
+how the CPU test suite validates the kernel bodies instruction-by-
+instruction (`interpret=True` executes the Pallas program in Python).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rglru_scan as _rg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "sm_scale",
+                                             "force", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    sm_scale: Optional[float] = None,
+                    force: bool = False,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, T, hd); k/v: (B, Hkv, S, hd) -> (B, Hq, T, hd)."""
+    if interpret or force or _on_tpu():
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   sm_scale=sm_scale, interpret=interpret
+                                   or not _on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              sm_scale=sm_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("force", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, *, force: bool = False,
+               interpret: bool = False) -> jax.Array:
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + b_t; (B, T, R)."""
+    if interpret or force or _on_tpu():
+        return _rg.rglru_scan(a, b, interpret=interpret or not _on_tpu())
+    return _ref.rglru_scan_ref(a, b)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+used by the interpret=True shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  sm_scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, T, hd); k/v: (B, Hkv, S, hd).  f32 softmax, GQA repeat."""
+    B, Hq, T, hd = q.shape
+    _, Hkv, S, _ = k.shape
+    if sm_scale is None:
+        sm_scale = hd ** -0.5
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    ti = jnp.arange(T)[:, None]
+    si = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask = mask & (si <= ti)
+    if window > 0:
+        mask = mask & (si > ti - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sequential h_t = a_t*h_{t-1} + b_t (f32 state), shape (B, T, R)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(af, 1, 0),
+                                    jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

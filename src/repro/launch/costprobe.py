@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede any jax-importing module (same contract as dryrun.py).
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Dict, List, Tuple  # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import get_config, list_archs          # noqa: E402
+from repro.configs.base import ArchConfig                  # noqa: E402
+from repro.launch import shapes as shp                     # noqa: E402
+from repro.launch.dryrun import build_lowered              # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+
+"""Compositional cost probe (§Roofline methodology, DESIGN.md §6).
+
+`compiled.cost_analysis()` counts a scan body once — so the full-model
+FLOPs/bytes are extrapolated from two reduced-depth variants compiled with
+*inlined* layers (`unroll_layers=True`):
+
+    F(L_full) = F(La) + (F(Lb) - F(La)) / (Lb - La) x (L_full - La)
+
+Each architecture family picks (La, Lb) = one and two repetitions of its
+block pattern (the MoE first-dense layer and the whisper encoder scale along
+with the probes, so the delta isolates exactly one pattern repetition).
+Remat recompute is included — the probes differentiate through the same
+checkpointed blocks the real step uses.
+"""
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "costprobe")
+
+
+def probe_configs(cfg: ArchConfig) -> Tuple[ArchConfig, ArchConfig, int, int]:
+    """(cfg_a, cfg_b, La, Lb) reduced-depth inlined variants."""
+    if cfg.family == "ssm":
+        k = cfg.slstm_every or 1
+        la, lb = k, 2 * k
+    elif cfg.family == "hybrid":
+        la, lb = cfg.rglru_pattern, 2 * cfg.rglru_pattern
+    elif cfg.n_experts > 0 and cfg.first_k_dense:
+        la, lb = cfg.first_k_dense + 1, cfg.first_k_dense + 2
+    else:
+        la, lb = 1, 2
+    def mk(n):
+        kw = dict(num_layers=n, unroll_layers=True)
+        if cfg.is_encoder_decoder:
+            kw["encoder_layers"] = n
+        return dataclasses.replace(cfg, **kw)
+    return mk(la), mk(lb), la, lb
+
+
+def _cost(cfg: ArchConfig, shape_name: str, mesh) -> Dict[str, float]:
+    compiled = build_lowered(cfg, shape_name, mesh).compile()
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_probe(arch: str, shape_name: str, out_dir: str) -> Dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    cfg_a, cfg_b, la, lb = probe_configs(cfg)
+    t0 = time.time()
+    fa = _cost(cfg_a, shape_name, mesh)
+    fb = _cost(cfg_b, shape_name, mesh)
+    n_steps = (cfg.num_layers - la) / (lb - la)
+    full = {k: fa[k] + (fb[k] - fa[k]) * n_steps for k in fa}
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": "single",
+        "devices": mesh.devices.size,
+        "probe_layers": [la, lb],
+        "flops_per_device_a": fa["flops"], "flops_per_device_b": fb["flops"],
+        "bytes_per_device_a": fa["bytes"], "bytes_per_device_b": fb["bytes"],
+        "flops_per_device_full": full["flops"],
+        "bytes_per_device_full": full["bytes"],
+        "elapsed_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch}__{shape_name}.json"), "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[costprobe] {arch} x {shape_name}: "
+          f"full flops/dev {full['flops']:.3e} bytes/dev {full['bytes']:.3e} "
+          f"({result['elapsed_s']}s)")
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        names = list(shp.SHAPES) if args.shape == "all" else [args.shape]
+        for shape_name in names:
+            if not shp.applicable(cfg, shp.SHAPES[shape_name])[0]:
+                continue
+            try:
+                run_probe(arch, shape_name, args.out)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape_name, str(e)))
+    print(f"[costprobe] done, {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the production dry-run needs 512
+# placeholder host devices to build the 2x16x16 multi-pod mesh.
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, list_archs              # noqa: E402
+from repro.configs.base import ArchConfig                      # noqa: E402
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingCtx,  # noqa: E402
+                                        sharding_ctx, tree_shardings)
+from repro.launch import shapes as shp                         # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes         # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.models import transformer as tf                     # noqa: E402
+from repro.train.optimizer import OptimizerConfig              # noqa: E402
+from repro.train.train_step import (init_train_state, make_train_step,  # noqa: E402
+                                    train_state_axes)
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, build the jitted step for the
+production mesh — single-pod (16, 16) and multi-pod (2, 16, 16) — then
+``.lower().compile()`` and record:
+
+  * ``compiled.memory_analysis()``  (proves the cell fits per-device HBM),
+  * ``compiled.cost_analysis()``    (per-device FLOPs/bytes, scan-body-once),
+  * collective bytes parsed from the compiled HLO (while-trip aware).
+
+Artifacts land in ``artifacts/dryrun/<mesh>/<arch>__<shape>.json`` and feed
+``benchmarks/roofline.py`` (§Roofline) and EXPERIMENTS.md §Dry-run.
+"""
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _batch_axes_tree(batch_specs: Dict, accum: int = 1) -> Dict:
+    lead = (None,) if accum > 1 else ()
+    return {k: lead + ("act_batch",) + (None,) * (len(v.shape) - 1 - len(lead))
+            for k, v in batch_specs.items()}
+
+
+def build_lowered(cfg: ArchConfig, shape_name: str, mesh,
+                  rules: Optional[Dict] = None,
+                  remat: bool = True, donate: bool = True):
+    """Returns (lowered, meta) for one cell on one mesh."""
+    rules = dict(rules or DEFAULT_RULES)
+    rules.update(dict(cfg.rule_overrides))
+    ctx = ShardingCtx(mesh, rules)
+    shape = shp.SHAPES[shape_name]
+    specs = shp.input_specs(cfg, shape_name)
+
+    with sharding_ctx(mesh, rules):
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(jax.random.key(0), cfg))
+            state_sh = tree_shardings(ctx, state_shapes,
+                                      train_state_axes(cfg))
+            batch = specs["batch"]
+            accum = cfg.train_accum
+            batch_sh = tree_shardings(ctx, batch,
+                                      _batch_axes_tree(batch, accum))
+            step = make_train_step(cfg, OptimizerConfig(), accum=accum,
+                                   remat=remat)
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_shapes, batch)
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(
+                lambda: __import_params(cfg))
+            from repro.models.params import param_axes
+            params_sh = tree_shardings(ctx, params_shapes,
+                                       param_axes(tf.model_specs(cfg)))
+            batch = specs["batch"]
+            batch_sh = tree_shardings(ctx, batch, _batch_axes_tree(batch))
+
+            def prefill_fn(params, batch):
+                return tf.prefill(params, batch, cfg, shape.seq_len)
+
+            fn = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh))
+            lowered = fn.lower(params_shapes, batch)
+        else:   # decode
+            params_shapes = jax.eval_shape(
+                lambda: __import_params(cfg))
+            from repro.models.params import param_axes
+            params_sh = tree_shardings(ctx, params_shapes,
+                                       param_axes(tf.model_specs(cfg)))
+            tokens, states = specs["tokens"], specs["states"]
+            state_axes = tf.decode_state_axes(cfg)
+            states_sh = tree_shardings(ctx, states, state_axes)
+            tokens_sh = ctx.sharding_for(tokens.shape, ("act_batch", None))
+
+            def decode_fn(params, tokens, states):
+                return tf.decode_step(params, tokens, states, cfg)
+
+            fn = jax.jit(decode_fn,
+                         in_shardings=(params_sh, tokens_sh, states_sh),
+                         out_shardings=(None, states_sh),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params_shapes, tokens, states)
+    return lowered
+
+
+def __import_params(cfg: ArchConfig):
+    # Serving runs on inference-cast weights (bf16), the production norm —
+    # training keeps cfg.param_dtype (f32 masters).
+    from repro.models.params import param_shapes
+    return param_shapes(tf.model_specs(cfg), cfg.dtype)
+
+
+def analyze_compiled(compiled) -> Dict:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes,
+        },
+        "cost": {"flops_per_device": float(ca.get("flops", 0.0)),
+                 "bytes_per_device": float(ca.get("bytes accessed", 0.0))},
+        "collectives_per_device": coll,
+        "hlo_bytes": len(txt),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, remat: bool = True,
+             rules: Optional[Dict] = None, tag: str = "",
+             cfg_overrides: Optional[Dict] = None) -> Dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    mesh_name = "multi" if multi_pod else "single"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape_name, mesh, rules=rules, remat=remat)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    result = analyze_compiled(compiled)
+    result.update({
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "ok": True, "tag": tag,
+    })
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+          f"(compile {t_compile:.1f}s, "
+          f"temp {result['memory']['temp_bytes']/2**30:.2f} GiB/dev, "
+          f"coll {result['collectives_per_device']['total']/2**30:.2f} "
+          f"GiB/dev)")
+    print(f"  memory_analysis: {compiled.memory_analysis()}")
+    ca = compiled.cost_analysis() or {}
+    print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e} (per device)")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(out_dir,
+                            f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    n_ok = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_names = (list(shp.SHAPES) if args.shape == "all"
+                       else [args.shape])
+        for shape_name in shape_names:
+            ok, why = shp.applicable(cfg, shp.SHAPES[shape_name])
+            if not ok:
+                print(f"[dryrun] {arch} x {shape_name}: SKIP ({why})")
+                n_skip += 1
+                continue
+            for multi_pod in meshes:
+                try:
+                    run_cell(arch, shape_name, multi_pod, out_dir=args.out)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, multi_pod, str(e)))
+    print(f"\n[dryrun] {n_ok} cells OK, {n_skip} documented skips, "
+          f"{len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,147 @@
+"""Post-SPMD HLO text analysis: collective bytes with while-loop awareness.
+
+`compiled.cost_analysis()` counts a `while` (scan) body once, not ×trip-count
+(measured; DESIGN.md §6), and provides no per-collective breakdown at all —
+so we parse the compiled HLO text:
+
+* every `all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute` op contributes its (per-device, post-SPMD) result
+  bytes;
+* `while` ops multiply their body's total by the trip count, which XLA
+  materializes as the `s32[] constant(N)` bound in the loop's condition
+  computation (largest s32 constant there — loop bounds dominate the 0/1
+  step constants).
+
+Everything is per-device; multiply by chip count for fleet totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\dm\d(?:fn)?)?)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%([\w.\-]+), body=%([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\] constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\S.*?)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    collectives: List[Tuple[str, int]]
+    whiles: List[Tuple[str, str]]      # (condition, body)
+    constants: List[int]
+
+
+def _parse_computations(hlo_text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    current: Optional[_Comp] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line else None
+        if m and not line.startswith(" "):
+            current = _Comp(m.group(1), [], [], [])
+            comps[current.name] = current
+            continue
+        if current is None:
+            continue
+        s = line.strip()
+        cm = _COLL_RE.match(s)
+        if cm:
+            kind = cm.group(2).replace("-start", "")
+            current.collectives.append((kind, shape_bytes(cm.group(1))))
+        wm = _WHILE_RE.search(s)
+        if wm:
+            current.whiles.append((wm.group(1), wm.group(2)))
+        for c in _CONST_RE.findall(s):
+            current.constants.append(int(c))
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by kind, while-trip-count aware."""
+    comps = _parse_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        cond = comps.get(cond_name)
+        if cond is None or not cond.constants:
+            return 1
+        return max(max(cond.constants), 1)
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return {}
+        comp = comps.get(name)
+        if comp is None:
+            return {}
+        acc: Dict[str, float] = {}
+        for kind, nbytes in comp.collectives:
+            acc[kind] = acc.get(kind, 0.0) + nbytes
+        for cond, body in comp.whiles:
+            trips = trip_count(cond)
+            sub = total(body, stack + (name,))
+            for kind, nbytes in sub.items():
+                acc[kind] = acc.get(kind, 0.0) + trips * nbytes
+        memo[name] = acc
+        return acc
+
+    # entry computation: the last computation defined, or the one named in
+    # the ENTRY line; identify via "ENTRY" marker.
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+    if entry is None:   # fall back: whichever computation no one calls
+        called = {b for c in comps.values() for _, b in c.whiles}
+        candidates = [n for n in comps if n not in called]
+        entry = candidates[-1] if candidates else next(iter(comps), None)
+    out = dict(total(entry)) if entry else {}
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """All loop trip counts found (diagnostics)."""
+    comps = _parse_computations(hlo_text)
+    out = []
+    for comp in comps.values():
+        for cond, _ in comp.whiles:
+            c = comps.get(cond)
+            out.append(max(c.constants) if c and c.constants else 1)
+    return out

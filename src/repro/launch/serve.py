@@ -1,0 +1,62 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Boots a `ServeEngine` (continuous batching) on a reduced config and drives a
+synthetic request stream, printing latency/throughput — the *service* job
+kind the orchestrator deploys.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as tf
+from repro.models.params import init_params
+from repro.serve.engine import EngineConfig, Request, ServeEngine, run_server
+from repro.serve.sampling import SamplingConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="deepseek-7b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mean-interarrival-s", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=True)
+    params = init_params(jax.random.key(args.seed), tf.model_specs(cfg),
+                         cfg.param_dtype)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["pixel_embeds"] = 0.02 * np.random.default_rng(0).standard_normal(
+            (cfg.vision_prefix_len, cfg.d_model)).astype(np.float32)
+    if cfg.family == "audio":
+        extra["audio_embeds"] = 0.02 * np.random.default_rng(0).standard_normal(
+            (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    engine = ServeEngine(cfg, params, EngineConfig(
+        num_slots=args.slots, cache_len=args.cache_len,
+        sampling=SamplingConfig(temperature=args.temperature)),
+        extra_inputs=extra)
+
+    rng = np.random.default_rng(args.seed)
+    t = 0.0
+    requests = []
+    for i in range(args.requests):
+        t += float(rng.exponential(args.mean_interarrival_s))
+        plen = int(rng.integers(4, 17))
+        requests.append(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, plen),
+            max_new_tokens=args.max_new_tokens, submitted_at=t))
+    metrics = run_server(engine, requests)
+    print(f"[serve] {metrics}")
+
+
+if __name__ == "__main__":
+    main()

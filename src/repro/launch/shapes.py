@@ -1,0 +1,128 @@
+"""Assigned input-shape suites and `input_specs()` (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, no device allocation).
+
+Four shapes per LM architecture (40 cells total):
+  train_4k     seq 4096,   global batch 256   -> train_step
+  prefill_32k  seq 32768,  global batch 32    -> serve prefill
+  decode_32k   cache 32768, global batch 128  -> serve decode (1 new token)
+  long_500k    cache 524288, global batch 1   -> decode, sub-quadratic only
+
+`long_500k` is skipped for pure full-attention archs (documented in
+DESIGN.md §5); `[audio]`/`[vlm]` input specs carry stubbed frame/patch
+embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("full quadratic attention: a 500k-token KV cache/"
+                       "attention row is out of scope by design (DESIGN.md §5)")
+    return True, ""
+
+
+def cells(archs: List[str]) -> List[Tuple[str, str]]:
+    from repro.configs import get_config
+    out = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if applicable(cfg, shape)[0]:
+                out.append((arch, shape.name))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# input specs (ShapeDtypeStructs)
+# --------------------------------------------------------------------------- #
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    accum = cfg.train_accum
+    assert B % max(accum, 1) == 0, (B, accum)
+    lead = (accum,) if accum > 1 else ()
+    B = B // max(accum, 1)
+    S_text = S - cfg.vision_prefix_len if cfg.family == "vlm" else S
+    batch = {
+        "tokens": _sds(lead + (B, S_text), jnp.int32),
+        "labels": _sds(lead + (B, S_text), jnp.int32),
+        "loss_mask": _sds(lead + (B, S_text), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["pixel_embeds"] = _sds(
+            lead + (B, cfg.vision_prefix_len, cfg.d_model), cfg.dtype)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = _sds(
+            lead + (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    S_text = S - cfg.vision_prefix_len if cfg.family == "vlm" else S
+    batch = {"tokens": _sds((B, S_text), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["pixel_embeds"] = _sds((B, cfg.vision_prefix_len, cfg.d_model),
+                                     cfg.dtype)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                     cfg.dtype)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[Dict, object]:
+    """(token specs, decode-state specs) for one decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), jnp.int32)
+    # production decode waves advance uniformly -> scalar positions (the
+    # per-example variant exists for the continuous-batching engine)
+    states = jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, B, S, dtype=jnp.dtype(cfg.dtype),
+                                     per_example_pos=False))
+    return tokens, states
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict:
+    """All model inputs for an (arch, shape) cell, as ShapeDtypeStructs."""
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name} skipped: {why}")
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    tokens, states = decode_input_specs(cfg, shape)
+    return {"tokens": tokens, "states": states}

@@ -1,0 +1,51 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--tiny]``.
+
+Runs the real training loop (synthetic data) on the local devices; the full
+production-mesh path is exercised via ``repro.launch.dryrun`` (this host has
+one CPU device).  Checkpointing/resume flags expose the fault-tolerance
+substrate the orchestrator drives.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, list_archs
+from repro.train.data import DataConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="deepseek-7b", choices=list_archs())
+    ap.add_argument("--tiny", action="store_true", default=True,
+                    help="use the reduced smoke config (default on CPU)")
+    ap.add_argument("--full", dest="tiny", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny)
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(learning_rate=args.lr, warmup_steps=args.warmup,
+                        total_steps=args.steps),
+        DataConfig(batch_size=args.batch_size, seq_len=args.seq_len,
+                   accum=args.accum, seed=args.seed),
+        TrainerConfig(total_steps=args.steps,
+                      checkpoint_every=args.checkpoint_every,
+                      checkpoint_dir=args.checkpoint_dir, seed=args.seed),
+    )
+    result = trainer.run()
+    print(f"[train] result: {result}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Depthwise causal 1-D convolution (shared by mLSTM and RG-LRU blocks).
+
+Implemented as a sum of shifted inputs (width is tiny, typically 4), which
+lowers to cheap adds/muls, shards trivially over batch/features, and has an
+O(1) decode state (the last ``width-1`` inputs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+def conv_specs(channels: int, width: int, axis_name: str = "rnn"
+               ) -> Dict[str, ParamSpec]:
+    return {
+        "w": ParamSpec((width, channels), ("conv", axis_name), scale=1.0),
+        "b": ParamSpec((channels,), (axis_name,), init="zeros"),
+    }
+
+
+def causal_conv1d(p, x: jax.Array) -> jax.Array:
+    """x: (B, T, C) -> (B, T, C); left-padded causal depthwise conv."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    out = x * w[width - 1]
+    for j in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :x.shape[1], :]
+        out = out + shifted * w[width - 1 - j]
+    return out + p["b"].astype(x.dtype)
+
+
+def conv_decode_init(batch: int, channels: int, width: int,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Decode state: the last width-1 inputs, shape (B, width-1, C)."""
+    return jnp.zeros((batch, width - 1, channels), dtype)
+
+
+def causal_conv1d_step(p, x: jax.Array, state: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  x: (B, 1, C); state: (B, width-1, C)."""
+    w = p["w"].astype(x.dtype)
+    window = jnp.concatenate([state, x], axis=1)          # (B, width, C)
+    out = jnp.einsum("bwc,wc->bc", window, w)[:, None, :] + p["b"].astype(x.dtype)
+    return out, window[:, 1:, :]

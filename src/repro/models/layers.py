@@ -1,0 +1,434 @@
+"""Core transformer layers: norms, RoPE, MLP, attention (+ KV caches).
+
+Layout conventions
+  activations: (B, T, D);  q/k/v: (B, T, H, head_dim)
+  KV cache: {"k","v": (B, Kv, S, hd), "pos": int32 (B,) or scalar}
+            (local-attention ring buffer: position p lives in slot p % W;
+             kv_quant adds int8 payloads + (B, Kv, S) f16 scales)
+
+Sharding strategy (resolved via logical-axis rules, DESIGN.md §4):
+  * train/prefill: k/v repeated to all q-heads; heads sharded over `model`
+    (Megatron-style TP; activation-level head padding when the count does
+    not divide the axis), batch over `(pod, data)`, params FSDP on `embed`.
+  * decode: GQA einsum without the repeat; the cache shards over kv-heads
+    when divisible, else over its sequence dim (flash-decode-like split:
+    local compute + two small all-reduces for softmax stats/PV partials).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+NEG_INF = -2.0 ** 30   # large-but-finite: keeps bf16/f32 masking NaN-free
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+def norm_specs(cfg: ArchConfig, d: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = d or cfg.d_model
+    specs = {"scale": ParamSpec((d,), (None,), init="ones")}
+    if cfg.norm_type == "layernorm":
+        specs["bias"] = ParamSpec((d,), (None,), init="zeros")
+    return specs
+
+
+def apply_norm(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary position embeddings (half-rotation / NeoX style, partial supported)
+# --------------------------------------------------------------------------- #
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int32."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs      # (B,T,half)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin,
+                               x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# MLP (gated SwiGLU / plain GeLU)
+# --------------------------------------------------------------------------- #
+
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    specs: Dict[str, ParamSpec] = {
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        specs["w_gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    if cfg.mlp_bias:
+        specs["b_up"] = ParamSpec((f,), (None,), init="zeros")
+        specs["b_down"] = ParamSpec((d,), (None,), init="zeros")
+    return specs
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def apply_mlp(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+    if "b_up" in p:
+        h = h + p["b_up"].astype(x.dtype)
+    if cfg.gated_mlp:
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        h = _act(g, cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    h = shard(h, ("act_batch", None, "act_mlp"))
+    out = jnp.einsum("btf,fd->btd", h, p["w_down"].astype(x.dtype))
+    if "b_down" in p:
+        out = out + p["b_down"].astype(x.dtype)
+    return shard(out, ("act_batch", "act_seq", "act_embed"))
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+
+def attn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    specs: Dict[str, ParamSpec] = {
+        "w_q": ParamSpec((d, hq, hd), ("embed", "heads", "head_dim")),
+        "w_k": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "w_v": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "w_o": ParamSpec((hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["b_q"] = ParamSpec((hq, hd), ("heads", "head_dim"), init="zeros")
+        specs["b_k"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"),
+                                 init="zeros")
+        specs["b_v"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"),
+                                 init="zeros")
+    return specs
+
+
+def _project_qkv(p, x: jax.Array, cfg: ArchConfig,
+                 positions: jax.Array, use_rope: bool
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["w_q"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["w_k"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["w_v"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = q * (cfg.head_dim_ ** -0.5)
+    return q, k, v
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(scores / cap) * cap if cap > 0 else scores
+
+
+def _mha(q, k, v, mask, cfg: ArchConfig) -> jax.Array:
+    """Full multi-head attention; k/v already repeated to all q heads.
+    q,k,v: (B,T,H,hd) / (B,S,H,hd); mask: broadcastable to (B,1,T,S)."""
+    scores = jnp.einsum("bthk,bshk->bhts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    w = shard(w, ("act_batch", "act_heads", "act_q_seq", None))
+    return jnp.einsum("bhts,bshk->bthk", w, v)
+
+
+def _mask(q_pos, k_pos, causal, window):
+    """q_pos: (B,Tq); k_pos: (B,Skv) -> (B,1,Tq,Skv) bool."""
+    ti = q_pos[:, :, None]
+    si = k_pos[:, None, :]
+    mask = jnp.ones(ti.shape[:2] + (si.shape[-1],), dtype=bool)
+    if causal:
+        mask = mask & (si <= ti)
+    if window > 0:
+        mask = mask & (si > ti - window)
+    return mask[:, None, :, :]
+
+
+def attention(p, x: jax.Array, cfg: ArchConfig, *, positions: jax.Array,
+              causal: bool = True, window: int = 0, use_rope: bool = True
+              ) -> jax.Array:
+    """Training / prefill attention (full sequence).
+
+    With cfg.attn_chunk > 0 (and divisible T), queries are processed in
+    chunks via lax.scan — the (B,H,Tq,S) softmax tile is bounded at
+    (B,H,chunk,S), the XLA-level analogue of the Pallas flash kernel
+    (`repro.kernels.flash_attention` is the TPU-native version).
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, use_rope)
+    # GQA: repeat kv to all query heads; shard the head axis over `model`.
+    rep = cfg.q_per_kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    n_heads = cfg.num_heads
+    if cfg.pad_heads_to and cfg.pad_heads_to > n_heads:
+        # activation-level head padding: zero heads attend to nothing and
+        # are sliced off after the PV product — buys clean head-sharding
+        # for counts that do not divide the model axis (e.g. 40 -> 48).
+        extra = cfg.pad_heads_to - n_heads
+        pad = ((0, 0), (0, 0), (0, extra), (0, 0))
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+        n_heads = cfg.pad_heads_to
+    q = shard(q, ("act_batch", "act_q_seq", "act_heads", None))
+    k = shard(k, ("act_batch", None, "act_heads", None))
+    v = shard(v, ("act_batch", None, "act_heads", None))
+
+    chunk = cfg.attn_chunk
+    if chunk and T > chunk and T % chunk == 0:
+        nq = T // chunk
+        qs = jnp.moveaxis(q.reshape(B, nq, chunk, n_heads,
+                                    cfg.head_dim_), 1, 0)
+        ps = jnp.moveaxis(positions.reshape(B, nq, chunk), 1, 0)
+
+        @jax.checkpoint
+        def blk(carry, xs):
+            q_blk, p_blk = xs
+            q_blk = shard(q_blk, ("act_batch", "act_q_seq", "act_heads",
+                                  None))
+            o = _mha(q_blk, k, v, _mask(p_blk, positions, causal, window),
+                     cfg)
+            return carry, o
+
+        _, outs = jax.lax.scan(blk, 0, (qs, ps))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, T, n_heads, cfg.head_dim_)
+    else:
+        out = _mha(q, k, v, _mask(positions, positions, causal, window), cfg)
+    out = out[:, :, :cfg.num_heads]          # drop padded heads
+    out = jnp.einsum("bthk,hkd->btd", out, p["w_o"].astype(x.dtype))
+    return shard(out, ("act_batch", "act_seq", "act_embed"))
+
+
+# ----------------------------- decode path ---------------------------------- #
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  window: int = 0, dtype=jnp.bfloat16,
+                  per_example_pos: bool = True) -> Dict[str, jax.Array]:
+    """Cache layout (B, Kv, S, hd): the kv-head dim precedes the sequence
+    dim so that when Kv divides the `model` axis (MHA archs) the cache
+    shards over heads — local attention math, zero softmax collectives —
+    and otherwise falls back to flash-decode-style sequence sharding.
+
+    With cfg.kv_quant the cache stores int8 payloads + per-(B,Kv,S) f16
+    scales (symmetric max-abs over head_dim): 2.06x smaller than bf16, and
+    the dequant folds into the attention einsums (scores scale per key slot;
+    value scale folds into the softmax weights) so no bf16 copy of the
+    cache ever materializes."""
+    size = min(window, max_len) if window > 0 else max_len
+    shape = (batch, cfg.num_kv_heads, size, cfg.head_dim_)
+    pos_shape = (batch,) if per_example_pos else ()
+    cache = {"pos": jnp.zeros(pos_shape, jnp.int32)}
+    if cfg.kv_quant:
+        cache.update({
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float16),
+            "v_scale": jnp.zeros(shape[:3], jnp.float16),
+        })
+    else:
+        cache.update({"k": jnp.zeros(shape, dtype),
+                      "v": jnp.zeros(shape, dtype)})
+    return cache
+
+
+CACHE_AXES = ("act_batch", "act_kv_heads", "act_kv_seq", None)
+
+
+def cache_axes(quant: bool = False) -> Dict[str, tuple]:
+    """Logical axes of the cache (for dry-run in_shardings)."""
+    # pos is scalar in the uniform-wave (dry-run) states; the per-example
+    # engine variant never goes through tree_shardings.
+    ax = {"k": CACHE_AXES, "v": CACHE_AXES, "pos": ()}
+    if quant:
+        ax["k_scale"] = CACHE_AXES[:3]
+        ax["v_scale"] = CACHE_AXES[:3]
+    return ax
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., hd) -> (int8 payload, f16 max-abs scale over hd)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def decode_attention(p, x: jax.Array, cfg: ArchConfig, cache: Dict,
+                     *, window: int = 0, use_rope: bool = True
+                     ) -> Tuple[jax.Array, Dict]:
+    """One-token attention against a (possibly ring-buffered) KV cache.
+
+    x: (B, 1, D).  GQA einsum form (no kv repeat); the cache shards over
+    kv-heads when divisible, else over its sequence dim (flash-decode-style
+    parallelism).  Positions are per-example (continuous batching admits
+    requests at different depths).
+    """
+    B, T, _ = x.shape
+    assert T == 1, "decode_attention processes one new token"
+    pos = cache["pos"]          # (B,) per-example, or scalar (uniform wave)
+    uniform = pos.ndim == 0
+    positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (B, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, use_rope)
+    Kv, G = cfg.num_kv_heads, cfg.q_per_kv
+    S = cache["k"].shape[2]
+    slot = jnp.mod(pos, S) if window > 0 else jnp.minimum(pos, S - 1)
+    new_cache = dict(cache)
+
+    def write(buf, val):
+        """Insert one token at `slot` along the cache sequence dim."""
+        if uniform:
+            # dynamic_update_slice aliases in place (production decode
+            # waves advance uniformly; the per-example scatter path below
+            # is kept for continuous batching at ragged depths).
+            v4 = val[:, :, None] if val.ndim == 3 else val[:, :, None, ...]
+            start = (0, 0, slot) + (0,) * (buf.ndim - 3)
+            return jax.lax.dynamic_update_slice(buf, v4.astype(buf.dtype),
+                                                start)
+        bidx = jnp.arange(B)[:, None]
+        kidx = jnp.arange(Kv)[None, :]
+        return buf.at[bidx, kidx, slot[:, None]].set(val.astype(buf.dtype))
+
+    if cfg.kv_quant:
+        k8, ks = quantize_kv(k_new[:, 0])             # (B,Kv,hd),(B,Kv)
+        v8, vs = quantize_kv(v_new[:, 0])
+        k = write(cache["k"], k8)
+        v = write(cache["v"], v8)
+        k_scale = write(cache["k_scale"], ks)
+        v_scale = write(cache["v_scale"], vs)
+        new_cache.update({"k": k, "v": v, "k_scale": k_scale,
+                          "v_scale": v_scale})
+    else:
+        k = write(cache["k"], k_new[:, 0])
+        v = write(cache["v"], v_new[:, 0])
+        new_cache.update({"k": k, "v": v})
+    k = shard(k, CACHE_AXES)
+    v = shard(v, CACHE_AXES)
+
+    qg = q.reshape(B, 1, Kv, G, cfg.head_dim_)
+    scores = jnp.einsum("btkgh,bksh->bkgts", qg, k,
+                        preferred_element_type=jnp.float32)
+    if cfg.kv_quant:
+        # fold the per-slot key scale into the logits (dequant-free dot)
+        scores = scores * k_scale.astype(jnp.float32)[:, :, None, None, :]
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    slot_ids = jnp.arange(S, dtype=jnp.int32)
+    pb = jnp.reshape(pos, (-1, 1))                    # (B,1) or (1,1)
+    if window > 0:
+        # slot i holds global position p_i = pos - ((pos - i) mod S); valid
+        # slots cover (pos - S, pos].
+        p_i = pb - jnp.mod(pb - slot_ids[None, :], S)
+        valid = p_i >= 0
+    else:
+        valid = slot_ids[None, :] <= pb
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if cfg.kv_quant:
+        # fold the value scale into the softmax weights, dot in int8 payload
+        w = (w * v_scale.astype(jnp.float32)[:, :, None, None, :]).astype(
+            jnp.bfloat16)
+        out = jnp.einsum("bkgts,bksh->btkgh", w, v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        w = w.astype(q.dtype)
+        out = jnp.einsum("bkgts,bksh->btkgh", w, v)
+    out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim_)
+    out = jnp.einsum("bthk,hkd->btd", out, p["w_o"].astype(x.dtype))
+    new_cache["pos"] = pos + 1
+    return shard(out, ("act_batch", "act_seq", "act_embed")), new_cache
+
+
+# ----------------------------- cross attention ------------------------------- #
+
+def cross_attn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    return attn_specs(cfg)
+
+
+def cross_attention(p, x: jax.Array, cfg: ArchConfig,
+                    enc_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder->encoder attention (whisper); enc k/v precomputed."""
+    dt = x.dtype
+    B = x.shape[0]
+    positions = jnp.zeros((B, x.shape[1]), jnp.int32)
+    q, _, _ = _project_qkv(p, x, cfg, positions, use_rope=False)
+    k, v = enc_kv
+    rep = cfg.q_per_kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    mask = jnp.ones((B, 1, x.shape[1], k.shape[1]), dtype=bool)
+    out = _mha(q, k.astype(dt), v.astype(dt), mask, cfg)
+    out = jnp.einsum("bthk,hkd->btd", out, p["w_o"].astype(dt))
+    return shard(out, ("act_batch", "act_seq", "act_embed"))
+
+
+def encode_cross_kv(p, enc_out: jax.Array, cfg: ArchConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention k/v from encoder output."""
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["w_k"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["w_v"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    return k, v
+
+
+# --------------------------------------------------------------------------- #
+# positional embeddings (whisper)
+# --------------------------------------------------------------------------- #
+
+def sinusoidal_embeddings(length: int, d: int, dtype=jnp.float32) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / (half - 1))
+    angles = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)],
+                           axis=-1).astype(dtype)

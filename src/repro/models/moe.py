@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer (GShard-style grouped capacity-factor dispatch).
+
+Design (DESIGN.md §4): tokens are split into *groups* (GShard's trick) so the
+dispatch one-hot is (B, G, Sg, E, Cg) with total size B·T·k·cf·Sg — linear in
+group size instead of quadratic in sequence length.  Every einsum keeps the
+batch dim, so tokens stay sharded over ``(pod, data)`` and experts over
+``model``; the cross-device traffic XLA inserts is the standard combine
+all-reduce over `model` (same shape as a dense-TP FFN), visible in the
+dry-run HLO.
+
+Supports:
+  * top-k routing, softmax-renormalized over the chosen experts,
+  * per-group capacity-factor token dropping,
+  * shared experts (DeepSeekMoE: always-on experts added to routed output),
+  * the switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamSpec
+
+MOE_GROUP_SIZE = 512   # tokens per dispatch group (GShard "groups")
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    specs: Dict[str, ParamSpec] = {
+        "w_router": ParamSpec((d, e), ("embed", "expert")),
+        "w_gate": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "w_up": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "w_down": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = f * cfg.n_shared_experts
+        specs["shared_gate"] = ParamSpec((d, fs), ("embed", "mlp"))
+        specs["shared_up"] = ParamSpec((d, fs), ("embed", "mlp"))
+        specs["shared_down"] = ParamSpec((fs, d), ("mlp", "embed"))
+    return specs
+
+
+def group_capacity(cfg: ArchConfig, group_len: int) -> int:
+    cap = int(group_len * cfg.experts_per_token * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(cap, cfg.experts_per_token)
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss)."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    Sg = min(MOE_GROUP_SIZE, T)
+    assert T % Sg == 0, f"seq {T} not divisible by MoE group {Sg}"
+    G = T // Sg
+    C = group_capacity(cfg, Sg)
+    dt = x.dtype
+
+    xg = x.reshape(B, G, Sg, D)
+    router_logits = jnp.einsum("bgsd,de->bgse", xg, p["w_router"].astype(dt))
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (B,G,Sg,K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=(0, 1, 2))                    # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1, 2))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # Capacity positions: tokens in order, k-choices in order, per group.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)   # (B,G,Sg,K,E)
+    flat = onehot.reshape(B, G, Sg * K, E)
+    pos_flat = jnp.cumsum(flat, axis=2) - flat
+    pos = pos_flat.reshape(B, G, Sg, K, E)
+    within = pos < C
+    keep = onehot * within                                    # dropped -> 0
+    # Compact over the k axis (an expert is picked at most once per token).
+    keep_te = jnp.sum(keep, axis=3)                           # (B,G,Sg,E)
+    pos_te = jnp.sum(pos * keep, axis=3).astype(jnp.int32)
+    gate_te = jnp.sum(gate_vals[..., None] * keep, axis=3)    # (B,G,Sg,E)
+    slot = jax.nn.one_hot(pos_te, C, dtype=jnp.float32)       # (B,G,Sg,E,C)
+    dispatch = (keep_te[..., None] * slot).astype(dt)
+    combine = (gate_te[..., None] * slot).astype(dt)
+    dispatch = shard(dispatch, ("act_batch", None, None, "act_expert", None))
+    combine = shard(combine, ("act_batch", None, None, "act_expert", None))
+
+    # Dispatch -> per-expert FFN -> combine (batch dim kept throughout).
+    xe = jnp.einsum("bgsec,bgsd->bgecd", dispatch, xg)        # (B,G,E,C,D)
+    xe = shard(xe, ("act_batch", None, "act_expert", None, None))
+    g = jnp.einsum("bgecd,edf->bgecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("bgecd,edf->bgecf", xe, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("bgecf,efd->bgecd", h, p["w_down"].astype(dt))
+    ye = shard(ye, ("act_batch", None, "act_expert", None, None))
+    out = jnp.einsum("bgsec,bgecd->bgsd", combine, ye).reshape(B, T, D)
+
+    if cfg.n_shared_experts > 0:
+        gs = jnp.einsum("btd,df->btf", x, p["shared_gate"].astype(dt))
+        us = jnp.einsum("btd,df->btf", x, p["shared_up"].astype(dt))
+        hs = shard(jax.nn.silu(gs) * us, ("act_batch", None, "act_mlp"))
+        out = out + jnp.einsum("btf,fd->btd", hs, p["shared_down"].astype(dt))
+
+    return (shard(out, ("act_batch", "act_seq", "act_embed")),
+            aux.astype(jnp.float32))

@@ -1,0 +1,89 @@
+"""Parameter specs: shapes + logical sharding axes + initializers.
+
+Each layer module declares ``specs(cfg) -> {name: ParamSpec}``; the model
+assembles a nested spec tree from which we derive
+  * initialized parameters (`init_params`),
+  * `jax.ShapeDtypeStruct`s for allocation-free dry-run lowering
+    (`param_shapes`),
+  * the logical-axes tree consumed by `repro.distributed.sharding`
+    (`param_axes`).
+
+Stacked (scanned) segments prepend a `"layer"` axis to every spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | rglru_lambda
+    scale: float = 1.0            # stddev multiplier for "normal"
+    dtype: Optional[str] = None   # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def stacked(self, n: int) -> "ParamSpec":
+        return dataclasses.replace(self, shape=(n,) + self.shape,
+                                   axes=("layer",) + self.axes)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    return shape[0] if len(shape) <= 1 else int(np.prod(shape[:-1]))
+
+
+def _init_leaf(key, spec: ParamSpec, default_dtype: str) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype or default_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "rglru_lambda":
+        # Griffin Λ init: a = exp(-c·softplus(Λ)) uniform in [0.9, 0.999].
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               0.9 ** 2, 0.999 ** 2)
+        lam = jnp.log(jnp.expm1(-0.5 * jnp.log(u) / 8.0))
+        return lam.astype(dtype)
+    std = spec.scale / math.sqrt(max(_fan_in(spec.shape), 1))
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(rng: jax.Array, specs, param_dtype: str = "float32"):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    inited = [_init_leaf(k, s, param_dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, inited)
+
+
+def param_shapes(specs, param_dtype: str = "float32"):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype or param_dtype)),
+        specs, is_leaf=is_spec)
+
+
+def param_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def stack_specs(specs, n: int):
+    """Prepend the scan ('layer') axis to every spec in a subtree."""
+    return jax.tree.map(lambda s: s.stacked(n), specs, is_leaf=is_spec)

@@ -1,0 +1,631 @@
+"""Unified model assembly: all 10 assigned architectures build from here.
+
+A model is: token embedding (+ modality-stub inputs), a list of *segments*
+(scanned homogeneous superblocks, see `configs.base`), final norm, LM head.
+Three execution modes share one block implementation:
+
+  * ``forward_train``  — full-sequence teacher forcing; returns (logits, aux).
+  * ``prefill``        — full sequence + per-layer decode state extraction.
+  * ``decode_step``    — one new token against the decode state.
+
+Whisper adds an encoder tower; InternVL2 prepends stubbed patch embeddings.
+Scanned segments use ``jax.lax.scan`` over stacked params (compile time and
+HBM friendly); training wraps the scan body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec, Segment
+from repro.distributed.sharding import shard
+from repro.models import layers, moe, rglru, xlstm
+from repro.models.params import ParamSpec, stack_specs
+
+VOCAB_PAD_MULTIPLE = 512   # Megatron-style padding so `vocab` shards cleanly
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    v, m = cfg.vocab_size, VOCAB_PAD_MULTIPLE
+    return (v + m - 1) // m * m
+
+
+# --------------------------------------------------------------------------- #
+# specs
+# --------------------------------------------------------------------------- #
+
+def _block_specs(blk: BlockSpec, cfg: ArchConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {"norm1": layers.norm_specs(cfg)}
+    if blk.mixer in ("attn", "local_attn"):
+        specs["mixer"] = layers.attn_specs(cfg)
+    elif blk.mixer == "mlstm":
+        specs["mixer"] = xlstm.mlstm_specs(cfg)
+    elif blk.mixer == "slstm":
+        specs["mixer"] = xlstm.slstm_specs(cfg)
+    elif blk.mixer == "rglru":
+        specs["mixer"] = rglru.rglru_specs(cfg)
+    else:
+        raise ValueError(blk.mixer)
+    if blk.cross_attn:
+        specs["norm_cross"] = layers.norm_specs(cfg)
+        specs["cross"] = layers.cross_attn_specs(cfg)
+    if blk.mlp == "dense":
+        ff = None
+        if cfg.n_experts > 0 and cfg.dense_d_ff:
+            ff = cfg.dense_d_ff
+        if not cfg.parallel_block:
+            specs["norm2"] = layers.norm_specs(cfg)
+        specs["mlp"] = layers.mlp_specs(cfg, ff)
+    elif blk.mlp == "moe":
+        specs["norm2"] = layers.norm_specs(cfg)
+        specs["mlp"] = moe.moe_specs(cfg)
+    return specs
+
+
+def _tower_specs(plan: List[Segment], cfg: ArchConfig) -> List[Dict]:
+    out = []
+    for seg in plan:
+        seg_specs = {f"block{j}": _block_specs(blk, cfg)
+                     for j, blk in enumerate(seg.blocks)}
+        if seg.repeats > 1:
+            seg_specs = stack_specs(seg_specs, seg.repeats)
+        out.append(seg_specs)
+    return out
+
+
+def model_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, vp = cfg.d_model, padded_vocab(cfg)
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": layers.norm_specs(cfg),
+        "segments": _tower_specs(cfg.layer_plan(), cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, vp), ("embed", "vocab"))
+    if cfg.is_encoder_decoder:
+        specs["encoder"] = {
+            "segments": _tower_specs(cfg.encoder_plan(), cfg),
+            "final_norm": layers.norm_specs(cfg),
+        }
+    return specs
+
+
+# --------------------------------------------------------------------------- #
+# block application (train / prefill / decode share this)
+# --------------------------------------------------------------------------- #
+
+def _apply_mixer(blk: BlockSpec, p, h, cfg, positions, causal):
+    if blk.mixer == "attn":
+        return layers.attention(p["mixer"], h, cfg, positions=positions,
+                                causal=causal, use_rope=cfg.use_rope)
+    if blk.mixer == "local_attn":
+        return layers.attention(p["mixer"], h, cfg, positions=positions,
+                                causal=causal, window=cfg.sliding_window,
+                                use_rope=cfg.use_rope)
+    if blk.mixer == "mlstm":
+        return xlstm.apply_mlstm(p["mixer"], h, cfg)
+    if blk.mixer == "slstm":
+        return xlstm.apply_slstm(p["mixer"], h, cfg)
+    if blk.mixer == "rglru":
+        return rglru.apply_rglru(p["mixer"], h, cfg)
+    raise ValueError(blk.mixer)
+
+
+def apply_block(blk: BlockSpec, p, x, cfg: ArchConfig, *, positions,
+                causal: bool = True, enc_out=None):
+    """Training/encoder forward. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    mix = _apply_mixer(blk, p, h, cfg, positions, causal)
+    if cfg.parallel_block and blk.mlp == "dense":
+        x = x + mix + layers.apply_mlp(p["mlp"], h, cfg)
+        return x, aux
+    x = x + mix
+    if blk.cross_attn:
+        assert enc_out is not None
+        hc = layers.apply_norm(p["norm_cross"], x, cfg)
+        kv = layers.encode_cross_kv(p["cross"], enc_out, cfg)
+        x = x + layers.cross_attention(p["cross"], hc, cfg, kv)
+    if blk.mlp == "dense":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        x = x + layers.apply_mlp(p["mlp"], h2, cfg)
+    elif blk.mlp == "moe":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        y, aux_moe = moe.apply_moe(p["mlp"], h2, cfg)
+        x = x + y
+        aux = aux + aux_moe
+    return x, aux
+
+
+# ----------------------------- decode state ---------------------------------- #
+
+def init_block_state(blk: BlockSpec, cfg: ArchConfig, batch: int,
+                     cache_len: int, dtype=jnp.bfloat16,
+                     per_example_pos: bool = True) -> Dict:
+    if blk.mixer == "attn":
+        st = layers.init_kv_cache(cfg, batch, cache_len, dtype=dtype,
+                                  per_example_pos=per_example_pos)
+    elif blk.mixer == "local_attn":
+        st = layers.init_kv_cache(cfg, batch, cache_len,
+                                  window=cfg.sliding_window, dtype=dtype,
+                                  per_example_pos=per_example_pos)
+    elif blk.mixer == "mlstm":
+        st = xlstm.mlstm_decode_init(cfg, batch)
+    elif blk.mixer == "slstm":
+        st = xlstm.slstm_decode_init(cfg, batch)
+    elif blk.mixer == "rglru":
+        st = rglru.rglru_decode_init(cfg, batch)
+    else:
+        raise ValueError(blk.mixer)
+    if blk.cross_attn:
+        hd = cfg.head_dim_
+        st = dict(st)
+        st["cross_k"] = jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads,
+                                   hd), dtype)
+        st["cross_v"] = jnp.zeros((batch, cfg.encoder_seq, cfg.num_kv_heads,
+                                   hd), dtype)
+    return st
+
+
+def block_state_axes(blk: BlockSpec, cfg: ArchConfig) -> Dict:
+    """Logical axes for decode state (dry-run in_shardings)."""
+    if blk.mixer in ("attn", "local_attn"):
+        ax = layers.cache_axes(cfg.kv_quant)
+    elif blk.mixer == "mlstm":
+        ax = {"C": ("act_batch", "act_heads", None, None),
+              "n": ("act_batch", "act_heads", None),
+              "m": ("act_batch", "act_heads"),
+              "conv": ("act_batch", None, "act_rnn")}
+    elif blk.mixer == "slstm":
+        ax = {k: ("act_batch", "act_rnn") for k in ("c", "n", "m", "h")}
+    elif blk.mixer == "rglru":
+        ax = {"h": ("act_batch", "act_rnn"),
+              "conv": ("act_batch", None, "act_rnn")}
+    else:
+        raise ValueError(blk.mixer)
+    if blk.cross_attn:
+        ax = dict(ax)
+        ax["cross_k"] = ("act_batch", None, "act_kv_heads", None)
+        ax["cross_v"] = ("act_batch", None, "act_kv_heads", None)
+    return ax
+
+
+def apply_block_decode(blk: BlockSpec, p, x, cfg: ArchConfig, state: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    cross = {k: state[k] for k in ("cross_k", "cross_v") if k in state}
+    core = {k: v for k, v in state.items() if k not in cross}
+    if blk.mixer == "attn":
+        mix, core = layers.decode_attention(p["mixer"], h, cfg, core,
+                                            use_rope=cfg.use_rope)
+    elif blk.mixer == "local_attn":
+        mix, core = layers.decode_attention(p["mixer"], h, cfg, core,
+                                            window=cfg.sliding_window,
+                                            use_rope=cfg.use_rope)
+    elif blk.mixer == "mlstm":
+        mix, core = xlstm.apply_mlstm_decode(p["mixer"], h, cfg, core)
+    elif blk.mixer == "slstm":
+        mix, core = xlstm.apply_slstm_decode(p["mixer"], h, cfg, core)
+    elif blk.mixer == "rglru":
+        mix, core = rglru.apply_rglru_decode(p["mixer"], h, cfg, core)
+    else:
+        raise ValueError(blk.mixer)
+    if cfg.parallel_block and blk.mlp == "dense":
+        x = x + mix + layers.apply_mlp(p["mlp"], h, cfg)
+        return x, {**core, **cross}
+    x = x + mix
+    if blk.cross_attn:
+        hc = layers.apply_norm(p["norm_cross"], x, cfg)
+        x = x + layers.cross_attention(p["cross"], hc, cfg,
+                                       (cross["cross_k"], cross["cross_v"]))
+    if blk.mlp == "dense":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        x = x + layers.apply_mlp(p["mlp"], h2, cfg)
+    elif blk.mlp == "moe":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        y, _ = moe.apply_moe(p["mlp"], h2, cfg)
+        x = x + y
+    return x, {**core, **cross}
+
+
+def apply_block_prefill(blk: BlockSpec, p, x, cfg: ArchConfig, *, positions,
+                        cache_len: int, enc_out=None
+                        ) -> Tuple[jax.Array, Dict]:
+    """Forward + decode-state extraction (serving prefill)."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    state: Dict = {}
+    if blk.mixer in ("attn", "local_attn"):
+        window = cfg.sliding_window if blk.mixer == "local_attn" else 0
+        # recompute k/v (roped) to fill the cache buffer
+        q, k, v = layers._project_qkv(p["mixer"], h, cfg, positions,
+                                      cfg.use_rope)
+        k = k.swapaxes(1, 2)          # -> (B, Kv, S, hd) cache layout
+        v = v.swapaxes(1, 2)
+        cache = layers.init_kv_cache(cfg, B, cache_len, window=window,
+                                     dtype=dt)
+        if cfg.kv_quant:
+            k, ks_ = layers.quantize_kv(k)
+            v, vs_ = layers.quantize_kv(v)
+        W = cache["k"].shape[2]
+        if window > 0 and S > W:
+            ks, vs = k[:, :, S - W:], v[:, :, S - W:]
+            slot0 = (S - W) % W
+            # ring write: split at the wrap point
+            first = W - slot0
+            cache["k"] = cache["k"].at[:, :, slot0:].set(ks[:, :, :first]) \
+                                    .at[:, :, :W - first].set(ks[:, :, first:])
+            cache["v"] = cache["v"].at[:, :, slot0:].set(vs[:, :, :first]) \
+                                    .at[:, :, :W - first].set(vs[:, :, first:])
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            if cfg.kv_quant:
+                cache["k_scale"] = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks_, (0, 0, 0))
+                cache["v_scale"] = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs_, (0, 0, 0))
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        state = cache
+        mix = layers.attention(p["mixer"], h, cfg, positions=positions,
+                               causal=True, window=window,
+                               use_rope=cfg.use_rope)
+    elif blk.mixer == "mlstm":
+        qq, kk, vv, i_raw, f_raw, gate, _, _ = xlstm._mlstm_qkv(
+            p["mixer"], h, cfg)
+        hh, (C, n, m) = xlstm._mlstm_chunkwise(qq, kk, vv, i_raw, f_raw)
+        mix = xlstm._mlstm_out(p["mixer"], hh.astype(dt), gate, cfg, dt)
+        d_up = int(cfg.d_model * cfg.proj_factor)
+        up = jnp.einsum("btd,du->btu", h, p["mixer"]["w_up"].astype(dt))
+        conv_tail = up[:, -(cfg.conv_width - 1):, :]
+        state = {"C": C, "n": n, "m": m, "conv": conv_tail}
+    elif blk.mixer == "slstm":
+        # sequential anyway: run the scan and keep the final state
+        mix = xlstm.apply_slstm(p["mixer"], h, cfg)
+        state = _slstm_final_state(p["mixer"], h, cfg)
+    elif blk.mixer == "rglru":
+        mix, state = _rglru_prefill(p["mixer"], h, cfg)
+    else:
+        raise ValueError(blk.mixer)
+
+    if cfg.parallel_block and blk.mlp == "dense":
+        x = x + mix + layers.apply_mlp(p["mlp"], h, cfg)
+        return x, state
+    x = x + mix
+    if blk.cross_attn:
+        assert enc_out is not None
+        hc = layers.apply_norm(p["norm_cross"], x, cfg)
+        ck, cv = layers.encode_cross_kv(p["cross"], enc_out, cfg)
+        x = x + layers.cross_attention(p["cross"], hc, cfg, (ck, cv))
+        state = dict(state)
+        state["cross_k"], state["cross_v"] = ck.astype(dt), cv.astype(dt)
+    if blk.mlp == "dense":
+        x = x + layers.apply_mlp(p["mlp"],
+                                 layers.apply_norm(p["norm2"], x, cfg), cfg)
+    elif blk.mlp == "moe":
+        y, _ = moe.apply_moe(p["mlp"],
+                             layers.apply_norm(p["norm2"], x, cfg), cfg)
+        x = x + y
+    return x, state
+
+
+def _slstm_final_state(p, h, cfg):
+    B, T, D = h.shape
+    f32 = jnp.float32
+    state0 = (jnp.zeros((B, D), f32), jnp.zeros((B, D), f32),
+              jnp.full((B, D), -1e30, f32), jnp.zeros((B, D), f32))
+
+    def step(state, xt):
+        gates = xlstm._slstm_gates(p, xt, state[3], cfg)
+        new = xlstm._slstm_cell(gates, state)
+        return new, None
+
+    (c, n, m, hh), _ = jax.lax.scan(step, state0, jnp.moveaxis(h, 1, 0))
+    return {"c": c, "n": n, "m": m, "h": hh}
+
+
+def _rglru_prefill(p, x, cfg):
+    dt = x.dtype
+    branch = jnp.einsum("btd,dr->btr", x, p["w_in"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("btd,dr->btr", x,
+                                  p["w_gate_branch"].astype(dt)))
+    xc = rglru.causal_conv1d(p["conv"], branch)
+    h = rglru.rglru_scan(p, xc, cfg)
+    y = h * gate
+    out = jnp.einsum("btr,rd->btd", y, p["w_out"].astype(dt))
+    state = {"h": h[:, -1].astype(jnp.float32),
+             "conv": branch[:, -(cfg.conv_width - 1):, :]}
+    return shard(out, ("act_batch", "act_seq", "act_embed")), state
+
+
+# --------------------------------------------------------------------------- #
+# towers (segment execution)
+# --------------------------------------------------------------------------- #
+
+def _segment_axes(cfg: ArchConfig, plan: List[Segment]) -> List:
+    """Per-segment logical-axes trees for one *layer slice* (no stack dim)."""
+    from repro.models.params import param_axes
+    return [param_axes({f"block{j}": _block_specs(blk, cfg)
+                        for j, blk in enumerate(seg.blocks)})
+            for seg in plan]
+
+
+def _shard_layer_params(layer_p, seg_axes):
+    """Re-assert parameter shardings on a scanned layer slice.  Without this
+    the SPMD partitioner hoists the FSDP all-gather out of the layer loop and
+    materializes *every* layer's gathered weights at once (measured: +5 GiB
+    on command-r-35b train_4k)."""
+    from repro.distributed.sharding import current_ctx, shard
+    if current_ctx() is None:
+        return layer_p
+    return jax.tree.map(lambda p, ax: shard(p, ax), layer_p, seg_axes)
+
+
+def _run_tower_train(segments_p, plan: List[Segment], x, cfg, positions,
+                     causal=True, enc_out=None, remat: bool = True,
+                     seg_axes: Optional[List] = None):
+    aux = jnp.zeros((), jnp.float32)
+    for si, (seg, seg_p) in enumerate(zip(plan, segments_p)):
+        def superblock(xx, layer_p):
+            if seg_axes is not None:
+                layer_p = _shard_layer_params(layer_p, seg_axes[si])
+            ax = jnp.zeros((), jnp.float32)
+            for j, blk in enumerate(seg.blocks):
+                xx, a = apply_block(blk, layer_p[f"block{j}"], xx, cfg,
+                                    positions=positions, causal=causal,
+                                    enc_out=enc_out)
+                ax = ax + a
+            return xx, ax
+
+        if cfg.gather_dtype:
+            # cast the stacked layer params once (sharded, local) so every
+            # FSDP all-gather inside the scan moves gather_dtype bytes
+            gd = jnp.dtype(cfg.gather_dtype)
+            seg_p = jax.tree.map(
+                lambda v: v.astype(gd) if v.dtype == jnp.float32 else v,
+                seg_p)
+        body = jax.checkpoint(superblock) if remat else superblock
+        if seg.repeats > 1 and not cfg.unroll_layers:
+            x, auxes = jax.lax.scan(body, x, seg_p)
+            aux = aux + jnp.sum(auxes)
+        elif seg.repeats > 1:
+            for i in range(seg.repeats):
+                x, a = body(x, jax.tree.map(lambda v: v[i], seg_p))
+                aux = aux + a
+        else:
+            x, a = body(x, seg_p)
+            aux = aux + a
+    return x, aux
+
+
+def _run_tower_prefill(segments_p, plan, x, cfg, positions, cache_len,
+                       enc_out=None):
+    states: List[Any] = []
+    for seg, seg_p in zip(plan, segments_p):
+        def superblock(xx, layer_p):
+            sts = {}
+            for j, blk in enumerate(seg.blocks):
+                xx, st = apply_block_prefill(blk, layer_p[f"block{j}"], xx,
+                                             cfg, positions=positions,
+                                             cache_len=cache_len,
+                                             enc_out=enc_out)
+                sts[f"block{j}"] = st
+            return xx, sts
+
+        if seg.repeats > 1 and not cfg.unroll_layers:
+            x, seg_states = jax.lax.scan(superblock, x, seg_p)
+        elif seg.repeats > 1:
+            reps = []
+            for i in range(seg.repeats):
+                x, st = superblock(x, jax.tree.map(lambda v: v[i], seg_p))
+                reps.append(st)
+            seg_states = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+        else:
+            x, seg_states = superblock(x, seg_p)
+        states.append(seg_states)
+    return x, states
+
+
+def _run_tower_decode(segments_p, plan, x, cfg, states):
+    new_states: List[Any] = []
+    for seg, seg_p, seg_st in zip(plan, segments_p, states):
+        def superblock(xx, layer):
+            layer_p, layer_st = layer
+            sts = {}
+            for j, blk in enumerate(seg.blocks):
+                xx, st = apply_block_decode(blk, layer_p[f"block{j}"], xx,
+                                            cfg, layer_st[f"block{j}"])
+                sts[f"block{j}"] = st
+            return xx, sts
+
+        if seg.repeats > 1:
+            # Always unrolled, with in-place write-back: a lax.scan over
+            # (cache_in -> cache_out) keeps BOTH full stacked caches live
+            # (xs and ys buffers), and re-stacking per-layer outputs does
+            # too — instead each layer's updated state is written back into
+            # the original stacked buffer with dynamic_update_slice, a chain
+            # XLA buffer-aliases in place.
+            seg_new = seg_st
+            for i in range(seg.repeats):
+                layer_p = jax.tree.map(lambda v: v[i], seg_p)
+                layer_st = jax.tree.map(lambda v: v[i], seg_new)
+                x, st = superblock(x, (layer_p, layer_st))
+                seg_new = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                        full, new[None].astype(full.dtype), i, axis=0),
+                    seg_new, st)
+        else:
+            x, seg_new = superblock(x, (seg_p, seg_st))
+        new_states.append(seg_new)
+    return x, new_states
+
+
+# --------------------------------------------------------------------------- #
+# model entry points
+# --------------------------------------------------------------------------- #
+
+def _embed_inputs(params, batch: Dict, cfg: ArchConfig) -> jax.Array:
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    if cfg.family == "vlm" and "pixel_embeds" in batch:
+        x = jnp.concatenate([batch["pixel_embeds"].astype(dt), x], axis=1)
+    if cfg.family == "hybrid":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)   # gemma-style scale
+    if not cfg.use_rope:
+        # sinusoidal absolute positions (whisper-style backbone adaptation)
+        pos = layers.sinusoidal_embeddings(x.shape[1], cfg.d_model, dtype=dt)
+        x = x + pos[None]
+    return shard(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def _cache_pos(states: List) -> jax.Array:
+    """Per-example decode positions (B,), read off the first attention cache
+    (possibly stacked with a leading scan axis)."""
+    for seg_states in states:
+        for st in seg_states.values():
+            if isinstance(st, dict) and "pos" in st:
+                p = st["pos"]
+                return jnp.reshape(p, (-1,))[:1][0] if p.ndim <= 1 \
+                    else p.reshape(-1, p.shape[-1])[0]
+    raise ValueError("no attention cache in decode state")
+
+
+def _encode(params, batch, cfg: ArchConfig, remat=True):
+    """Whisper encoder over stubbed frame embeddings."""
+    dt = jnp.dtype(cfg.dtype)
+    frames = batch["audio_embeds"].astype(dt)       # (B, S_enc, D)
+    S = frames.shape[1]
+    pos = layers.sinusoidal_embeddings(S, cfg.d_model, dtype=dt)
+    x = frames + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (frames.shape[0], S))
+    enc = params["encoder"]
+    x, _ = _run_tower_train(enc["segments"], cfg.encoder_plan(), x, cfg,
+                            positions, causal=False, remat=remat,
+                            seg_axes=_segment_axes(cfg, cfg.encoder_plan()))
+    return layers.apply_norm(enc["final_norm"], x, cfg)
+
+
+def _lm_logits(params, x, cfg: ArchConfig) -> jax.Array:
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x,
+                            params["lm_head"].astype(x.dtype))
+    return shard(logits, ("act_batch", None, "act_vocab"))
+
+
+def forward_hidden(params, batch: Dict, cfg: ArchConfig, *,
+                   remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Full tower up to (and including) the final norm: (x, aux_loss).
+    Used by the fused chunked-CE training path (never builds full logits)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    enc_out = _encode(params, batch, cfg, remat=remat) \
+        if cfg.is_encoder_decoder else None
+    x, aux = _run_tower_train(params["segments"], cfg.layer_plan(), x, cfg,
+                              positions, causal=True, enc_out=enc_out,
+                              remat=remat,
+                              seg_axes=_segment_axes(cfg, cfg.layer_plan()))
+    return layers.apply_norm(params["final_norm"], x, cfg), aux
+
+
+def head_weights(params, cfg: ArchConfig) -> jax.Array:
+    """(D, Vp) output projection (shared with the embedding when tied)."""
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def forward_train(params, batch: Dict, cfg: ArchConfig, *, remat: bool = True
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,T,Vp), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    enc_out = _encode(params, batch, cfg, remat=remat) \
+        if cfg.is_encoder_decoder else None
+    x, aux = _run_tower_train(params["segments"], cfg.layer_plan(), x, cfg,
+                              positions, causal=True, enc_out=enc_out,
+                              remat=remat,
+                              seg_axes=_segment_axes(cfg, cfg.layer_plan()))
+    return _lm_logits(params, x, cfg), aux
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, per_example_pos: bool = True
+                      ) -> List:
+    states = []
+    for seg in cfg.layer_plan():
+        seg_states = {}
+        for j, blk in enumerate(seg.blocks):
+            st = init_block_state(blk, cfg, batch, cache_len, dtype,
+                                  per_example_pos=per_example_pos)
+            if seg.repeats > 1:
+                st = jax.tree.map(
+                    lambda v: jnp.broadcast_to(v[None], (seg.repeats,) + v.shape),
+                    st)
+            seg_states[f"block{j}"] = st
+        states.append(seg_states)
+    return states
+
+
+def decode_state_axes(cfg: ArchConfig) -> List:
+    axes = []
+    for seg in cfg.layer_plan():
+        seg_axes = {}
+        for j, blk in enumerate(seg.blocks):
+            ax = block_state_axes(blk, cfg)
+            if seg.repeats > 1:
+                ax = jax.tree.map(lambda a: ("layer",) + a, ax,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+            seg_axes[f"block{j}"] = ax
+        axes.append(seg_axes)
+    return axes
+
+
+def prefill(params, batch: Dict, cfg: ArchConfig, cache_len: int
+            ) -> Tuple[jax.Array, List]:
+    """Full-sequence forward + decode-state construction.
+    Returns (last-position logits (B, Vp), states)."""
+    x = _embed_inputs(params, batch, cfg)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    enc_out = _encode(params, batch, cfg, remat=False) \
+        if cfg.is_encoder_decoder else None
+    x, states = _run_tower_prefill(params["segments"], cfg.layer_plan(), x,
+                                   cfg, positions, cache_len, enc_out=enc_out)
+    logits = _lm_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], states
+
+
+def decode_step(params, tokens: jax.Array, states: List, cfg: ArchConfig
+                ) -> Tuple[jax.Array, List]:
+    """tokens: (B, 1) -> (logits (B, Vp), new states)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    if cfg.family == "hybrid":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if not cfg.use_rope:
+        pos = _cache_pos(states)                       # (B,) or scalar
+        half = cfg.d_model // 2
+        freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / (half - 1))
+        angles = jnp.reshape(pos, (-1, 1)).astype(jnp.float32) * freqs[None]
+        pe = jnp.concatenate([jnp.sin(angles), jnp.cos(angles)],
+                             axis=-1).astype(dt)
+        x = x + pe[:, None, :]
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+    x, new_states = _run_tower_decode(params["segments"], cfg.layer_plan(),
+                                      x, cfg, states)
+    logits = _lm_logits(params, x, cfg)
+    return logits[:, 0], new_states

@@ -1,0 +1,304 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM recurrence (per head, stabilized in log space):
+    C_t = f_t C_{t-1} + i_t  v_t k_t^T          (matrix memory, dk × dv)
+    n_t = f_t n_{t-1} + i_t  k_t                 (normalizer)
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+with exponential input gate i_t = exp(ĩ_t), forget gate f_t = σ(f̃_t), and
+running stabilizer m_t.  Training uses the chunkwise-parallel form: an outer
+``lax.scan`` carries (C, n, m) across chunks; within a chunk everything is a
+masked attention-like einsum with cumulative log-gates.  Decode is the plain
+one-step recurrence.
+
+Block structure (mLSTM): x → norm → up-proj (×proj_factor) with a SiLU gate
+branch; causal conv1d(4) feeds q/k; cell output is gated and down-projected.
+d_ff = 0 in the assigned config: there is no separate FFN block.
+
+sLSTM keeps per-channel scalar memories with block-diagonal recurrent weights
+(one block per head) and is evaluated with a sequential scan (no parallel
+form exists — the recurrence is on h_{t-1}).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.conv import (causal_conv1d, causal_conv1d_step,
+                               conv_decode_init, conv_specs)
+from repro.models.params import ParamSpec
+
+MLSTM_CHUNK = 64
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_up = int(cfg.d_model * cfg.proj_factor)
+    heads = cfg.num_heads
+    dh = d_up // heads
+    return d_up, heads, dh
+
+
+def mlstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_up, H, dh = _dims(cfg)
+    return {
+        "w_up": ParamSpec((d, d_up), ("embed", "rnn")),
+        "w_gate": ParamSpec((d, d_up), ("embed", "rnn")),
+        "conv": conv_specs(d_up, cfg.conv_width, "rnn"),
+        "w_q": ParamSpec((d_up, H, dh), ("rnn", "heads", None)),
+        "w_k": ParamSpec((d_up, H, dh), ("rnn", "heads", None)),
+        "w_v": ParamSpec((d_up, H, dh), ("rnn", "heads", None)),
+        "w_i": ParamSpec((d_up, H), ("rnn", "heads"), scale=0.1),
+        "w_f": ParamSpec((d_up, H), ("rnn", "heads"), scale=0.1),
+        "b_i": ParamSpec((H,), (None,), init="zeros"),
+        # forget-gate bias init positive => long memory at init
+        "b_f": ParamSpec((H,), (None,), init="ones", scale=3.0),
+        "out_norm": {"scale": ParamSpec((d_up,), (None,), init="ones")},
+        "w_down": ParamSpec((d_up, d), ("rnn", "embed")),
+    }
+
+
+def _mlstm_chunkwise(q, k, v, i_raw, f_raw, state=None, chunk=MLSTM_CHUNK):
+    """q,k,v: (B,H,T,dh); i_raw,f_raw: (B,H,T).  Returns (h, state).
+
+    state = (C: (B,H,dk,dv), n: (B,H,dk), m: (B,H)).
+    """
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    NC = T // L
+    f32 = jnp.float32
+
+    qc = q.reshape(B, H, NC, L, dk).astype(f32)
+    kc = k.reshape(B, H, NC, L, dk).astype(f32)
+    vc = v.reshape(B, H, NC, L, dv).astype(f32)
+    ic = i_raw.reshape(B, H, NC, L).astype(f32)
+    flog = jax.nn.log_sigmoid(f_raw.astype(f32)).reshape(B, H, NC, L)
+    b = jnp.cumsum(flog, axis=-1)              # within-chunk decay prefix
+    g = b[..., -1]                             # total chunk decay (B,H,NC)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dv), f32)
+        n0 = jnp.zeros((B, H, dk), f32)
+        m0 = jnp.full((B, H), -jnp.inf, f32)
+    else:
+        C0, n0, m0 = (s.astype(f32) for s in state)
+
+    idx = jnp.arange(L)
+    tri = idx[:, None] >= idx[None, :]         # j <= i
+
+    def step(carry, xs):
+        C, n, m = carry
+        qi, ki, vi, ii, bi, gi = xs            # (B,H,L,*) and (B,H)
+        # log weights: inter (state) and intra (pairwise)
+        log_a = bi + m[..., None]                              # (B,H,L)
+        D = bi[..., :, None] - bi[..., None, :] + ii[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)                        # (B,H,L,L)
+        m_intra = jnp.max(D, axis=-1)                          # (B,H,L)
+        m_i = jnp.maximum(log_a, m_intra)
+        m_i = jnp.maximum(m_i, -1e30)                          # avoid -inf-(-inf)
+        inter_w = jnp.exp(log_a - m_i)                         # (B,H,L)
+        Sij = jnp.exp(D - m_i[..., None])                      # (B,H,L,L)
+        qk = jnp.einsum("bhid,bhjd->bhij", qi, ki)             # (B,H,L,L)
+        num = (inter_w[..., None] * jnp.einsum("bhid,bhdv->bhiv", qi, C)
+               + jnp.einsum("bhij,bhij,bhjv->bhiv", Sij, qk, vi))
+        den = (inter_w * jnp.einsum("bhid,bhd->bhi", qi, n)
+               + jnp.einsum("bhij,bhij->bhi", Sij, qk))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update (stabilized)
+        w_j = gi[..., None] - bi + ii                          # (B,H,L)
+        m_new = jnp.maximum(gi + m, jnp.max(w_j, axis=-1))
+        m_new = jnp.maximum(m_new, -1e30)
+        scale_old = jnp.exp(gi + m - m_new)
+        wj = jnp.exp(w_j - m_new[..., None])
+        C_new = (scale_old[..., None, None] * C
+                 + jnp.einsum("bhj,bhjd,bhjv->bhdv", wj, ki, vi))
+        n_new = scale_old[..., None] * n + jnp.einsum("bhj,bhjd->bhd", wj, ki)
+        return (C_new, n_new, m_new), h
+
+    xs = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+          jnp.moveaxis(vc, 2, 0), jnp.moveaxis(ic, 2, 0),
+          jnp.moveaxis(b, 2, 0), jnp.moveaxis(g, 2, 0))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, T, dv)
+    return h, (C, n, m)
+
+
+def mlstm_decode_step(q, k, v, i_raw, f_raw, state):
+    """One-token recurrence.  q,k,v: (B,H,1,dh); gates (B,H,1)."""
+    C, n, m = state
+    f32 = jnp.float32
+    q1, k1, v1 = (t[:, :, 0].astype(f32) for t in (q, k, v))
+    ii = i_raw[:, :, 0].astype(f32)
+    ff = jax.nn.log_sigmoid(f_raw[:, :, 0].astype(f32))
+    m_new = jnp.maximum(ff + m, ii)
+    f_st = jnp.exp(ff + m - m_new)
+    i_st = jnp.exp(ii - m_new)
+    C_new = f_st[..., None, None] * C + i_st[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k1, v1)
+    n_new = f_st[..., None] * n + i_st[..., None] * k1
+    num = jnp.einsum("bhd,bhdv->bhv", q1, C_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_new))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return h[:, :, None, :], (C_new, n_new, m_new)
+
+
+def _mlstm_qkv(p, x: jax.Array, cfg: ArchConfig, conv_state=None):
+    """Shared pre-cell computation. Returns (q,k,v,i,f,gate,new_conv_state)."""
+    dt = x.dtype
+    d_up, H, dh = _dims(cfg)
+    up = jnp.einsum("btd,du->btu", x, p["w_up"].astype(dt))
+    up = shard(up, ("act_batch", None, "act_rnn"))
+    gate = jax.nn.silu(jnp.einsum("btd,du->btu", x, p["w_gate"].astype(dt)))
+    if conv_state is None:
+        c = causal_conv1d(p["conv"], up)
+        new_conv_state = None
+    else:
+        c, new_conv_state = causal_conv1d_step(p["conv"], up, conv_state)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("btu,uhk->bhtk", c, p["w_q"].astype(dt))
+    k = jnp.einsum("btu,uhk->bhtk", c, p["w_k"].astype(dt)) * (dh ** -0.5)
+    v = jnp.einsum("btu,uhk->bhtk", up, p["w_v"].astype(dt))
+    i_raw = jnp.einsum("btu,uh->bht", c, p["w_i"].astype(dt)) + \
+        p["b_i"].astype(dt)[None, :, None]
+    f_raw = jnp.einsum("btu,uh->bht", c, p["w_f"].astype(dt)) + \
+        3.0 * p["b_f"].astype(dt)[None, :, None]
+    return q, k, v, i_raw, f_raw, gate, up, new_conv_state
+
+
+def _mlstm_out(p, h, gate, cfg: ArchConfig, dtype):
+    """Head-merge + per-head norm + gating + down-projection."""
+    B, H, T, dh = h.shape
+    hm = jnp.moveaxis(h, 1, 2).reshape(B, T, H * dh)
+    # simple RMS norm over the up dim (xLSTM uses multi-head layernorm)
+    ms = jnp.mean(jnp.square(hm), axis=-1, keepdims=True)
+    hm = hm * jax.lax.rsqrt(ms + 1e-6) * p["out_norm"]["scale"].astype(jnp.float32)
+    hm = hm.astype(dtype) * gate
+    out = jnp.einsum("btu,ud->btd", hm, p["w_down"].astype(dtype))
+    return shard(out, ("act_batch", "act_seq", "act_embed"))
+
+
+def apply_mlstm(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    q, k, v, i_raw, f_raw, gate, _, _ = _mlstm_qkv(p, x, cfg)
+    h, _ = _mlstm_chunkwise(q, k, v, i_raw, f_raw)
+    return _mlstm_out(p, h.astype(x.dtype), gate, cfg, x.dtype)
+
+
+def mlstm_decode_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_up, H, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+        "conv": conv_decode_init(batch, d_up, cfg.conv_width, dtype=dtype),
+    }
+
+
+def apply_mlstm_decode(p, x: jax.Array, cfg: ArchConfig, state: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    q, k, v, i_raw, f_raw, gate, _, conv_state = _mlstm_qkv(
+        p, x, cfg, conv_state=state["conv"])
+    h, (C, n, m) = mlstm_decode_step(q, k, v, i_raw, f_raw,
+                                     (state["C"], state["n"], state["m"]))
+    out = _mlstm_out(p, h.astype(x.dtype), gate, cfg, x.dtype)
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+
+def slstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    return {
+        "w_x": ParamSpec((d, 4, d), ("embed", None, "rnn")),     # i,f,z,o
+        "r_h": ParamSpec((H, dh, 4, dh), (None, None, None, None), scale=0.5),
+        "bias": ParamSpec((4, d), (None, None), init="zeros"),
+        "w_out": ParamSpec((d, d), ("rnn", "embed")),
+    }
+
+
+def _slstm_cell(gates, state):
+    """gates: (B, 4, D) raw; state: dict(c,n,m,h) each (B, D) f32."""
+    c, n, m, h = state
+    i_raw, f_raw, z_raw, o_raw = (gates[:, j].astype(jnp.float32)
+                                  for j in range(4))
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_raw) + m, i_raw)
+    i_st = jnp.exp(i_raw - m_new)
+    f_st = jnp.exp(jax.nn.log_sigmoid(f_raw) + m - m_new)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c_new = f_st * c + i_st * z
+    n_new = f_st * n + i_st
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def _slstm_gates(p, xt, h_prev, cfg: ArchConfig):
+    """xt: (B, D); h_prev: (B, D) -> raw gates (B, 4, D)."""
+    B, D = xt.shape
+    H = cfg.num_heads
+    dh = D // H
+    gx = jnp.einsum("bd,dgk->bgk", xt, p["w_x"].astype(xt.dtype))
+    hh = h_prev.reshape(B, H, dh).astype(xt.dtype)
+    gh = jnp.einsum("bhk,hkgj->bghj", hh, p["r_h"].astype(xt.dtype))
+    gh = gh.reshape(B, 4, D)
+    return gx + gh + p["bias"].astype(xt.dtype)
+
+
+SLSTM_TIME_CHUNK = 256
+
+
+def apply_slstm(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Sequential scan over time, chunk-rematerialized: the backward pass
+    recomputes within 256-step chunks instead of saving all T per-step
+    states (which dominates HBM at train_4k batch sizes)."""
+    B, T, D = x.shape
+    f32 = jnp.float32
+    state0 = (jnp.zeros((B, D), f32), jnp.zeros((B, D), f32),
+              jnp.full((B, D), -1e30, f32), jnp.zeros((B, D), f32))
+
+    def step(state, xt):
+        gates = _slstm_gates(p, xt, state[3], cfg)
+        new = _slstm_cell(gates, state)
+        return new, new[3]
+
+    chunk = SLSTM_TIME_CHUNK if T % SLSTM_TIME_CHUNK == 0 else T
+
+    @jax.checkpoint
+    def chunk_scan(state, xs_chunk):
+        return jax.lax.scan(step, state, xs_chunk)
+
+    xs = jnp.moveaxis(x, 1, 0).reshape(T // chunk, chunk, B, D)
+    _, hs = jax.lax.scan(chunk_scan, state0, xs)
+    h = jnp.moveaxis(hs.reshape(T, B, D), 0, 1).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", h, p["w_out"].astype(x.dtype))
+    return shard(out, ("act_batch", "act_seq", "act_embed"))
+
+
+def slstm_decode_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    D = cfg.d_model
+    return {"c": jnp.zeros((batch, D), dtype), "n": jnp.zeros((batch, D), dtype),
+            "m": jnp.full((batch, D), -1e30, dtype),
+            "h": jnp.zeros((batch, D), dtype)}
+
+
+def apply_slstm_decode(p, x: jax.Array, cfg: ArchConfig, state: Dict
+                       ) -> Tuple[jax.Array, Dict]:
+    xt = x[:, 0]
+    gates = _slstm_gates(p, xt, state["h"].astype(x.dtype), cfg)
+    c, n, m, h = _slstm_cell(gates, (state["c"], state["n"], state["m"],
+                                     state["h"]))
+    out = jnp.einsum("bd,de->be", h.astype(x.dtype),
+                     p["w_out"].astype(x.dtype))[:, None, :]
+    return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,191 @@
+"""Serving engine: jitted prefill/decode + slot-based continuous batching.
+
+`ServeEngine` is the long-running *service* job the orchestrator deploys
+(paper: an nginx deployment; fleet: an LLM endpoint).  Design:
+
+* fixed decode batch of ``num_slots`` (static shapes — one compiled decode
+  step regardless of arrival pattern),
+* per-request prefill (B=1) whose cache rows are inserted into the batched
+  decode state (continuous batching, vLLM-style at slot granularity),
+* per-example cache positions, so slots at different generation depths
+  coexist in one decode step,
+* `snapshot()/restore()` — the *moveable service* contract: the orchestrator
+  can evict the engine and recreate it elsewhere without losing in-flight
+  generation state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.serve.sampling import SamplingConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    # filled by the engine:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 4
+    cache_len: int = 256
+    sampling: SamplingConfig = dataclasses.field(default_factory=SamplingConfig)
+    eos_id: int = -1                   # -1: only stop on max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 extra_inputs: Optional[Dict[str, np.ndarray]] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.extra = extra_inputs or {}
+        B = ecfg.num_slots
+        self.states = tf.init_decode_state(cfg, B, ecfg.cache_len,
+                                           dtype=jnp.dtype(cfg.dtype))
+        self.last_tokens = jnp.zeros((B, 1), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * B
+        self.remaining = np.zeros((B,), np.int32)
+        self.rng = jax.random.key(0)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- jitted cores ------------------------------------------------------------
+    def _decode_impl(self, params, tokens, states, rng):
+        logits, new_states = tf.decode_step(params, tokens, states, self.cfg)
+        rng, sub = jax.random.split(rng)
+        nxt = sample(sub, logits, dataclasses.replace(
+            self.ecfg.sampling, vocab_size=self.cfg.vocab_size))
+        return nxt[:, None], new_states, rng
+
+    def _prefill_impl(self, params, batch):
+        return tf.prefill(params, batch, self.cfg, self.ecfg.cache_len)
+
+    # -- slot management -----------------------------------------------------------
+    def _insert_slot(self, slot: int, row_states, first_token: int) -> None:
+        # Every decode-state leaf keeps its batch dim in the same position as
+        # the B=1 prefill row state; locate it by the size-1 axis and insert.
+        def ins(b, r):
+            # b: (..., B, ...) with batch at axis (r.ndim - b.ndim + ...)
+            # prefill row state has batch dim of size 1 in the same position.
+            axis = _batch_axis(b, r)
+            idx = [slice(None)] * b.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return b.at[tuple(idx)].set(r.astype(b.dtype))
+
+        self.states = jax.tree.map(ins, self.states, row_states)
+        self.last_tokens = self.last_tokens.at[slot, 0].set(first_token)
+
+    def admit(self, req: Request) -> bool:
+        """Prefill the request and place it into a free slot."""
+        free = [i for i, r in enumerate(self.active) if r is None]
+        if not free:
+            return False
+        slot = free[0]
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        for k, v in self.extra.items():
+            batch[k] = jnp.asarray(v)[None]
+        logits, row_states = self._prefill(self.params, batch)
+        first = int(jnp.argmax(
+            jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
+                      logits[0].astype(jnp.float32), -1e30)))
+        self._insert_slot(slot, row_states, first)
+        req.tokens.append(first)
+        req.first_token_at = time.time()
+        self.active[slot] = req
+        self.remaining[slot] = req.max_new_tokens - 1
+        return True
+
+    def step(self) -> List[Request]:
+        """One batched decode step; returns requests finished this step."""
+        if not any(r is not None for r in self.active):
+            return []
+        self.last_tokens, self.states, self.rng = self._decode(
+            self.params, self.last_tokens, self.states, self.rng)
+        out = np.asarray(self.last_tokens[:, 0])
+        finished: List[Request] = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(out[slot])
+            req.tokens.append(tok)
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or tok == self.ecfg.eos_id:
+                req.done_at = time.time()
+                finished.append(req)
+                self.active[slot] = None
+        return finished
+
+    # -- the moveable-service contract ---------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        import copy
+        return {
+            "states": jax.tree.map(np.asarray, self.states),
+            "last_tokens": np.asarray(self.last_tokens),
+            "active": copy.deepcopy(self.active),   # frozen in-flight state
+            "remaining": self.remaining.copy(),
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        self.states = jax.tree.map(jnp.asarray, snap["states"])
+        self.last_tokens = jnp.asarray(snap["last_tokens"])
+        self.active = list(snap["active"])
+        self.remaining = snap["remaining"].copy()
+
+
+def _batch_axis(batched: jax.Array, row: jax.Array) -> int:
+    """Find the batch axis: first axis where row has size 1 and batched is
+    larger (row comes from a B=1 prefill; a leading scan axis matches)."""
+    for ax in range(batched.ndim):
+        if row.shape[ax] == 1 and batched.shape[ax] > 1:
+            return ax
+        if row.shape[ax] != batched.shape[ax]:
+            raise ValueError(f"incompatible state shapes {batched.shape} "
+                             f"vs {row.shape}")
+    raise ValueError(f"no batch axis in {batched.shape} vs {row.shape}")
+
+
+def run_server(engine: ServeEngine, requests: List[Request],
+               log: Callable[[str], None] = print) -> Dict[str, float]:
+    """Drive the engine over a request list (arrival times respected via
+    submitted_at ordering); returns latency/throughput metrics."""
+    pending = sorted(requests, key=lambda r: r.submitted_at)
+    t0 = time.time()
+    done: List[Request] = []
+    qi = 0
+    while len(done) < len(requests):
+        now = time.time() - t0
+        while qi < len(pending) and pending[qi].submitted_at <= now:
+            if engine.admit(pending[qi]):
+                qi += 1
+            else:
+                break
+        finished = engine.step()
+        done.extend(finished)
+        if not finished and qi < len(pending) and \
+           not any(engine.active):
+            # idle: jump to next arrival
+            time.sleep(max(0.0, pending[qi].submitted_at - (time.time() - t0)))
+    total_tokens = sum(len(r.tokens) for r in done)
+    dt = time.time() - t0
+    ttfts = [r.first_token_at - t0 - r.submitted_at for r in done
+             if r.first_token_at]
+    return {"requests": len(done), "tokens": total_tokens,
+            "elapsed_s": dt, "tokens_per_s": total_tokens / max(dt, 1e-9),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0}

@@ -1,0 +1,31 @@
+"""Token sampling: greedy / temperature / top-k (jit-friendly)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> full softmax
+    vocab_size: Optional[int] = None   # mask padded columns
+
+
+def sample(rng: jax.Array, logits: jax.Array,
+           cfg: SamplingConfig) -> jax.Array:
+    """logits: (B, Vp) -> (B,) int32."""
+    lf = logits.astype(jnp.float32)
+    if cfg.vocab_size is not None and cfg.vocab_size < lf.shape[-1]:
+        col = jnp.arange(lf.shape[-1])
+        lf = jnp.where(col[None, :] < cfg.vocab_size, lf, -1e30)
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    lf = lf / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(lf, axis=-1)[:, -cfg.top_k][:, None]
+        lf = jnp.where(lf >= kth, lf, -1e30)
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)

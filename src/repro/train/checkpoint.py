@@ -1,0 +1,117 @@
+"""Checkpoint manager: atomic, keep-N, resumable, mesh-flexible.
+
+This is the substrate that makes the paper's *moveable* label real for
+training jobs (DESIGN.md §2): an evicted trainer checkpoints, is rescheduled,
+and resumes from the last durable step — and the *elastic* path restores the
+same checkpoint onto a different mesh (the leaves are stored unsharded, so
+restoring is `device_put` with the new mesh's shardings).
+
+Format: one directory per step, `step_<n>/` containing `leaves.npz` (flat
+leaf arrays keyed by tree path) + `meta.json`; a `LATEST` file is updated
+via atomic rename last, so a crash mid-save never corrupts the newest valid
+checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
+        leaves = {k: np.asarray(v) for k, v in _flatten_with_paths(tree)}
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "leaves.npz"), **leaves)
+            meta = {"step": step, "extra": extra or {}}
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        # LATEST last: readers never see a partial checkpoint.
+        latest_tmp = os.path.join(self.directory, ".LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(latest_tmp, os.path.join(self.directory, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- load -----------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.directory, "LATEST")
+        if os.path.exists(path):
+            with open(path) as f:
+                name = f.read().strip()
+            if os.path.isdir(os.path.join(self.directory, name)):
+                return int(name[5:])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, int, Dict]:
+        """Restore into the structure of `tree_like` (shapes must match).
+
+        `shardings`: optional pytree of NamedSharding (elastic restore onto a
+        different mesh); leaves are device_put accordingly.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "leaves.npz"))
+        flat = _flatten_with_paths(tree_like)
+        leaves = []
+        for key, like in flat:
+            arr = data[key]
+            assert arr.shape == tuple(like.shape), (key, arr.shape, like.shape)
+            leaves.append(arr.astype(like.dtype))
+        treedef = jax.tree_util.tree_structure(tree_like)
+        restored = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), restored, shardings)
+        return restored, meta["step"], meta.get("extra", {})

@@ -1,0 +1,97 @@
+"""Vocab-sharded cross-entropy.
+
+The logits tensor (B, T, V_padded) stays sharded over `model` (vocab) and
+`(pod, data)` (batch); the log-sum-exp and the label-logit extraction are
+written as reductions/einsums over the sharded vocab axis so XLA inserts only
+small (B, T)-shaped all-reduces — the full unsharded logits tensor never
+materializes.  Padded vocab columns (Megatron-style padding, see
+`transformer.padded_vocab`) are masked to -inf.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  loss_mask: Optional[jax.Array] = None,
+                  vocab_size: Optional[int] = None,
+                  z_loss_coef: float = 0.0
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """logits: (B, T, Vp); labels: (B, T) int32; loss_mask: (B, T) 0/1."""
+    B, T, Vp = logits.shape
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < Vp:
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, Vp), 2)
+        lf = jnp.where(col < vocab_size, lf, -1e30)
+    # NOTE: no stop_gradient on the max — the +m / -m contributions cancel
+    # analytically, giving the exact softmax gradient (a one-sided
+    # stop_gradient would add a spurious one-hot at the argmax).
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    sumexp = jnp.sum(jnp.exp(lf - m), axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0]
+    # label logit via one-hot contraction (gather over a sharded axis would
+    # force an all-gather; the einsum keeps everything local + all-reduce).
+    onehot = jax.nn.one_hot(labels, Vp, dtype=lf.dtype)
+    label_logit = jnp.einsum("btv,btv->bt", lf, onehot)
+    nll = lse - label_logit
+    if z_loss_coef > 0.0:
+        nll = nll + z_loss_coef * jnp.square(lse)
+    if loss_mask is None:
+        loss_mask = jnp.ones((B, T), jnp.float32)
+    loss_mask = loss_mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    loss = jnp.sum(nll * loss_mask) / denom
+    acc = jnp.sum((jnp.argmax(lf, -1) == labels) * loss_mask) / denom
+    return loss, {"loss": loss, "accuracy": acc,
+                  "tokens": jnp.sum(loss_mask)}
+
+
+def chunked_ce(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+               loss_mask: Optional[jax.Array], vocab_size: int,
+               chunk: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Fused LM-head + cross-entropy over sequence chunks.
+
+    x: (B, T, D) final hidden; head_w: (D, Vp).  The (B, chunk, Vp) logits
+    tile is the only logits tensor that ever exists (forward *and* backward
+    — the scan body is rematerialized), which is what lets 256k-vocab archs
+    fit training memory.  Sums are accumulated in f32.
+    """
+    B, T, D = x.shape
+    Vp = head_w.shape[-1]
+    if loss_mask is None:
+        loss_mask = jnp.ones((B, T), jnp.float32)
+    loss_mask = loss_mask.astype(jnp.float32)
+    if not (chunk and T > chunk and T % chunk == 0):
+        logits = jnp.einsum("btd,dv->btv", x, head_w.astype(x.dtype))
+        return cross_entropy(logits, labels, loss_mask, vocab_size)
+    n = T // chunk
+    xs = (x.reshape(B, n, chunk, D).swapaxes(0, 1),
+          labels.reshape(B, n, chunk).swapaxes(0, 1),
+          loss_mask.reshape(B, n, chunk).swapaxes(0, 1))
+
+    @jax.checkpoint
+    def body(carry, xs_c):
+        nll_sum, correct, ntok = carry
+        x_c, y_c, m_c = xs_c
+        logits = jnp.einsum("btd,dv->btv", x_c, head_w.astype(x_c.dtype))
+        lf = logits.astype(jnp.float32)
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, Vp), 2)
+        lf = jnp.where(col < vocab_size, lf, -1e30)
+        m = jnp.max(lf, axis=-1)
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m[..., None]), axis=-1)) + m
+        onehot = jax.nn.one_hot(y_c, Vp, dtype=lf.dtype)
+        label_logit = jnp.einsum("btv,btv->bt", lf, onehot)
+        nll = (lse - label_logit) * m_c
+        hit = (jnp.argmax(lf, -1) == y_c) * m_c
+        return (nll_sum + jnp.sum(nll), correct + jnp.sum(hit),
+                ntok + jnp.sum(m_c)), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32))
+    (nll_sum, correct, ntok), _ = jax.lax.scan(body, init, xs)
+    denom = jnp.maximum(ntok, 1.0)
+    loss = nll_sum / denom
+    return loss, {"loss": loss, "accuracy": correct / denom, "tokens": ntok}

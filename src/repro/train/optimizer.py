@@ -1,0 +1,103 @@
+"""In-house AdamW with global-norm clipping and warmup+cosine schedule.
+
+Optimizer state shards exactly like the parameters (the `m`/`v` trees reuse
+the parameter logical axes), so FSDP-sharded training keeps the full
+ZeRO-style distribution of optimizer memory for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    m: Any                   # pytree like params
+    v: Any
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    step_f = step.astype(jnp.float32)
+    warm = step_f / jnp.maximum(cfg.warmup_steps, 1)
+    denom = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    progress = jnp.clip((step_f - cfg.warmup_steps) / denom, 0.0, 1.0)
+    cosine = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * progress))
+    return cfg.learning_rate * jnp.where(step_f < cfg.warmup_steps,
+                                         warm, cosine)
+
+
+def init_opt_state(params) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.zeros_like, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def _decay_mask(path: Tuple, leaf) -> bool:
+    """No weight decay for 1-D params (norm scales, biases, gates)."""
+    return leaf.ndim >= 2
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state: AdamWState
+                 ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    grads, grad_norm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if p.ndim >= 2:   # decay mask: skip 1-D params
+            delta = delta + cfg.weight_decay * pf
+        p_new = pf - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), \
+            v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": grad_norm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,101 @@
+"""Trainer: the runnable training job the orchestrator schedules.
+
+Implements the *moveable/checkpointable* job contract (DESIGN.md §2):
+
+* periodic checkpointing (step-boundary durable progress),
+* cooperative preemption — `request_stop()` (the orchestrator's evict signal)
+  makes the loop checkpoint and return cleanly,
+* resume-from-latest on construction, so an evicted/failed job rescheduled
+  on another node continues instead of restarting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 2
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = SyntheticLM(cfg, data_cfg)
+        self.log = log_fn
+        self._stop = threading.Event()
+        self.step = 0
+        self.history: List[Dict[str, float]] = []
+        self.ckpt = (CheckpointManager(tcfg.checkpoint_dir,
+                                       keep=tcfg.keep_checkpoints)
+                     if tcfg.checkpoint_dir else None)
+        self.state = init_train_state(jax.random.key(tcfg.seed), cfg)
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self.state, self.step, _ = self.ckpt.restore(self.state)
+            self.log(f"[trainer] resumed from step {self.step}")
+        self._step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, accum=data_cfg.accum),
+            donate_argnums=(0,))
+
+    # -- the orchestrator's evict signal ---------------------------------------
+    def request_stop(self) -> None:
+        self._stop.set()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
+
+    def checkpoint(self) -> None:
+        if self.ckpt:
+            self.ckpt.save(self.step, self.state)
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self) -> Dict[str, float]:
+        t0 = time.time()
+        while self.step < self.tcfg.total_steps:
+            if self._stop.is_set():
+                self.checkpoint()
+                self.log(f"[trainer] preempted at step {self.step}; "
+                         "checkpointed")
+                return {"completed": 0.0, "step": float(self.step)}
+            batch = jax.tree.map(jnp.asarray, self.data.batch(self.step))
+            self.state, metrics = self._step_fn(self.state, batch)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or \
+               self.step == self.tcfg.total_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step
+                self.history.append(m)
+                self.log(f"[trainer] step {self.step} "
+                         f"loss={m['loss']:.4f} acc={m['accuracy']:.3f} "
+                         f"gnorm={m['grad_norm']:.2f}")
+            if self.tcfg.checkpoint_every and \
+               self.step % self.tcfg.checkpoint_every == 0:
+                self.checkpoint()
+        self.checkpoint()
+        dt = time.time() - t0
+        self.log(f"[trainer] done: {self.step} steps in {dt:.1f}s")
+        return {"completed": 1.0, "step": float(self.step),
+                "final_loss": self.history[-1]["loss"] if self.history else -1}

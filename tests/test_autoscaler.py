@@ -1,0 +1,156 @@
+"""Unit tests for paper Alg. 5/6/7 (simple + binding autoscalers, scale-in)."""
+import pytest
+
+from repro.cloud.adapter import M2_SMALL, SimCloudProvider
+from repro.core import (BindingAutoscaler, Cluster, CostModel, Node, NodeState,
+                        Pod, PodKind, PodPhase, PodSpec, Resources,
+                        SimpleAutoscaler, VoidAutoscaler, gi)
+
+from tests.test_scheduler import mk_node, mk_pod
+
+
+class FakeSim:
+    """Collects ready events without a real event loop."""
+
+    def __init__(self):
+        self.scheduled = []
+
+    def schedule_node_ready(self, node, t):
+        self.scheduled.append((node, t))
+
+
+def mk_provider():
+    provider = SimCloudProvider(M2_SMALL, CostModel())
+    provider.attach(FakeSim())
+    return provider
+
+
+class TestSimpleAutoscaler:
+    def test_rate_limited_to_one_per_interval(self):
+        cluster = Cluster()
+        provider = mk_provider()
+        auto = SimpleAutoscaler(provider, provisioning_interval_s=60.0)
+        auto.scale_out(cluster, mk_pod(), now=0.0)
+        auto.scale_out(cluster, mk_pod(), now=10.0)   # ignored
+        auto.scale_out(cluster, mk_pod(), now=59.0)   # ignored
+        assert provider.launched == 1
+        auto.scale_out(cluster, mk_pod(), now=60.0)
+        assert provider.launched == 2
+        assert len(cluster.provisioning_nodes()) == 2
+
+    def test_void_never_scales(self):
+        cluster = Cluster()
+        provider = mk_provider()
+        auto = VoidAutoscaler(provider)
+        auto.scale_out(cluster, mk_pod(), now=0.0)
+        assert provider.launched == 0
+
+
+class TestBindingAutoscaler:
+    def test_pod_association_suppresses_duplicate_launches(self):
+        cluster = Cluster()
+        provider = mk_provider()
+        auto = BindingAutoscaler(provider)
+        pod = mk_pod(mem_gi=1.0)
+        auto.scale_out(cluster, pod, now=0.0)
+        auto.scale_out(cluster, pod, now=10.0)   # same pod: ignored
+        auto.scale_out(cluster, pod, now=20.0)
+        assert provider.launched == 1
+
+    def test_booting_node_absorbs_other_pods(self):
+        cluster = Cluster()
+        provider = mk_provider()
+        auto = BindingAutoscaler(provider)
+        p1 = mk_pod(mem_gi=1.5)
+        p2 = mk_pod(mem_gi=1.5)    # fits in the same booting m2.small (3.5Gi)
+        p3 = mk_pod(mem_gi=1.5)    # does not -> second launch
+        auto.scale_out(cluster, p1, now=0.0)
+        auto.scale_out(cluster, p2, now=1.0)
+        assert provider.launched == 1
+        auto.scale_out(cluster, p3, now=2.0)
+        assert provider.launched == 2
+
+    def test_ready_notification_clears_associations(self):
+        cluster = Cluster()
+        provider = mk_provider()
+        auto = BindingAutoscaler(provider)
+        pod = mk_pod(mem_gi=1.0)
+        auto.scale_out(cluster, pod, now=0.0)
+        node = cluster.provisioning_nodes()[0]
+        node.mark_ready(50.0)
+        auto.notify_node_ready(node)
+        # The pod is free again: a new scale-out request launches a new node.
+        auto.scale_out(cluster, pod, now=60.0)
+        assert provider.launched == 2
+
+
+class TestScaleIn:
+    def _auto(self):
+        provider = mk_provider()
+        return BindingAutoscaler(provider), provider
+
+    def test_empty_autoscaled_node_removed(self):
+        cluster = Cluster()
+        auto, provider = self._auto()
+        n = Node(allocatable=M2_SMALL.allocatable, autoscaled=True)
+        provider.cost.on_provision(n, 0.0)
+        n.mark_ready(0.0)
+        cluster.add_node(n)
+        removed = auto.scale_in(cluster, now=100.0)
+        assert removed == [n.node_id]
+        assert not cluster.nodes
+
+    def test_static_nodes_never_removed(self):
+        cluster = Cluster()
+        auto, _ = self._auto()
+        n = mk_node(node_id="static")   # autoscaled=False
+        cluster.add_node(n)
+        assert auto.scale_in(cluster, now=100.0) == []
+        assert "static" in cluster.nodes
+
+    def test_all_moveable_node_drained(self):
+        cluster = Cluster()
+        auto, provider = self._auto()
+        a = Node(allocatable=M2_SMALL.allocatable, autoscaled=True,
+                 node_id="a")
+        provider.cost.on_provision(a, 0.0)
+        a.mark_ready(0.0)
+        cluster.add_node(a)
+        b = cluster.add_node(mk_node(node_id="b"))
+        mover = mk_pod(mem_gi=1.0, moveable=True)
+        cluster.bind(mover, a, 0.0)
+        removed = auto.scale_in(cluster, now=100.0)
+        assert removed == ["a"]
+        assert mover.phase == PodPhase.PENDING   # recreated, next cycle
+        assert "a" not in cluster.nodes
+
+    def test_mixed_node_tainted_not_removed(self):
+        cluster = Cluster()
+        auto, provider = self._auto()
+        a = Node(allocatable=M2_SMALL.allocatable, autoscaled=True,
+                 node_id="a")
+        provider.cost.on_provision(a, 0.0)
+        a.mark_ready(0.0)
+        cluster.add_node(a)
+        cluster.add_node(mk_node(node_id="b"))
+        mover = mk_pod(mem_gi=1.0, moveable=True)
+        batch = mk_pod(mem_gi=1.0, kind=PodKind.BATCH)
+        cluster.bind(mover, a, 0.0)
+        cluster.bind(batch, a, 0.0)
+        auto.scale_in(cluster, now=100.0)
+        assert a.state == NodeState.TAINTED
+        assert mover.phase == PodPhase.PENDING
+        assert batch.phase == PodPhase.BOUND     # batch keeps draining
+
+    def test_drain_skipped_if_movers_do_not_fit_elsewhere(self):
+        cluster = Cluster()
+        auto, provider = self._auto()
+        a = Node(allocatable=M2_SMALL.allocatable, autoscaled=True,
+                 node_id="a")
+        provider.cost.on_provision(a, 0.0)
+        a.mark_ready(0.0)
+        cluster.add_node(a)
+        mover = mk_pod(mem_gi=3.0, moveable=True)
+        cluster.bind(mover, a, 0.0)   # nowhere else to go
+        assert auto.scale_in(cluster, now=100.0) == []
+        assert mover.phase == PodPhase.BOUND

@@ -1,0 +1,132 @@
+"""Targeted hypothesis properties for the paper's algorithms (beyond the
+end-to-end invariants in test_core_system): eviction safety, binding-
+autoscaler launch discipline, scale-in conservation, cost monotonicity."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cloud.adapter import M2_SMALL, SimCloudProvider
+from repro.core import (BindingAutoscaler, BindingRescheduler, Cluster,
+                        CostModel, Node, NonBindingRescheduler, Pod, PodKind,
+                        PodPhase, PodSpec, Resources, gi)
+from repro.core.rescheduler import RescheduleOutcome
+
+from tests.test_autoscaler import FakeSim, mk_provider
+from tests.test_scheduler import mk_node, mk_pod
+
+
+@st.composite
+def cluster_with_pods(draw):
+    """Random small cluster with a mix of moveable/batch pods."""
+    cluster = Cluster()
+    n_nodes = draw(st.integers(1, 5))
+    for i in range(n_nodes):
+        cluster.add_node(mk_node(node_id=f"n{i}"))
+    pods = []
+    for _ in range(draw(st.integers(0, 12))):
+        moveable = draw(st.booleans())
+        kind = PodKind.SERVICE if moveable or draw(st.booleans()) \
+            else PodKind.BATCH
+        mem = draw(st.sampled_from([0.3, 0.6, 0.9, 1.0, 1.4, 2.359]))
+        cpu = draw(st.sampled_from([100, 200, 300]))
+        pod = Pod(spec=PodSpec("p", kind, Resources(cpu, gi(mem)),
+                               duration_s=60.0 if kind == PodKind.BATCH else 0,
+                               moveable=moveable and kind == PodKind.SERVICE),
+                  submit_time=0.0)
+        # best-effort placement
+        for node in cluster.ready_nodes():
+            if node.fits(pod.requests):
+                cluster.bind(pod, node, 0.0)
+                pods.append(pod)
+                break
+    return cluster, pods
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=cluster_with_pods(),
+       mem=st.sampled_from([1.0, 2.0, 3.0, 3.4]),
+       binding=st.booleans())
+def test_rescheduler_never_evicts_batch_and_never_overcommits(data, mem,
+                                                              binding):
+    cluster, pods = data
+    batch_before = {p.uid: p.node_id for p in pods
+                    if p.is_batch and p.phase == PodPhase.BOUND}
+    pending = Pod(spec=PodSpec("x", PodKind.SERVICE,
+                               Resources(100, gi(mem))), submit_time=-100.0)
+    cls = BindingRescheduler if binding else NonBindingRescheduler
+    out = cls(max_pod_age_s=60.0).reschedule(cluster, pending, now=0.0)
+    # 1. batch pods were never touched
+    for p in pods:
+        if p.uid in batch_before:
+            assert p.phase == PodPhase.BOUND
+            assert p.node_id == batch_before[p.uid]
+    # 2. capacity respected everywhere
+    cluster.check_invariants()
+    # 3. if evictions happened, they made the pod placeable on some node
+    if out == RescheduleOutcome.RESCHEDULED:
+        assert any(n.fits(pending.requests) for n in cluster.ready_nodes()) \
+            or pending.phase == PodPhase.BOUND
+
+
+@settings(max_examples=40, deadline=None)
+@given(mems=st.lists(st.sampled_from([0.5, 1.0, 1.5, 2.0, 3.0]),
+                     min_size=1, max_size=12))
+def test_binding_autoscaler_launch_discipline(mems):
+    """No pod ever triggers two launches, and planned capacity of booting
+    nodes is packed before any new launch (paper Alg. 7)."""
+    cluster = Cluster()
+    provider = mk_provider()
+    auto = BindingAutoscaler(provider)
+    pods = [mk_pod(mem_gi=m) for m in mems]
+    for t, pod in enumerate(pods):
+        auto.scale_out(cluster, pod, now=float(t))
+        auto.scale_out(cluster, pod, now=float(t) + 0.5)   # duplicate request
+    # every pod is associated with exactly one node
+    assert set(auto._pod_to_node) == {p.uid for p in pods}
+    # launches == number of nodes needed by sequential best-effort packing
+    # into fresh 3.5Gi bins (upper bound) and at least ceil(total/3.5)
+    total = sum(mems)
+    assert provider.launched >= math.ceil(total / 3.5) - 1
+    assert provider.launched <= len(pods)
+    # planned capacity never negative
+    for tr in auto._tracked.values():
+        assert tr.planned_free.nonneg()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_idle=st.integers(0, 4), n_used=st.integers(0, 3))
+def test_scale_in_conserves_pods(n_idle, n_used):
+    """Scale-in may move/taint but never loses a pod."""
+    cluster = Cluster()
+    provider = mk_provider()
+    auto = BindingAutoscaler(provider)
+    pods = []
+    for i in range(n_idle + n_used):
+        node = Node(allocatable=M2_SMALL.allocatable, autoscaled=True,
+                    node_id=f"a{i}")
+        provider.cost.on_provision(node, 0.0)
+        node.mark_ready(0.0)
+        cluster.add_node(node)
+    # leave an escape node so drains have a target
+    cluster.add_node(mk_node(node_id="static"))
+    used_nodes = [n for n in cluster.ready_nodes() if n.autoscaled][:n_used]
+    for node in used_nodes:
+        pod = mk_pod(mem_gi=1.0, moveable=True)
+        cluster.bind(pod, node, 0.0)
+        pods.append(pod)
+    auto.scale_in(cluster, now=10.0)
+    for pod in pods:
+        assert pod.phase in (PodPhase.BOUND, PodPhase.PENDING)
+    cluster.check_invariants()
+    # every idle autoscaled node was reclaimed
+    assert not any(n.autoscaled and not n.pods
+                   for n in cluster.ready_nodes())
+
+
+def test_cost_rounding_up_per_second():
+    cost = CostModel(price_per_s=0.011)
+    node = Node(allocatable=Resources(940, gi(3.5)))
+    cost.on_provision(node, 0.0)
+    cost.on_deprovision(node, 10.2)     # partial second rounds up -> 11s
+    assert cost.total_cost(10.2) == pytest.approx(11 * 0.011)

@@ -1,0 +1,130 @@
+"""Integration + property tests: the full orchestrated simulation.
+
+Property tests (hypothesis) assert the system invariants the paper's
+correctness rests on: no node overcommit, no lost pods, billing consistency,
+and completion under autoscaling for any admissible workload.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Arrival, CostModel, ExperimentSpec, PodKind, PodPhase,
+                        PodSpec, Resources, gi, run_all_combos,
+                        run_experiment, run_k8s_baseline)
+from repro.core.experiment import build_simulation
+from repro.core.workload import JOB_TYPES, generate_workload
+
+
+class TestWorkloadGeneration:
+    def test_counts_match_table2(self):
+        for name, total in (("bursty", 50), ("slow", 50), ("mixed", 50)):
+            arrivals = generate_workload(name, seed=3)
+            assert len(arrivals) == total
+
+    def test_deterministic_per_seed(self):
+        a = generate_workload("mixed", seed=7)
+        b = generate_workload("mixed", seed=7)
+        assert [(x.time, x.spec.type_name) for x in a] == \
+               [(x.time, x.spec.type_name) for x in b]
+        c = generate_workload("mixed", seed=8)
+        assert [(x.time, x.spec.type_name) for x in a] != \
+               [(x.time, x.spec.type_name) for x in c]
+
+    def test_slow_is_slower_than_bursty(self):
+        slow = generate_workload("slow", seed=0)
+        bursty = generate_workload("bursty", seed=0)
+        assert slow[-1].time > 2 * bursty[-1].time
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("rescheduler", ["void", "non-binding", "binding"])
+    @pytest.mark.parametrize("autoscaler", ["non-binding", "binding"])
+    def test_all_combos_complete_slow(self, rescheduler, autoscaler):
+        r = run_experiment(ExperimentSpec(
+            workload="slow", rescheduler=rescheduler, autoscaler=autoscaler,
+            seed=0))
+        assert r.completed
+        assert r.cost > 0 and r.duration_s > 0
+        assert 0 < r.avg_ram_ratio <= 1.0
+
+    def test_autoscaling_beats_static_k8s_on_cost(self):
+        r = run_experiment(ExperimentSpec(
+            workload="slow", rescheduler="non-binding", autoscaler="binding",
+            seed=0))
+        k8s = run_k8s_baseline("slow", seed=0)
+        assert r.cost < k8s.cost   # the paper's headline direction
+
+    def test_binding_autoscaler_never_costlier_than_nonbinding_bursty(self):
+        # Paper §7.2: "the binding autoscaler ... always leads to the lowest
+        # cost" (same rescheduler, bursty workload).
+        nbas = run_experiment(ExperimentSpec(
+            workload="bursty", rescheduler="void", autoscaler="non-binding",
+            seed=0))
+        bas = run_experiment(ExperimentSpec(
+            workload="bursty", rescheduler="void", autoscaler="binding",
+            seed=0))
+        assert bas.cost <= nbas.cost * 1.05   # small tolerance: seeds differ
+
+    def test_cost_equals_node_seconds_times_price(self):
+        r = run_experiment(ExperimentSpec(workload="slow", seed=1))
+        assert r.cost == pytest.approx(r.node_seconds * 0.011, rel=1e-9)
+
+    def test_static_cluster_without_autoscaler_gets_stuck(self):
+        spec = ExperimentSpec(workload="slow", rescheduler="void",
+                              autoscaler="void", static_workers=2, seed=0)
+        r = run_experiment(spec)
+        assert not r.completed    # 2 nodes cannot host 18 services
+
+
+# ---------------------------- property tests ---------------------------------
+
+_KINDS = st.sampled_from(list(JOB_TYPES.values()))
+
+
+@st.composite
+def random_arrivals(draw):
+    n = draw(st.integers(min_value=1, max_value=25))
+    times = sorted(draw(st.lists(
+        st.floats(min_value=0.0, max_value=1200.0, allow_nan=False),
+        min_size=n, max_size=n)))
+    specs = [draw(_KINDS) for _ in range(n)]
+    return [Arrival(t, s) for t, s in zip(times, specs)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrivals=random_arrivals(),
+       rescheduler=st.sampled_from(["void", "non-binding", "binding"]),
+       autoscaler=st.sampled_from(["non-binding", "binding"]))
+def test_property_invariants_hold(arrivals, rescheduler, autoscaler):
+    """For any workload: completion, no overcommit, no lost pods, sane cost."""
+    spec = ExperimentSpec(workload="custom", rescheduler=rescheduler,
+                          autoscaler=autoscaler, seed=0, arrivals=arrivals)
+    sim = build_simulation(spec)
+    result = sim.run()
+    # 1. with an autoscaler every admissible workload completes
+    assert result.completed
+    # 2. capacity was never exceeded (checked every cycle too)
+    sim.cluster.check_invariants()
+    # 3. no pod lost: every batch succeeded, every service bound
+    for pod in sim.orch.pods:
+        if pod.is_batch:
+            assert pod.phase == PodPhase.SUCCEEDED
+        else:
+            assert pod.phase == PodPhase.BOUND
+    # 4. billing is consistent and positive
+    assert result.cost > 0
+    assert result.cost == pytest.approx(result.node_seconds * 0.011, rel=1e-9)
+    # 5. the sum of open+closed billing windows covers every launched node
+    assert not sim.cost.records            # close_all() closed everything
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_property_workload_generator_valid(seed):
+    for name in ("bursty", "slow", "mixed"):
+        arrivals = generate_workload(name, seed=seed)
+        assert len(arrivals) == 50
+        times = [a.time for a in arrivals]
+        assert times == sorted(times)
+        assert all(t >= 0 for t in times)

@@ -1,0 +1,125 @@
+"""Fleet extensions: failure injection + recovery, stragglers, estimator
+oversubscription, trainer preemption/resume (the moveable-job contract)."""
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cloud.adapter import TPU_V5E_HOST
+from repro.core import (Arrival, ExperimentSpec, PodKind, PodPhase, PodSpec,
+                        Resources, run_experiment)
+from repro.core.estimator import (EmaEstimator, OversubscribingScheduler,
+                                  UsageModel)
+from repro.core.experiment import build_simulation
+from repro.core.failures import FailureInjector, StragglerInjector
+from repro.core.scheduler import BestFitBinPackingScheduler
+from repro.core.workload import generate_workload, make_fleet_job_types
+
+
+class TestFailures:
+    def test_workload_completes_under_failures(self):
+        spec = ExperimentSpec(
+            workload="slow", rescheduler="non-binding", autoscaler="binding",
+            seed=0, failure_injector=FailureInjector(mtbf_s=1200.0, seed=3))
+        r = run_experiment(spec)
+        assert r.completed
+        assert r.failures_injected > 0     # failures actually happened
+        assert r.evictions >= r.failures_injected  # pods were recreated
+
+    def test_checkpointable_jobs_keep_progress(self):
+        """A checkpointable training job that is failed mid-run resumes from
+        its checkpoint boundary instead of restarting from zero."""
+        types = make_fleet_job_types()
+        arrivals = [Arrival(0.0, types["train_large"])]   # 15 min job
+        spec = ExperimentSpec(workload="fleet", arrivals=arrivals,
+                              template=TPU_V5E_HOST, initial_workers=1,
+                              rescheduler="void", autoscaler="binding",
+                              failure_injector=FailureInjector(
+                                  mtbf_s=600.0, seed=7))
+        sim = build_simulation(spec)
+        result = sim.run()
+        assert result.completed
+        pod = sim.orch.pods[0]
+        if result.failures_injected:
+            # restarted at least once yet finished earlier than
+            # restart-from-zero would allow (duration < incarnations * 900)
+            assert pod.incarnation >= 1
+            assert result.duration_s < (pod.incarnation + 1) * 900 + 600
+
+    def test_straggler_mitigation_evicts_slow_checkpointable_jobs(self):
+        types = make_fleet_job_types()
+        arrivals = [Arrival(0.0, types["train_med"]),
+                    Arrival(1.0, types["train_med"])]
+        spec = ExperimentSpec(workload="fleet", arrivals=arrivals,
+                              template=TPU_V5E_HOST, initial_workers=2,
+                              rescheduler="void", autoscaler="binding",
+                              straggler_threshold=0.8)
+        sim = build_simulation(spec)
+        # make the first node a straggler
+        first = sorted(sim.cluster.nodes.values(),
+                       key=lambda n: n.node_id)[0]
+        first.speed_factor = 0.3
+        r = sim.run()
+        assert r.completed
+        assert r.evictions >= 1            # the slow job was migrated
+
+
+class TestEstimator:
+    def test_ema_learns_usage_ratio(self):
+        est = EmaEstimator(alpha=0.5, prior=1.0)
+        from repro.core.workload import JOB_TYPES
+        from repro.core.pods import Pod
+        pod = Pod(spec=JOB_TYPES["service_med"], submit_time=0.0)
+        usage = UsageModel({"service_med": 0.5})
+        for _ in range(8):
+            est.observe(pod, usage.usage(pod))
+        assert est.ratio("service_med") == pytest.approx(0.5, abs=0.05)
+
+    def test_oversubscription_packs_more(self):
+        from repro.core import Cluster, Node, gi
+        from repro.core.pods import Pod
+        from repro.core.workload import JOB_TYPES
+        est = EmaEstimator(alpha=1.0)
+        usage = UsageModel({"service_med": 0.5})
+        probe = Pod(spec=JOB_TYPES["service_med"], submit_time=0.0)
+        est.observe(probe, usage.usage(probe))
+
+        def fill(scheduler):
+            cluster = Cluster()
+            node = Node(allocatable=Resources(940, gi(3.5)))
+            node.mark_ready(0.0)
+            cluster.add_node(node)
+            n = 0
+            while True:
+                pod = Pod(spec=JOB_TYPES["service_med"], submit_time=0.0)
+                if not scheduler.schedule(cluster, pod, 0.0):
+                    return n
+                n += 1
+
+        plain = fill(BestFitBinPackingScheduler())
+        over = fill(OversubscribingScheduler(BestFitBinPackingScheduler(),
+                                             est))
+        assert over > plain
+
+
+class TestTrainerPreemption:
+    def test_preempt_checkpoint_resume(self):
+        from repro.configs import get_config
+        from repro.train.data import DataConfig
+        from repro.train.optimizer import OptimizerConfig
+        from repro.train.trainer import Trainer, TrainerConfig
+        cfg = get_config("deepseek-7b", tiny=True)
+        opt = OptimizerConfig(total_steps=20)
+        data = DataConfig(batch_size=2, seq_len=32)
+        with tempfile.TemporaryDirectory() as d:
+            tcfg = TrainerConfig(total_steps=20, checkpoint_every=5,
+                                 checkpoint_dir=d, log_every=100,
+                                 seed=1)
+            t1 = Trainer(cfg, opt, data, tcfg, log_fn=lambda s: None)
+            t1.request_stop()               # evicted before the first step
+            out = t1.run()
+            assert out["completed"] == 0.0
+            t2 = Trainer(cfg, opt, data, tcfg, log_fn=lambda s: None)
+            out2 = t2.run()
+            assert out2["completed"] == 1.0 and t2.step == 20

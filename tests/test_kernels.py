@@ -1,0 +1,160 @@
+"""Pallas kernel validation: interpret=True sweeps over shapes/dtypes vs the
+pure-jnp oracles in `repro.kernels.ref` (per the kernel-layer contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+
+
+def _qkv(key, B, Hq, Hkv, T, S, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, T, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), jnp.float32)
+    return (q.astype(dtype), k.astype(dtype), v.astype(dtype))
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=2e-2, rtol=2e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,Hq,Hkv,T,hd",
+        [
+            (1, 1, 1, 128, 64),     # minimal
+            (2, 4, 4, 256, 64),     # MHA, multiple blocks
+            (2, 8, 2, 256, 128),    # GQA 4:1, MXU-aligned head
+            (1, 6, 1, 384, 256),    # MQA, odd head count, big head_dim
+        ])
+    def test_causal_matches_ref(self, B, Hq, Hkv, T, hd, dtype):
+        q, k, v = _qkv(jax.random.key(0), B, Hq, Hkv, T, T, hd, dtype)
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [64, 128])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(jax.random.key(1), 2, 2, 2, 256, 256, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_non_causal(self):
+        q, k, v = _qkv(jax.random.key(2), 1, 2, 2, 128, 128, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_block_sizes(self):
+        q, k, v = _qkv(jax.random.key(3), 1, 2, 2, 256, 256, 64, jnp.float32)
+        want = ref.attention_ref(q, k, v, causal=True)
+        for bq, bk in [(64, 64), (128, 64), (64, 256), (256, 128)]:
+            out = flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                       atol=2e-5, rtol=2e-5,
+                                       err_msg=f"bq={bq} bk={bk}")
+
+    def test_matches_model_attention(self):
+        """The kernel agrees with the model's XLA attention path."""
+        from repro.configs import get_config
+        from repro.models import layers
+        from repro.models.params import init_params
+        import dataclasses
+        cfg = dataclasses.replace(get_config("deepseek-7b", tiny=True),
+                                  dtype="float32", attn_chunk=0)
+        p = init_params(jax.random.key(0), {"a": layers.attn_specs(cfg)},
+                        "float32")["a"]
+        B, T = 2, 128
+        x = 0.1 * jax.random.normal(jax.random.key(1), (B, T, cfg.d_model))
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        want = layers.attention(p, x, cfg, positions=positions, causal=True)
+        q, k, v = layers._project_qkv(p, x, cfg, positions, True)
+        out = flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                              v.swapaxes(1, 2), causal=True, sm_scale=1.0,
+                              interpret=True).swapaxes(1, 2)
+        out = jnp.einsum("bthk,hkd->btd", out, p["w_o"])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,T,R", [(1, 128, 128), (2, 256, 512),
+                                       (3, 512, 256)])
+    def test_matches_ref(self, B, T, R, dtype):
+        ks = jax.random.split(jax.random.key(0), 2)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, R))).astype(dtype)
+        b = jax.random.normal(ks[1], (B, T, R), jnp.float32).astype(dtype)
+        out = rglru_scan(a, b, interpret=True)
+        want = ref.rglru_scan_ref(a, b)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+    def test_block_shapes(self):
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.key(1), (2, 256, 256)))
+        b = jax.random.normal(jax.random.key(2), (2, 256, 256))
+        want = ref.rglru_scan_ref(a, b)
+        for br, ct in [(128, 64), (256, 256), (128, 128)]:
+            out = rglru_scan(a, b, block_r=br, chunk_t=ct, interpret=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"br={br} ct={ct}")
+
+    def test_matches_model_rglru(self):
+        """Kernel result equals the model's associative_scan implementation."""
+        from repro.configs import get_config
+        from repro.models import rglru as m
+        cfg = get_config("recurrentgemma-9b", tiny=True)
+        from repro.models.params import init_params
+        p = init_params(jax.random.key(0), {"m": m.rglru_specs(cfg)},
+                        "float32")["m"]
+        x = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_rnn))
+        a, b = m._coeffs(p, x, cfg.d_rnn)
+        want = m.rglru_scan(p, x, cfg)
+        out = rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32),
+                         block_r=cfg.d_rnn, chunk_t=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_ops_dispatch_falls_back_on_cpu():
+    q, k, v = _qkv(jax.random.key(9), 1, 2, 2, 128, 128, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+class TestMLSTMChunkwiseKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,H,T,dh,chunk", [(1, 1, 128, 64, 64),
+                                                (2, 2, 128, 32, 32)])
+    def test_matches_model_oracle(self, B, H, T, dh, chunk, dtype):
+        from repro.kernels.mlstm_chunkwise import mlstm_chunkwise
+        from repro.models import xlstm
+        ks = jax.random.split(jax.random.key(0), 5)
+        q = jax.random.normal(ks[0], (B, H, T, dh)).astype(dtype)
+        k = (jax.random.normal(ks[1], (B, H, T, dh)) / np.sqrt(dh)).astype(dtype)
+        v = jax.random.normal(ks[2], (B, H, T, dh)).astype(dtype)
+        i_raw = jax.random.normal(ks[3], (B, H, T)).astype(dtype)
+        f_raw = (jax.random.normal(ks[4], (B, H, T)) + 2.0).astype(dtype)
+        out = mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=chunk,
+                              interpret=True)
+        want, _ = xlstm._mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=chunk)
+        tol = dict(atol=2e-4, rtol=2e-3) if dtype == jnp.float32 \
+            else dict(atol=5e-2, rtol=5e-2)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **tol)

@@ -1,0 +1,117 @@
+"""Unit tests for paper Alg. 3/4 (non-binding / binding reschedulers)."""
+import pytest
+
+from repro.core import (BindingRescheduler, Cluster, Node,
+                        NonBindingRescheduler, Pod, PodKind, PodPhase,
+                        PodSpec, Resources, VoidRescheduler, gi)
+from repro.core.rescheduler import RescheduleOutcome
+
+from tests.test_scheduler import mk_node, mk_pod
+
+
+def aged_pod(mem_gi, now, age=120.0, **kw):
+    pod = mk_pod(mem_gi=mem_gi, t=now - age, **kw)
+    return pod
+
+
+class TestGate:
+    def test_young_pod_waits(self):
+        cluster = Cluster()
+        cluster.add_node(mk_node())
+        pod = mk_pod(mem_gi=3.9, t=100.0)
+        r = NonBindingRescheduler(max_pod_age_s=60.0)
+        assert r.reschedule(cluster, pod, 110.0) == RescheduleOutcome.WAIT
+
+    def test_void_never_waits(self):
+        cluster = Cluster()
+        pod = mk_pod(mem_gi=3.9, t=100.0)
+        assert (VoidRescheduler().reschedule(cluster, pod, 100.0)
+                == RescheduleOutcome.FAILED)
+
+
+class TestNonBinding:
+    def _setup(self):
+        """node a: moveable service (2Gi) + batch (1Gi); node b: empty.
+        Unschedulable pod needs 3Gi -> evicting the mover frees enough."""
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        mover = mk_pod(mem_gi=2.0, moveable=True)
+        batch = mk_pod(mem_gi=1.0, kind=PodKind.BATCH)
+        cluster.bind(mover, a, 0.0)
+        cluster.bind(batch, a, 0.0)
+        filler = mk_pod(mem_gi=3.0)
+        cluster.bind(filler, b, 0.0)
+        return cluster, a, b, mover, batch
+
+    def test_evicts_mover_and_leaves_everyone_pending(self):
+        cluster, a, b, mover, batch = self._setup()
+        pod = aged_pod(3.0, now=200.0)
+        out = NonBindingRescheduler(max_pod_age_s=60.0).reschedule(
+            cluster, pod, 200.0)
+        # mover (2Gi) cannot fit on b (only 0.5 free) -> plan impossible.
+        assert out == RescheduleOutcome.FAILED
+        assert mover.phase == PodPhase.BOUND
+
+    def test_successful_eviction(self):
+        cluster, a, b, mover, batch = self._setup()
+        c = cluster.add_node(mk_node(node_id="c"))   # room for the mover
+        pod = aged_pod(2.4, now=200.0)   # fits in a's 0.5 free + 2.0 freed
+        out = NonBindingRescheduler(max_pod_age_s=60.0).reschedule(
+            cluster, pod, 200.0)
+        assert out == RescheduleOutcome.RESCHEDULED
+        # Non-binding: mover is PENDING again (recreated), pod still pending.
+        assert mover.phase == PodPhase.PENDING
+        assert mover.incarnation == 1
+        assert pod.phase == PodPhase.PENDING
+        # Freed node now fits the pod.
+        assert a.free.mem_mb >= pod.requests.mem_mb
+        cluster.check_invariants()
+
+    def test_does_not_evict_more_than_needed(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        m1 = mk_pod(mem_gi=1.2, moveable=True)
+        m2 = mk_pod(mem_gi=1.2, moveable=True)
+        cluster.bind(m1, a, 0.0)
+        cluster.bind(m2, a, 0.0)
+        cluster.add_node(mk_node(node_id="b"))
+        pod = aged_pod(2.0, now=200.0)   # freeing one 1.2Gi mover suffices
+        out = NonBindingRescheduler(max_pod_age_s=60.0).reschedule(
+            cluster, pod, 200.0)
+        assert out == RescheduleOutcome.RESCHEDULED
+        evicted = [m for m in (m1, m2) if m.phase == PodPhase.PENDING]
+        assert len(evicted) == 1
+
+
+class TestBinding:
+    def test_binds_movers_and_pod(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        mover = mk_pod(mem_gi=2.0, moveable=True)
+        cluster.bind(mover, a, 0.0)
+        pod = aged_pod(3.0, now=200.0)
+        out = BindingRescheduler(max_pod_age_s=60.0).reschedule(
+            cluster, pod, 200.0)
+        assert out == RescheduleOutcome.RESCHEDULED
+        assert mover.phase == PodPhase.BOUND and mover.node_id == "b"
+        assert pod.phase == PodPhase.BOUND and pod.node_id == "a"
+        cluster.check_invariants()
+
+    def test_no_moveables_fails(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        batch = mk_pod(mem_gi=3.0, kind=PodKind.BATCH)
+        cluster.bind(batch, a, 0.0)
+        pod = aged_pod(1.0, now=200.0)
+        out = BindingRescheduler(max_pod_age_s=60.0).reschedule(
+            cluster, pod, 200.0)
+        assert out == RescheduleOutcome.FAILED
+        assert batch.phase == PodPhase.BOUND
+
+
+def test_batch_pods_cannot_be_moveable():
+    with pytest.raises(ValueError):
+        PodSpec("x", PodKind.BATCH, Resources(100, 100.0), duration_s=1.0,
+                moveable=True)

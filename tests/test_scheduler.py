@@ -1,0 +1,101 @@
+"""Unit tests for paper Alg. 2 (best-fit) + baseline schedulers."""
+import pytest
+
+from repro.core import (BestFitBinPackingScheduler, Cluster,
+                        KubernetesDefaultScheduler, Node, Pod, PodKind,
+                        PodSpec, Resources, WorstFitScheduler, gi)
+
+
+def mk_node(cpu_m=940, mem_gi=3.5, node_id="", ready=True):
+    n = Node(allocatable=Resources(cpu_m, gi(mem_gi)), node_id=node_id)
+    if ready:
+        n.mark_ready(0.0)
+    return n
+
+
+def mk_pod(cpu_m=100, mem_gi=1.0, kind=PodKind.SERVICE, moveable=False, t=0.0):
+    spec = PodSpec("t", kind, Resources(cpu_m, gi(mem_gi)),
+                   duration_s=60.0 if kind == PodKind.BATCH else 0.0,
+                   moveable=moveable)
+    return Pod(spec=spec, submit_time=t)
+
+
+class TestBestFit:
+    def test_picks_fullest_feasible_node(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        # Load b more than a: best fit must pick b (least free RAM).
+        cluster.bind(mk_pod(mem_gi=2.0), b, 0.0)
+        cluster.bind(mk_pod(mem_gi=0.5), a, 0.0)
+        pod = mk_pod(mem_gi=1.0)
+        assert BestFitBinPackingScheduler().schedule(cluster, pod, 1.0)
+        assert pod.node_id == "b"
+
+    def test_memory_is_the_best_fit_key_not_cpu(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        cluster.bind(mk_pod(cpu_m=800, mem_gi=0.2), a, 0.0)  # a: busy CPU
+        cluster.bind(mk_pod(cpu_m=100, mem_gi=2.0), b, 0.0)  # b: busy RAM
+        pod = mk_pod(cpu_m=100, mem_gi=1.0)
+        BestFitBinPackingScheduler().schedule(cluster, pod, 1.0)
+        assert pod.node_id == "b"   # least free memory wins
+
+    def test_cpu_filter_excludes_nodes(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        cluster.bind(mk_pod(cpu_m=900, mem_gi=0.1), a, 0.0)
+        pod = mk_pod(cpu_m=100, mem_gi=0.1)
+        assert not BestFitBinPackingScheduler().schedule(cluster, pod, 1.0)
+
+    def test_unschedulable_when_nothing_fits(self):
+        cluster = Cluster()
+        cluster.add_node(mk_node(node_id="a"))
+        pod = mk_pod(mem_gi=4.0)   # bigger than allocatable
+        assert not BestFitBinPackingScheduler().schedule(cluster, pod, 0.0)
+        assert pod.node_id is None
+
+    def test_tainted_node_is_last_resort(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        b.taint()
+        pod = mk_pod(mem_gi=1.0)
+        BestFitBinPackingScheduler().schedule(cluster, pod, 0.0)
+        assert pod.node_id == "a"
+        # Fill a; now only the tainted node can host.
+        big = mk_pod(mem_gi=2.4)
+        BestFitBinPackingScheduler().schedule(cluster, big, 0.0)
+        assert big.node_id == "a"
+        last = mk_pod(mem_gi=1.0)
+        assert BestFitBinPackingScheduler().schedule(cluster, last, 0.0)
+        assert last.node_id == "b"
+
+    def test_binding_updates_accounting(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        pod = mk_pod(cpu_m=200, mem_gi=1.0)
+        BestFitBinPackingScheduler().schedule(cluster, pod, 0.0)
+        assert a.used == Resources(200, gi(1.0))
+        cluster.check_invariants()
+
+
+class TestK8sDefault:
+    def test_spreads_to_least_loaded(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        cluster.bind(mk_pod(mem_gi=2.0, cpu_m=400), b, 0.0)
+        pod = mk_pod(mem_gi=1.0)
+        KubernetesDefaultScheduler().schedule(cluster, pod, 0.0)
+        assert pod.node_id == "a"   # opposite of best-fit
+
+    def test_worst_fit_matches_spread_on_memory(self):
+        cluster = Cluster()
+        a = cluster.add_node(mk_node(node_id="a"))
+        b = cluster.add_node(mk_node(node_id="b"))
+        cluster.bind(mk_pod(mem_gi=1.0), a, 0.0)
+        pod = mk_pod(mem_gi=0.5)
+        WorstFitScheduler().schedule(cluster, pod, 0.0)
+        assert pod.node_id == "b"

@@ -1,0 +1,149 @@
+"""End-to-end behaviour tests for the paper's system (the top-level claims).
+
+These are the "does the whole thing hang together" tests: the paper's
+qualitative results reproduce, the dry-run machinery builds coherent
+programs, and the data plane trains/serves through the public API.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ExperimentSpec, run_all_combos, run_experiment,
+                        run_k8s_baseline)
+
+
+class TestPaperClaims:
+    """§7.2 qualitative claims, each on its own seed set."""
+
+    def test_autoscaling_cuts_cost_vs_static_k8s(self):
+        """Fig. 4: every combo beats the static baseline on cost."""
+        k8s = run_k8s_baseline("slow", seed=0)
+        for r in run_all_combos("slow", seed=0):
+            assert r.cost < k8s.cost, r.combo()
+
+    def test_headline_cost_reduction_on_slow_workload(self):
+        """Paper: NBR-BAS achieves >58% on slow. Across seeds our
+        reproduction's best-seed saving exceeds 55% and the mean exceeds
+        40% (the paper reports a single run on a live cloud)."""
+        saves = []
+        for seed in range(4):
+            r = run_experiment(ExperimentSpec(
+                workload="slow", rescheduler="non-binding",
+                autoscaler="binding", seed=seed))
+            k8s = run_k8s_baseline("slow", seed=seed)
+            saves.append(100 * (1 - r.cost / k8s.cost))
+        assert max(saves) > 55.0, saves
+        assert sum(saves) / len(saves) > 40.0, saves
+
+    def test_nonbinding_autoscaler_worst_ram_utilization(self):
+        """Table 5: NBAS overprovisions -> lowest RAM req/cap ratio."""
+        rows = {}
+        for seed in range(3):
+            for r in run_all_combos("slow", seed=seed):
+                rows.setdefault(r.autoscaler, []).append(r.avg_ram_ratio)
+        nbas = sum(rows["non-binding"]) / len(rows["non-binding"])
+        bas = sum(rows["binding"]) / len(rows["binding"])
+        assert nbas <= bas + 0.02
+
+    def test_bursty_waits_longer_than_slow(self):
+        """Table 5: pending times on bursty >> slow (provisioning delay)."""
+        slow = run_experiment(ExperimentSpec(workload="slow", seed=0))
+        bursty = run_experiment(ExperimentSpec(workload="bursty", seed=0))
+        assert bursty.median_pending_s > slow.median_pending_s
+
+
+class TestDataPlaneEndToEnd:
+    def test_train_then_serve_same_params(self):
+        """Train a few steps, then serve with the trained weights."""
+        import jax
+        from repro.configs import get_config
+        from repro.serve.engine import EngineConfig, Request, ServeEngine
+        from repro.train.data import DataConfig
+        from repro.train.optimizer import OptimizerConfig
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        cfg = get_config("glm4-9b", tiny=True)
+        trainer = Trainer(cfg, OptimizerConfig(total_steps=5),
+                          DataConfig(batch_size=2, seq_len=32),
+                          TrainerConfig(total_steps=5, checkpoint_every=0,
+                                        log_every=100),
+                          log_fn=lambda s: None)
+        trainer.run()
+        eng = ServeEngine(cfg, trainer.state.params,
+                          EngineConfig(num_slots=2, cache_len=64))
+        req = Request(uid=0, prompt=np.arange(6) % cfg.vocab_size,
+                      max_new_tokens=4)
+        assert eng.admit(req)
+        while req.done_at is None:
+            eng.step()
+        assert len(req.tokens) == 4
+        assert all(0 <= t < cfg.vocab_size for t in req.tokens)
+
+
+class TestDryRunMachinery:
+    def test_sharding_rules_cover_all_archs(self):
+        """Every arch's parameter tree resolves to valid PartitionSpecs on
+        the production mesh shape (divisibility fallback never crashes)."""
+        import jax
+        from repro.configs import get_config, list_archs
+        from repro.distributed.sharding import DEFAULT_RULES, ShardingCtx
+        from repro.models import transformer as tf
+        from repro.models.params import param_axes, param_shapes
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        for arch in list_archs():
+            cfg = get_config(arch)
+            rules = dict(DEFAULT_RULES)
+            rules.update(dict(cfg.rule_overrides))
+            ctx = ShardingCtx.__new__(ShardingCtx)
+            ctx.mesh = FakeMesh()
+            ctx.rules = rules
+            shapes = param_shapes(tf.model_specs(cfg))
+            axes = param_axes(tf.model_specs(cfg))
+            import jax as _jax
+            specs = _jax.tree.map(
+                lambda s, a=None: None, shapes)  # structure check only
+            flat_s = _jax.tree.leaves(shapes)
+            flat_a = _jax.tree.leaves(axes, is_leaf=lambda x:
+                                      isinstance(x, tuple))
+            assert len(flat_s) == len(flat_a)
+            for s, a in zip(flat_s, flat_a):
+                spec = ctx.resolve(s.shape, a)
+                # every named mesh axis used at most once
+                used = [ax for e in spec if e for ax in
+                        (e if isinstance(e, tuple) else (e,))]
+                assert len(used) == len(set(used)), (arch, s.shape, a, spec)
+
+    def test_collective_parser_on_known_hlo(self):
+        from repro.launch.hlo_analysis import collective_bytes, shape_bytes
+        assert shape_bytes("f32[4,8]") == 128
+        assert shape_bytes("bf16[10]") == 20
+        assert shape_bytes("(f32[2], s32[3])") == 20
+        hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %ar = f32[8]{0} all-reduce(%gte), channel_id=1, replica_groups=[2,2]<=[4]
+  ROOT %t = (s32[], f32[8]) tuple(%iter, %ar)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %constant.1 = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%gte, %constant.1), direction=LT
+}
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %ag = f32[16]{0} all-gather(%x), channel_id=2, replica_groups=[2,2]<=[4], dimensions={0}
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+        coll = collective_bytes(hlo)
+        # all-gather 64B once + all-reduce 32B x 5 trips = 224
+        assert coll["all-gather"] == 64
+        assert coll["all-reduce"] == 160
+        assert coll["total"] == 224

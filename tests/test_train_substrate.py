@@ -1,0 +1,199 @@
+"""Unit tests: optimizer, losses, data pipeline, checkpoint manager."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.train import losses
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import (AdamWState, OptimizerConfig, adamw_update,
+                                   clip_by_global_norm, global_norm,
+                                   init_opt_state, schedule)
+
+
+class TestOptimizer:
+    def test_schedule_warmup_and_decay(self):
+        cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                              total_steps=110, min_lr_ratio=0.1)
+        assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+        assert float(schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        end = float(schedule(cfg, jnp.asarray(110)))
+        assert end == pytest.approx(0.1, abs=1e-6)
+
+    def test_adamw_moves_toward_minimum(self):
+        cfg = OptimizerConfig(learning_rate=0.1, warmup_steps=1,
+                              total_steps=200, weight_decay=0.0)
+        params = {"w": jnp.asarray([[3.0, -2.0]])}
+        state = init_opt_state(params)
+        for _ in range(150):
+            grads = jax.tree.map(lambda p: 2 * p, params)   # d/dp ||p||^2
+            params, state, _ = adamw_update(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"]).max()) < 0.15
+
+    def test_clip_by_global_norm(self):
+        tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) == pytest.approx(5.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_weight_decay_only_on_matrices(self):
+        cfg = OptimizerConfig(learning_rate=0.1, warmup_steps=1,
+                              weight_decay=10.0)
+        params = {"w": jnp.ones((2, 2)), "scale": jnp.ones((2,))}
+        state = init_opt_state(params)
+        zero_grads = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(cfg, params, zero_grads, state)
+        assert float(jnp.max(jnp.abs(new["scale"] - 1.0))) < 1e-6   # no decay
+        assert float(jnp.max(new["w"])) < 1.0                        # decayed
+
+
+class TestLosses:
+    def test_uniform_logits_give_log_vocab(self):
+        B, T, V = 2, 8, 100
+        logits = jnp.zeros((B, T, V))
+        labels = jnp.zeros((B, T), jnp.int32)
+        loss, m = losses.cross_entropy(logits, labels)
+        assert float(loss) == pytest.approx(np.log(V), rel=1e-5)
+
+    def test_padded_vocab_masked(self):
+        B, T, V, Vp = 1, 4, 7, 16
+        logits = jnp.zeros((B, T, Vp))
+        labels = jnp.zeros((B, T), jnp.int32)
+        loss, _ = losses.cross_entropy(logits, labels, vocab_size=V)
+        assert float(loss) == pytest.approx(np.log(V), rel=1e-5)
+
+    def test_loss_mask(self):
+        logits = jnp.zeros((1, 4, 8))
+        logits = logits.at[0, 0, 3].set(100.0)
+        labels = jnp.asarray([[3, 0, 0, 0]], jnp.int32)
+        mask = jnp.asarray([[1.0, 0.0, 0.0, 0.0]])
+        loss, m = losses.cross_entropy(logits, labels, mask)
+        assert float(loss) == pytest.approx(0.0, abs=1e-4)
+        assert float(m["accuracy"]) == 1.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(chunk=st.sampled_from([2, 4, 8]), seed=st.integers(0, 100))
+    def test_chunked_ce_matches_dense(self, chunk, seed):
+        B, T, D, V = 2, 16, 12, 40
+        ks = jax.random.split(jax.random.key(seed), 3)
+        x = jax.random.normal(ks[0], (B, T, D))
+        w = jax.random.normal(ks[1], (D, 64)) * 0.1
+        labels = jax.random.randint(ks[2], (B, T), 0, V)
+        dense_logits = jnp.einsum("btd,dv->btv", x, w)
+        want, _ = losses.cross_entropy(dense_logits, labels, vocab_size=V)
+        got, _ = losses.chunked_ce(x, w, labels, None, vocab_size=V,
+                                   chunk=chunk)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+    def test_chunked_ce_gradients_match(self):
+        B, T, D, V = 2, 8, 12, 32
+        ks = jax.random.split(jax.random.key(0), 3)
+        x = jax.random.normal(ks[0], (B, T, D))
+        w = jax.random.normal(ks[1], (D, V)) * 0.1
+        labels = jax.random.randint(ks[2], (B, T), 0, V)
+
+        def dense(xw):
+            x_, w_ = xw
+            lg = jnp.einsum("btd,dv->btv", x_, w_)
+            return losses.cross_entropy(lg, labels, vocab_size=V)[0]
+
+        def chunked(xw):
+            x_, w_ = xw
+            return losses.chunked_ce(x_, w_, labels, None, vocab_size=V,
+                                     chunk=4)[0]
+
+        g1 = jax.grad(dense)((x, w))
+        g2 = jax.grad(chunked)((x, w))
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-4)
+
+
+class TestData:
+    def test_deterministic_and_step_keyed(self):
+        cfg = get_config("deepseek-7b", tiny=True)
+        d1 = SyntheticLM(cfg, DataConfig(batch_size=2, seq_len=16, seed=1))
+        d2 = SyntheticLM(cfg, DataConfig(batch_size=2, seq_len=16, seed=1))
+        np.testing.assert_array_equal(d1.batch(5)["tokens"],
+                                      d2.batch(5)["tokens"])
+        assert not np.array_equal(d1.batch(5)["tokens"],
+                                  d1.batch(6)["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = get_config("deepseek-7b", tiny=True)
+        b = SyntheticLM(cfg, DataConfig(batch_size=2, seq_len=16)).batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_accum_leading_axis(self):
+        cfg = get_config("deepseek-7b", tiny=True)
+        b = SyntheticLM(cfg, DataConfig(batch_size=2, seq_len=16,
+                                        accum=3)).batch(0)
+        assert b["tokens"].shape == (3, 2, 16)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self):
+        tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+                "b": {"c": np.asarray([1, 2], np.int32)}}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2)
+            mgr.save(3, tree, extra={"note": "hi"})
+            restored, step, extra = mgr.restore(tree)
+            assert step == 3 and extra == {"note": "hi"}
+            np.testing.assert_array_equal(restored["a"], tree["a"])
+
+    def test_keep_n_gc(self):
+        tree = {"a": np.zeros(2, np.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2)
+            for s in (1, 2, 3, 4):
+                mgr.save(s, tree)
+            assert mgr.all_steps() == [3, 4]
+            assert mgr.latest_step() == 4
+
+    def test_latest_pointer_atomic(self):
+        tree = {"a": np.zeros(2, np.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(1, tree)
+            with open(os.path.join(d, "LATEST")) as f:
+                assert f.read().strip() == "step_00000001"
+
+
+class TestK8sObjects:
+    def test_manifest_roundtrip(self):
+        from repro.k8s import from_manifest
+        manifest = {
+            "apiVersion": "apps/v1", "kind": "Deployment",
+            "metadata": {"generateName": "nginx-"},
+            "spec": {"replicas": 1, "template": {
+                "metadata": {"labels": {"app": "nginx",
+                                        "rescheduling": "moveable"}},
+                "spec": {"schedulerName": "customScheduler",
+                         "containers": [{"name": "nginx", "image": "nginx",
+                                         "resources": {
+                                             "requests": {"memory": "1.4Gi",
+                                                          "cpu": "100m"},
+                                             "limits": {"memory": "1.4Gi",
+                                                        "cpu": "100m"}}}]}}},
+        }
+        spec = from_manifest(manifest)
+        assert spec.moveable and spec.requests.cpu_m == 100
+        assert spec.requests.mem_mb == pytest.approx(1.4 * 1024)
+
+    def test_guaranteed_qos_enforced(self):
+        from repro.k8s import from_manifest
+        bad = {"kind": "Deployment", "metadata": {},
+               "spec": {"template": {"metadata": {}, "spec": {"containers": [
+                   {"resources": {"requests": {"memory": "1Gi", "cpu": "1"},
+                                  "limits": {"memory": "2Gi", "cpu": "1"}}}
+               ]}}}}
+        with pytest.raises(ValueError):
+            from_manifest(bad)
