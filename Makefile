@@ -1,0 +1,12 @@
+# Developer entry points.  `make check` is the CI gate.
+
+.PHONY: check test bench-sched
+
+check:
+	bash scripts/ci.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-sched:
+	PYTHONPATH=src python benchmarks/bench_sched_throughput.py --out BENCH_sched.json

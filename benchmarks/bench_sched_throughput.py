@@ -1,0 +1,174 @@
+"""Scheduler-cycle throughput benchmark: array engine vs. seed object scans.
+
+Measures the end-to-end cycle hot path of the discrete-event simulator —
+pending-queue snapshot, filter+select per pod, bind, scale-in — on synthetic
+batch workloads at three scales:
+
+* ``small``  —    50 nodes x  2,000 pods (CI smoke; both engines run fully)
+* ``medium`` —   500 nodes x 10,000 pods
+* ``large``  — 2,000 nodes x 50,000 pods (the ROADMAP's production regime)
+
+Because the two engines are bit-for-bit behaviour-identical (see
+``tests/test_engine_parity.py``), cycle *i* performs identical scheduling
+work under both — so cycle throughput (pods bound per second of cycle
+compute, measured over the same post-warmup cycle window) is an
+apples-to-apples comparison.  The object engine is capped to a bounded
+number of cycles at the larger scales; the array engine additionally runs
+the workload to completion for an end-to-end pods/second figure.
+
+Usage::
+
+    python benchmarks/bench_sched_throughput.py                  # all scales
+    python benchmarks/bench_sched_throughput.py --scale small    # CI smoke
+    python benchmarks/bench_sched_throughput.py --engines array  # skip seed
+
+Writes ``BENCH_sched.json`` (override with ``--out``); prints
+``name,us_per_call,derived`` CSV lines like the other benches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import (Arrival, ExperimentSpec, PodKind, PodSpec,
+                        Resources, gi, reset_id_counters)
+from repro.core.experiment import build_simulation
+from repro.core.simulation import SimConfig
+
+# Average pod: 200m CPU / 614.4 MB on a 940m/3.5Gi node -> CPU binds first
+# at ~4.7 pods/node.  Arrival rate targets ~70% steady-state occupancy.
+_BATCH_TYPES = [
+    PodSpec("bench_small", PodKind.BATCH, Resources(100, gi(0.3)),
+            duration_s=120.0),
+    PodSpec("bench_med", PodKind.BATCH, Resources(200, gi(0.6)),
+            duration_s=180.0),
+    PodSpec("bench_large", PodKind.BATCH, Resources(300, gi(0.9)),
+            duration_s=240.0),
+]
+_AVG_CPU_M = 200.0
+_AVG_DURATION_S = 180.0
+_NODE_CPU_M = 940.0
+
+SCALES = {
+    #          nodes   pods   object-engine cycle cap (None = full run)
+    "small": dict(nodes=50, pods=2_000, object_cap=None),
+    "medium": dict(nodes=500, pods=10_000, object_cap=60),
+    "large": dict(nodes=2_000, pods=50_000, object_cap=25),
+}
+WARMUP_CYCLES = 5
+
+
+def synth_arrivals(n_pods: int, n_nodes: int, seed: int = 0,
+                   target_util: float = 0.7):
+    """Poisson batch arrivals sized to keep the cluster ~target_util busy."""
+    concurrency = target_util * n_nodes * (_NODE_CPU_M / _AVG_CPU_M)
+    rate = concurrency / _AVG_DURATION_S
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_pods)
+    times = np.cumsum(gaps)
+    kinds = rng.integers(0, len(_BATCH_TYPES), size=n_pods)
+    return [Arrival(float(t), _BATCH_TYPES[int(k)])
+            for t, k in zip(times, kinds)]
+
+
+def run_one(scale: str, engine: str, max_cycles=None) -> dict:
+    # Fresh global id counters per run: both engines must start from the
+    # same counter to perform identical per-cycle work (node ids order
+    # lexicographically — same reason as test_engine_parity).
+    reset_id_counters()
+
+    cfg = SCALES[scale]
+    spec = ExperimentSpec(
+        workload=f"bench-{scale}", scheduler="best-fit", rescheduler="void",
+        autoscaler="void", static_workers=cfg["nodes"], engine=engine,
+        arrivals=synth_arrivals(cfg["pods"], cfg["nodes"]))
+    sim = build_simulation(spec)
+    sim.config = SimConfig(cycle_period_s=10.0, max_cycles=max_cycles,
+                           record_cycle_times=True)
+    t0 = time.perf_counter()
+    result = sim.run()
+    wall = time.perf_counter() - t0
+
+    walls = np.asarray(sim.cycle_wall_s[WARMUP_CYCLES:])
+    placed = np.asarray(sim.cycle_placed[WARMUP_CYCLES:])
+    cycle_s = float(walls.sum()) if walls.size else 0.0
+    out = {
+        "engine": engine,
+        "cycles": sim.n_cycles,
+        "pods_placed_measured": int(placed.sum()),
+        "cycle_compute_s": round(cycle_s, 4),
+        "mean_cycle_ms": round(1e3 * float(walls.mean()), 3) if walls.size else 0.0,
+        "p95_cycle_ms": round(1e3 * float(np.percentile(walls, 95)), 3) if walls.size else 0.0,
+        "cycle_throughput_pods_per_s":
+            round(float(placed.sum()) / cycle_s, 1) if cycle_s > 0 else 0.0,
+        "wall_s": round(wall, 3),
+        "completed": result.completed,
+    }
+    if max_cycles is None and result.completed:
+        out["pods_per_s_end_to_end"] = round(cfg["pods"] / wall, 1)
+    return out
+
+
+def bench_scale(scale: str, engines) -> dict:
+    cfg = SCALES[scale]
+    row = {"nodes": cfg["nodes"], "pods": cfg["pods"], "engines": {}}
+    cap = cfg["object_cap"]
+    for engine in engines:
+        # Both engines are measured over the same capped cycle window for the
+        # speedup ratio; the array engine also runs to completion when the
+        # object run was capped (for the end-to-end number).
+        row["engines"][engine] = run_one(scale, engine, max_cycles=cap)
+        print(f"bench_sched.{scale}.{engine},"
+              f"{1e3 * row['engines'][engine]['mean_cycle_ms']:.1f},"
+              f"{row['engines'][engine]['cycle_throughput_pods_per_s']}")
+    if "array" in engines and cap is not None:
+        full = run_one(scale, "array", max_cycles=None)
+        row["engines"]["array"]["full_run"] = {
+            "wall_s": full["wall_s"], "completed": full["completed"],
+            "pods_per_s_end_to_end": full.get("pods_per_s_end_to_end"),
+        }
+    if "array" in row["engines"] and "object" in row["engines"]:
+        a = row["engines"]["array"]["cycle_throughput_pods_per_s"]
+        o = row["engines"]["object"]["cycle_throughput_pods_per_s"]
+        row["speedup_cycle_throughput"] = round(a / o, 1) if o else None
+        print(f"bench_sched.{scale}.speedup,0,{row['speedup_cycle_throughput']}")
+    return row
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="all",
+                    choices=["all"] + list(SCALES))
+    ap.add_argument("--engines", default="array,object",
+                    help="comma-separated subset of {array,object}")
+    ap.add_argument("--out", default="BENCH_sched.json")
+    args = ap.parse_args(argv)
+
+    engines = [e.strip() for e in args.engines.split(",") if e.strip()]
+    bad = [e for e in engines if e not in ("array", "object")]
+    if bad or not engines:
+        ap.error(f"--engines must name a non-empty subset of array,object "
+                 f"(got {args.engines!r})")
+    scales = list(SCALES) if args.scale == "all" else [args.scale]
+    report = {"bench": "sched_throughput",
+              "generated_unix_s": int(time.time()),
+              "warmup_cycles": WARMUP_CYCLES,
+              "scales": {}}
+    for scale in scales:
+        report["scales"][scale] = bench_scale(scale, engines)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

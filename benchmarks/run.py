@@ -5,6 +5,12 @@ Prints ``name,us_per_call,derived`` CSV lines (one per measured cell).
   * fig4   — cost reduction vs. default-K8s static baseline (58 % headline)
   * table5 — median pending time, RAM/CPU req/cap ratios, pods/node
   * roofline — three-term roofline per (arch x shape) from dry-run artifacts
+
+``bench_sched_throughput.py`` (run directly, not via this harness) measures
+the simulator's scheduler-cycle throughput — array engine vs. the seed
+object-scan engine — at small/medium/large scales (up to 2k nodes x 50k
+pods) and writes ``BENCH_sched.json``; ``make check`` runs its small-scale
+smoke so cycle-path perf regressions fail CI.
 """
 from __future__ import annotations
 

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a fast smoke of the scheduler-cycle throughput
+# benchmark, so perf regressions in the cycle hot path fail loudly.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== scheduler throughput smoke (small scale, both engines) =="
+python benchmarks/bench_sched_throughput.py --scale small \
+    --out /tmp/BENCH_sched_smoke.json
+python - <<'EOF'
+import json
+row = json.load(open("/tmp/BENCH_sched_smoke.json"))["scales"]["small"]
+arr = row["engines"]["array"]
+assert arr["completed"], "array engine failed to complete the smoke workload"
+# Machine-independent gate: the array engine must beat the seed object
+# engine measured on the same box in the same run (~3-4x at this scale;
+# 1.5 leaves slack for noisy CI runners).
+speedup = row["speedup_cycle_throughput"]
+assert speedup and speedup >= 1.5, f"cycle-path regression: speedup={speedup}"
+print(f"smoke OK: {arr['cycle_throughput_pods_per_s']} pods/s "
+      f"(speedup vs object engine: {speedup}x)")
+EOF

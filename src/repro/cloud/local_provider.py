@@ -148,10 +148,7 @@ class LiveCluster:
                 self.log(f"[live] {pod.name} evicted; checkpointed")
             elif (pod.phase == PodPhase.BOUND and pod.is_batch
                   and job.finished):
-                node = self.cluster.node_of(pod)
-                if node is not None:
-                    node.remove_pod(pod)
-                pod.complete(time.time())
+                self.cluster.complete(pod, time.time())
                 self.log(f"[live] {pod.name} completed")
 
     def evict(self, pod: Pod) -> None:

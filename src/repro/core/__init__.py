@@ -24,6 +24,22 @@ from repro.core.simulation import SimConfig, Simulation
 from repro.core.workload import (JOB_TYPES, WORKLOAD_MIXES, Arrival,
                                  generate_workload, make_fleet_job_types)
 
+
+def reset_id_counters() -> None:
+    """Restart the global node/pod id sequences.
+
+    Auto-generated node ids ("node-<seq>") order *lexicographically*, so any
+    engine-vs-engine comparison (parity tests, benchmarks) must start both
+    runs from the same counter value.  Test/bench isolation only — never
+    call this inside a running simulation.
+    """
+    import itertools
+
+    from repro.core import cluster as _cluster_mod
+    from repro.core import pods as _pods_mod
+    _cluster_mod._node_seq = itertools.count()
+    _pods_mod._uid = itertools.count()
+
 __all__ = [
     "AUTOSCALERS", "Autoscaler", "BindingAutoscaler", "NodeProvider",
     "SimpleAutoscaler", "VoidAutoscaler", "Cluster", "Node", "NodeState",
@@ -35,5 +51,5 @@ __all__ = [
     "BestFitBinPackingScheduler", "FirstFitScheduler",
     "KubernetesDefaultScheduler", "Scheduler", "WorstFitScheduler",
     "SimConfig", "Simulation", "JOB_TYPES", "WORKLOAD_MIXES", "Arrival",
-    "generate_workload", "make_fleet_job_types",
+    "generate_workload", "make_fleet_job_types", "reset_id_counters",
 ]

@@ -23,6 +23,9 @@ import abc
 import dataclasses
 from typing import Dict, List, Optional
 
+import numpy as np
+
+from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node, NodeState
 from repro.core.pods import Pod
 from repro.core.rescheduler import _ShadowCapacity
@@ -59,21 +62,47 @@ class Autoscaler(abc.ABC):
         """Provider callback once a node joins the cluster."""
 
     # -- shared Alg. 6 body ----------------------------------------------------
+    @staticmethod
+    def _step1_candidates(cluster: Cluster) -> List[Node]:
+        """Empty dynamically-created nodes (READY or TAINTED), in cluster
+        insertion order (slots are append-only, so ascending slot order is
+        insertion order — termination order is behaviour)."""
+        arr = cluster.arrays
+        if arr is not None:
+            state = arr.live("state")
+            mask = (arr.live("active") & arr.live("autoscaled")
+                    & (arr.live("pod_count") == 0)
+                    & ((state == _engine.STATE_READY)
+                       | (state == _engine.STATE_TAINTED)))
+            return [cluster.node_by_slot(int(s)) for s in np.nonzero(mask)[0]]
+        return [node for node in list(cluster.nodes.values())
+                if (node.autoscaled and not node.pods
+                    and node.state in (NodeState.READY, NodeState.TAINTED))]
+
+    @staticmethod
+    def _step23_candidates(cluster: Cluster) -> List[Node]:
+        """Non-empty autoscaled READY nodes, in cluster insertion order."""
+        arr = cluster.arrays
+        if arr is not None:
+            mask = (arr.live("active") & arr.live("autoscaled")
+                    & (arr.live("pod_count") > 0)
+                    & (arr.live("state") == _engine.STATE_READY))
+            return [cluster.node_by_slot(int(s)) for s in np.nonzero(mask)[0]]
+        return [node for node in list(cluster.nodes.values())
+                if node.autoscaled and node.state == NodeState.READY
+                and node.pods]
+
     def _scale_in_impl(self, cluster: Cluster, now: float) -> List[str]:
         touched: List[str] = []
 
         # 1. Shut down empty dynamically-created nodes (READY or TAINTED).
-        for node in list(cluster.nodes.values()):
-            if (node.autoscaled and not node.pods
-                    and node.state in (NodeState.READY, NodeState.TAINTED)):
-                self.provider.terminate_node(node, now)
-                cluster.remove_node(node, now)
-                touched.append(node.node_id)
+        for node in self._step1_candidates(cluster):
+            self.provider.terminate_node(node, now)
+            cluster.remove_node(node, now)
+            touched.append(node.node_id)
 
         # 2./3. Consolidate moveable pods off candidate nodes.
-        for node in list(cluster.nodes.values()):
-            if not node.autoscaled or node.state != NodeState.READY:
-                continue
+        for node in self._step23_candidates(cluster):
             if node.has_only_moveable():
                 if self._all_placeable(cluster, node, node.moveable_pods()):
                     for pod in list(node.pods.values()):

@@ -12,14 +12,24 @@ schedulers avoid tainted nodes unless no untainted node fits.
 Capacity accounting is *request-based*, exactly like the default Kubernetes
 scheduler (§4.1): the sum of requests of pods bound to a node never exceeds
 its allocatable capacity, regardless of actual usage.
+
+Accounting is **incremental**: ``Node.used`` is maintained on every
+add_pod/remove_pod instead of re-summing resident pods on each access, and a
+structure-of-arrays mirror (``repro.core.engine.ClusterArrays``) is kept in
+lockstep so schedulers can vectorize filter+select.  Both the object path and
+the array path read the *same* incrementally-maintained floats, so the two
+engines are bit-for-bit identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import itertools
-from typing import Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
+import numpy as np
+
+from repro.core import engine as _engine
 from repro.core.pods import Pod
 from repro.core.resources import Resources, sum_resources
 
@@ -30,6 +40,18 @@ class NodeState(enum.Enum):
     TAINTED = "tainted"             # schedulable only as a last resort
     TERMINATED = "terminated"
 
+    @property
+    def value_code(self) -> int:
+        """Int code used by the SoA mirror's state vector."""
+        return _STATE_CODES[self]
+
+
+_STATE_CODES = {
+    NodeState.PROVISIONING: _engine.STATE_PROVISIONING,
+    NodeState.READY: _engine.STATE_READY,
+    NodeState.TAINTED: _engine.STATE_TAINTED,
+    NodeState.TERMINATED: _engine.STATE_TERMINATED,
+}
 
 _node_seq = itertools.count()
 
@@ -55,15 +77,26 @@ class Node:
     def __post_init__(self):
         if not self.node_id:
             self.node_id = f"node-{next(_node_seq)}"
+        # Incremental accounting (seeded from any pre-populated pods dict).
+        self._used_cpu_m: int = 0
+        self._used_mem_mb: float = 0.0
+        self._moveable_count: int = 0
+        self._batch_count: int = 0
+        for p in self.pods.values():
+            self._account_add(p)
+        # SoA mirror back-references, set by Cluster.add_node.
+        self._arrays: Optional[_engine.ClusterArrays] = None
+        self._slot: Optional[int] = None
 
     # -- capacity ------------------------------------------------------------
     @property
     def used(self) -> Resources:
-        return sum_resources(p.requests for p in self.pods.values())
+        return Resources(self._used_cpu_m, self._used_mem_mb)
 
     @property
     def free(self) -> Resources:
-        return self.allocatable - self.used
+        return Resources(self.allocatable.cpu_m - self._used_cpu_m,
+                         self.allocatable.mem_mb - self._used_mem_mb)
 
     def fits(self, req: Resources) -> bool:
         return req.fits_in(self.free)
@@ -81,41 +114,72 @@ class Node:
         return [p for p in self.pods.values() if p.moveable]
 
     def has_only_moveable(self) -> bool:
-        return bool(self.pods) and all(p.moveable for p in self.pods.values())
+        return bool(self.pods) and self._moveable_count == len(self.pods)
 
     def has_moveable_and_batch(self) -> bool:
-        pods = list(self.pods.values())
-        return (any(p.moveable for p in pods)
-                and any(p.is_batch for p in pods)
-                and all(p.moveable or p.is_batch for p in pods))
+        return (self._moveable_count > 0 and self._batch_count > 0
+                and self._moveable_count + self._batch_count == len(self.pods))
 
     # -- lifecycle -----------------------------------------------------------
+    def _notify_state(self) -> None:
+        if self._arrays is not None:
+            self._arrays.sync_state(self._slot, self)
+
     def mark_ready(self, now: float) -> None:
         assert self.state == NodeState.PROVISIONING
         self.state = NodeState.READY
         self.ready_time = now
+        self._notify_state()
 
     def taint(self) -> None:
         if self.state == NodeState.READY:
             self.state = NodeState.TAINTED
+            self._notify_state()
 
     def untaint(self) -> None:
         if self.state == NodeState.TAINTED:
             self.state = NodeState.READY
+            self._notify_state()
 
     def terminate(self, now: float) -> None:
         assert not self.pods, f"terminating non-empty node {self.node_id}"
         self.state = NodeState.TERMINATED
         self.terminate_time = now
+        self._notify_state()
 
     # -- bindings ------------------------------------------------------------
-    def add_pod(self, pod: Pod) -> None:
-        assert pod.requests.fits_in(self.free), (
-            f"overcommit on {self.node_id}: {pod} does not fit {self.free}")
+    def _account_add(self, pod: Pod) -> None:
+        self._used_cpu_m += pod.requests.cpu_m
+        self._used_mem_mb += pod.requests.mem_mb
+        if pod.moveable:
+            self._moveable_count += 1
+        if pod.is_batch:
+            self._batch_count += 1
+
+    def _account_remove(self, pod: Pod) -> None:
+        self._used_cpu_m -= pod.requests.cpu_m
+        self._used_mem_mb -= pod.requests.mem_mb
+        if pod.moveable:
+            self._moveable_count -= 1
+        if pod.is_batch:
+            self._batch_count -= 1
+
+    def _notify_usage(self) -> None:
+        if self._arrays is not None:
+            self._arrays.sync_usage(self._slot, self)
+
+    def add_pod(self, pod: Pod, *, enforce: bool = True) -> None:
+        if enforce:
+            assert pod.requests.fits_in(self.free), (
+                f"overcommit on {self.node_id}: {pod} does not fit {self.free}")
         self.pods[pod.uid] = pod
+        self._account_add(pod)
+        self._notify_usage()
 
     def remove_pod(self, pod: Pod) -> None:
         del self.pods[pod.uid]
+        self._account_remove(pod)
+        self._notify_usage()
 
     def __repr__(self):
         return (f"Node({self.node_id}, {self.state.value}, "
@@ -123,21 +187,43 @@ class Node:
 
 
 class Cluster:
-    """The live cluster: the single source of truth (paper: etcd)."""
+    """The live cluster: the single source of truth (paper: etcd).
 
-    def __init__(self):
+    ``arrays`` is the SoA mirror used by the vectorized schedulers / shadow
+    capacity / scale-in; pass ``use_arrays=False`` (or set
+    ``REPRO_SCHED_ENGINE=object``) to run the seed object-scan engine.
+
+    The orchestrator registers ``on_bind`` / ``on_unbind`` / ``on_complete``
+    callbacks so it can maintain its pending queue and running counters
+    without rescanning every pod each cycle.
+    """
+
+    def __init__(self, use_arrays: Optional[bool] = None):
         self.nodes: Dict[str, Node] = {}
         self.terminated: List[Node] = []    # kept for cost accounting
+        if use_arrays is None:
+            use_arrays = _engine.arrays_enabled_default()
+        self.arrays: Optional[_engine.ClusterArrays] = (
+            _engine.ClusterArrays() if use_arrays else None)
+        self.on_bind: Optional[Callable[[Pod], None]] = None
+        self.on_unbind: Optional[Callable[[Pod], None]] = None
+        self.on_complete: Optional[Callable[[Pod], None]] = None
 
     # -- membership ----------------------------------------------------------
     def add_node(self, node: Node) -> Node:
         self.nodes[node.node_id] = node
+        if self.arrays is not None:
+            node._arrays = self.arrays
+            node._slot = self.arrays.add(node)
         return node
 
     def remove_node(self, node: Node, now: float) -> None:
         node.terminate(now)
         self.terminated.append(node)
         del self.nodes[node.node_id]
+        if node._arrays is not None:
+            node._arrays.remove(node._slot)
+            node._arrays = None
 
     def get(self, node_id: str) -> Node:
         return self.nodes[node_id]
@@ -163,19 +249,72 @@ class Cluster:
     def node_of(self, pod: Pod) -> Optional[Node]:
         return self.nodes.get(pod.node_id) if pod.node_id else None
 
+    def node_by_slot(self, slot: int) -> Node:
+        return self.nodes[self.arrays.node_ids[slot]]
+
     # -- bindings (paper §4.2 createBinding) ----------------------------------
-    def bind(self, pod: Pod, node: Node, now: float) -> None:
-        node.add_pod(pod)
+    def bind(self, pod: Pod, node: Node, now: float, *,
+             enforce: bool = True) -> None:
+        node.add_pod(pod, enforce=enforce)
         pod.bind(node.node_id, now)
+        if self.on_bind is not None:
+            self.on_bind(pod)
 
     def unbind(self, pod: Pod, now: float, *, failed: bool = False) -> None:
         node = self.node_of(pod)
         if node is not None:
             node.remove_pod(pod)
         pod.evict(now, failed=failed)
+        if self.on_unbind is not None:
+            self.on_unbind(pod)
+
+    def complete(self, pod: Pod, now: float) -> None:
+        """A batch pod ran to completion: release capacity, mark SUCCEEDED."""
+        node = self.node_of(pod)
+        if node is not None:
+            node.remove_pod(pod)
+        pod.complete(now)
+        if self.on_complete is not None:
+            self.on_complete(pod)
+
+    # -- metrics fast path ----------------------------------------------------
+    def utilization_view(self):
+        """(n_nodes, ram_ratios, cpu_ratios, pods_per_node) over READY|TAINTED
+        nodes, in insertion order.  Array path and object path produce
+        bit-identical values (same floats, same elementwise ops)."""
+        if self.arrays is not None:
+            arr = self.arrays
+            state = arr.live("state")
+            mask = arr.live("active") & (
+                (state == _engine.STATE_READY) | (state == _engine.STATE_TAINTED))
+            alloc_c = arr.live("alloc_cpu")[mask]
+            ram = arr.live("used_mem")[mask] / arr.live("alloc_mem")[mask]
+            cpu = arr.live("used_cpu")[mask] / np.maximum(alloc_c, 1)
+            ppn = arr.live("pod_count")[mask]
+            return int(mask.sum()), ram, cpu, ppn
+        nodes = [n for n in self.nodes.values()
+                 if n.state in (NodeState.READY, NodeState.TAINTED)]
+        ram = [n.used.mem_mb / n.allocatable.mem_mb for n in nodes]
+        cpu = [n.used.cpu_m / max(n.allocatable.cpu_m, 1) for n in nodes]
+        ppn = [len(n.pods) for n in nodes]
+        return len(nodes), ram, cpu, ppn
 
     # -- invariant (property-tested) ------------------------------------------
-    def check_invariants(self) -> None:
+    def check_invariants(self, deep: bool = False) -> None:
+        if self.arrays is not None and not deep:
+            # Vectorized fast path: capacity respected on every live node.
+            # The orchestrator runs the deep check periodically so mirror
+            # drift / pod-linkage bugs still surface on the array engine.
+            arr = self.arrays
+            live = arr.live("active") & ~arr.live("oversub")
+            over_cpu = arr.live("used_cpu") > arr.live("alloc_cpu")
+            over_mem = arr.live("used_mem") > arr.live("alloc_mem") + 1e-6
+            bad = live & (over_cpu | over_mem)
+            if bad.any():
+                slot = int(np.argmax(bad))
+                raise AssertionError(
+                    f"capacity violated on {arr.node_ids[slot]}")
+            return
         for n in self.nodes.values():
             if n.oversub:
                 continue   # estimator-driven oversubscription is intentional
@@ -184,3 +323,10 @@ class Cluster:
             assert used.mem_mb <= n.allocatable.mem_mb + 1e-6, n
             for p in n.pods.values():
                 assert p.node_id == n.node_id, (p, n)
+            if deep:
+                # incremental accounting matches a fresh re-sum
+                resum = sum_resources(p.requests for p in n.pods.values())
+                assert used.cpu_m == resum.cpu_m, n
+                assert abs(used.mem_mb - resum.mem_mb) < 1e-6, n
+        if deep and self.arrays is not None:
+            self.arrays.verify_against(self)

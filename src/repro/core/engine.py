@@ -1,0 +1,173 @@
+"""Array-backed cluster engine: a structure-of-arrays mirror of cluster state.
+
+The discrete-event simulator's cycle hot path — filter+select over all nodes
+for every pending pod — is O(pods x nodes) in Python objects.  This module
+maintains a NumPy structure-of-arrays (SoA) mirror of the cluster that is
+**incrementally updated** on bind/unbind/add/remove/state changes, so the
+schedulers can run their filter+select as a handful of masked vector
+reductions instead of object scans.
+
+Parity contract (enforced by ``tests/test_engine_parity.py``): every value in
+the mirror is *assigned* from the corresponding node's incremental
+accounting — never recomputed with a different operation order — so the
+vectorized engine and the object-scan engine see bit-identical floats and
+make bit-identical decisions.
+
+Slot discipline: slots are append-only (never reused), so ascending slot
+order == ``Cluster.nodes`` insertion order.  This matters: Alg. 6 scale-in
+iterates nodes in insertion order and termination order is behaviour.
+
+Engine selection: the mirror is enabled by default; ``REPRO_SCHED_ENGINE=object``
+(or ``Cluster(use_arrays=False)`` / ``ExperimentSpec(engine="object")``)
+disables it, restoring the seed object-scan path for parity testing and
+benchmarking.
+"""
+from __future__ import annotations
+
+import bisect
+import os
+from typing import List, Optional
+
+import numpy as np
+
+# Node-state codes (mirror of cluster.NodeState; kept as plain ints so the
+# state array is an int8 vector).
+STATE_PROVISIONING = 0
+STATE_READY = 1
+STATE_TAINTED = 2
+STATE_TERMINATED = 3
+
+
+def arrays_enabled_default() -> bool:
+    """Engine selection: REPRO_SCHED_ENGINE=object forces the seed path."""
+    return os.environ.get("REPRO_SCHED_ENGINE", "array").lower() != "object"
+
+
+class ClusterArrays:
+    """SoA mirror of per-node capacity, usage and lifecycle state.
+
+    All arrays are capacity-doubling; the live prefix is ``[:self.n_slots]``.
+    ``active`` masks out removed nodes (slots are never reused).
+    """
+
+    def __init__(self, capacity: int = 64):
+        self.n_slots = 0                       # slots ever allocated (monotone)
+        self._cap = capacity
+        self.alloc_cpu = np.zeros(capacity, np.int64)
+        self.alloc_mem = np.zeros(capacity, np.float64)
+        self.used_cpu = np.zeros(capacity, np.int64)
+        self.used_mem = np.zeros(capacity, np.float64)
+        self.state = np.full(capacity, STATE_TERMINATED, np.int8)
+        self.autoscaled = np.zeros(capacity, bool)
+        self.oversub = np.zeros(capacity, bool)
+        self.active = np.zeros(capacity, bool)
+        self.pod_count = np.zeros(capacity, np.int64)
+        self.node_ids: List[str] = []          # slot -> node_id
+        # Lexicographic-by-node_id order over *active* slots, for tie-breaks.
+        self._sorted_ids: List[str] = []
+        self._sorted_slot_list: List[int] = []
+        self._sorted_slots = np.zeros(0, np.int64)
+        self.id_rank = np.zeros(capacity, np.int64)   # slot -> rank in id order
+
+    # -- growth ----------------------------------------------------------------
+    def _grow(self) -> None:
+        new_cap = self._cap * 2
+        for name in ("alloc_cpu", "alloc_mem", "used_cpu", "used_mem",
+                     "state", "autoscaled", "oversub", "active", "pod_count",
+                     "id_rank"):
+            old = getattr(self, name)
+            new = np.zeros(new_cap, old.dtype)
+            if name == "state":
+                new[:] = STATE_TERMINATED
+            new[:self._cap] = old
+            setattr(self, name, new)
+        self._cap = new_cap
+
+    def _resync_order(self) -> None:
+        self._sorted_slots = np.asarray(self._sorted_slot_list, np.int64)
+        if self._sorted_slots.size:
+            self.id_rank[self._sorted_slots] = np.arange(
+                self._sorted_slots.size, dtype=np.int64)
+
+    # -- membership ------------------------------------------------------------
+    def add(self, node) -> int:
+        """Register `node`, returning its (permanent) slot index."""
+        if self.n_slots == self._cap:
+            self._grow()
+        slot = self.n_slots
+        self.n_slots += 1
+        self.node_ids.append(node.node_id)
+        self.alloc_cpu[slot] = node.allocatable.cpu_m
+        self.alloc_mem[slot] = node.allocatable.mem_mb
+        self.autoscaled[slot] = node.autoscaled
+        self.active[slot] = True
+        pos = bisect.bisect_left(self._sorted_ids, node.node_id)
+        self._sorted_ids.insert(pos, node.node_id)
+        self._sorted_slot_list.insert(pos, slot)
+        self._resync_order()
+        self.sync_state(slot, node)
+        self.sync_usage(slot, node)
+        return slot
+
+    def remove(self, slot: int) -> None:
+        self.active[slot] = False
+        self.state[slot] = STATE_TERMINATED
+        pos = self._sorted_slot_list.index(slot)
+        del self._sorted_ids[pos]
+        del self._sorted_slot_list[pos]
+        self._resync_order()
+
+    # -- incremental sync (assignment-copy => bit-identical to the node) -------
+    def sync_state(self, slot: int, node) -> None:
+        self.state[slot] = node.state.value_code
+
+    def sync_usage(self, slot: int, node) -> None:
+        self.used_cpu[slot] = node._used_cpu_m
+        self.used_mem[slot] = node._used_mem_mb
+        self.pod_count[slot] = len(node.pods)
+        self.oversub[slot] = node.oversub
+
+    # -- vector views ----------------------------------------------------------
+    def free_views(self):
+        """(free_cpu, free_mem) over the live prefix — fresh arrays, same
+        float op (alloc - used) the object path uses, so bit-identical."""
+        m = self.n_slots
+        return (self.alloc_cpu[:m] - self.used_cpu[:m],
+                self.alloc_mem[:m] - self.used_mem[:m])
+
+    def live(self, name: str) -> np.ndarray:
+        return getattr(self, name)[:self.n_slots]
+
+    # -- tie-breaks ------------------------------------------------------------
+    def first_by_id(self, mask: np.ndarray) -> int:
+        """Slot of the lexicographically-smallest node_id with mask True,
+        or -1.  `mask` is over the live prefix."""
+        s = self._sorted_slots
+        if s.size == 0:
+            return -1
+        sel = mask[s]
+        i = int(np.argmax(sel))
+        return int(s[i]) if sel[i] else -1
+
+    # -- consistency (deep invariant checks / property tests) ------------------
+    def verify_against(self, cluster) -> None:
+        """Assert the mirror matches the object model exactly."""
+        seen = 0
+        for node in cluster.nodes.values():
+            slot = node._slot
+            assert slot is not None and self.active[slot], node
+            assert self.node_ids[slot] == node.node_id
+            assert self.alloc_cpu[slot] == node.allocatable.cpu_m
+            assert self.alloc_mem[slot] == node.allocatable.mem_mb
+            assert self.used_cpu[slot] == node._used_cpu_m, node
+            assert self.used_mem[slot] == node._used_mem_mb, node
+            assert self.pod_count[slot] == len(node.pods), node
+            assert self.state[slot] == node.state.value_code, node
+            assert self.autoscaled[slot] == node.autoscaled
+            seen += 1
+        assert seen == int(self.active[:self.n_slots].sum())
+        # id-order structure is a permutation of active slots, sorted
+        ids = [self.node_ids[s] for s in self._sorted_slot_list]
+        assert ids == sorted(ids)
+        assert set(self._sorted_slot_list) == {
+            n._slot for n in cluster.nodes.values()}

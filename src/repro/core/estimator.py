@@ -115,6 +115,5 @@ class OversubscribingScheduler(Scheduler):
         # the point.  Guaranteed QoS accounting still tracks full requests.
         if not pod.requests.fits_in(node.free):
             node.oversub = True
-        node.pods[pod.uid] = pod
-        pod.bind(node.node_id, now)
+        cluster.bind(pod, node, now, enforce=False)
         return True

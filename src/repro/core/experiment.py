@@ -41,6 +41,9 @@ class ExperimentSpec:
     failure_injector: object = None
     straggler_threshold: float = 0.0
     arrivals: Optional[List[Arrival]] = None   # override the workload trace
+    # "array" (vectorized SoA engine, default) or "object" (seed object-scan
+    # engine); None defers to the REPRO_SCHED_ENGINE env var.
+    engine: Optional[str] = None
 
 
 def build_simulation(spec: ExperimentSpec) -> Simulation:
@@ -50,7 +53,8 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
 
     cost = CostModel(price_per_s=PRICE_PER_S)
     provider = SimCloudProvider(spec.template or M2_SMALL, cost)
-    cluster = Cluster()
+    use_arrays = None if spec.engine is None else (spec.engine != "object")
+    cluster = Cluster(use_arrays=use_arrays)
 
     n_static = (spec.static_workers if spec.static_workers is not None
                 else spec.initial_workers)
@@ -89,7 +93,8 @@ def run_experiment(spec: ExperimentSpec) -> ExperimentResult:
 
 
 def run_k8s_baseline(workload: str, seed: int = 0, max_nodes: int = 60,
-                     cycle_period_s: float = 10.0) -> ExperimentResult:
+                     cycle_period_s: float = 10.0,
+                     engine: Optional[str] = None) -> ExperimentResult:
     """Fig. 4 baseline: default K8s scheduler on the minimum static cluster
     able to *successfully place* and execute all jobs.
 
@@ -104,7 +109,7 @@ def run_k8s_baseline(workload: str, seed: int = 0, max_nodes: int = 60,
         spec = ExperimentSpec(workload=workload, scheduler="k8s-default",
                               rescheduler="void", autoscaler="void",
                               static_workers=n, seed=seed,
-                              cycle_period_s=cycle_period_s)
+                              cycle_period_s=cycle_period_s, engine=engine)
         result = run_experiment(spec)
         if result.completed and result.max_pending_s <= cycle_period_s + 1e-9:
             best = result
@@ -115,12 +120,14 @@ def run_k8s_baseline(workload: str, seed: int = 0, max_nodes: int = 60,
     return best
 
 
-def run_all_combos(workload: str, seed: int = 0) -> List[ExperimentResult]:
+def run_all_combos(workload: str, seed: int = 0,
+                   engine: Optional[str] = None) -> List[ExperimentResult]:
     """The six rescheduler × autoscaler combinations of Fig. 3."""
     out = []
     for rescheduler in ("void", "binding", "non-binding"):
         for autoscaler in ("non-binding", "binding"):
             spec = ExperimentSpec(workload=workload, rescheduler=rescheduler,
-                                  autoscaler=autoscaler, seed=seed)
+                                  autoscaler=autoscaler, seed=seed,
+                                  engine=engine)
             out.append(run_experiment(spec))
     return out

@@ -34,17 +34,17 @@ class MetricsCollector:
         self.node_count_series: List[tuple] = []
 
     def sample(self, cluster: Cluster, now: float) -> None:
-        nodes = [n for n in cluster.nodes.values()
-                 if n.state in (NodeState.READY, NodeState.TAINTED)]
-        if not nodes:
+        # cluster.utilization_view() vectorizes the per-node extraction when
+        # the SoA mirror is on; fmean (exact fsum) keeps the aggregate
+        # bit-identical across engines regardless of summation order.
+        n_nodes, ram_xs, cpu_xs, ppn_xs = cluster.utilization_view()
+        if n_nodes == 0:
             self.samples.append(Sample(now, 0, 0.0, 0.0, 0.0))
             return
-        ram = statistics.fmean(
-            n.used.mem_mb / n.allocatable.mem_mb for n in nodes)
-        cpu = statistics.fmean(
-            n.used.cpu_m / max(n.allocatable.cpu_m, 1) for n in nodes)
-        ppn = statistics.fmean(len(n.pods) for n in nodes)
-        self.samples.append(Sample(now, len(nodes), ram, cpu, ppn))
+        ram = statistics.fmean(ram_xs)
+        cpu = statistics.fmean(cpu_xs)
+        ppn = statistics.fmean(ppn_xs)
+        self.samples.append(Sample(now, n_nodes, ram, cpu, ppn))
         self.node_count_series.append((now, len(cluster.nodes)))
 
     def record_pending_interval(self, seconds: float) -> None:

@@ -20,11 +20,16 @@ Semantics matched to the paper:
 * **scale-in runs only when every pending pod of the cycle was placed**;
 * pods created by evictions during a cycle wait until the next cycle
   (we iterate over a snapshot of the queue).
+
+Queueing is event-driven, not scan-driven: the orchestrator registers
+bind/unbind/complete callbacks on the cluster and maintains a real pending
+buffer plus running counters, so each cycle sorts only the currently-pending
+pods instead of re-sorting every pod ever submitted.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.autoscaler import Autoscaler
 from repro.core.cluster import Cluster
@@ -62,21 +67,84 @@ class Orchestrator:
         # slower than `straggler_threshold` × nominal speed (0 disables).
         self.straggler_threshold = straggler_threshold
         self.on_evict = on_evict
+        # Event-driven queue + counters (maintained via cluster callbacks).
+        self._pending_buf: List[Pod] = []
+        self._bound_batch: Dict[int, Pod] = {}     # uid -> BOUND batch pod
+        self._newly_bound_batch: List[Pod] = []    # drained by the simulator
+        self.n_pending = 0
+        self.n_batch_total = 0
+        self.n_batch_done = 0
+        self.n_service_total = 0
+        self.n_service_bound = 0
+        self._cycle_count = 0
+        cluster.on_bind = self._on_pod_bound
+        cluster.on_unbind = self._on_pod_unbound
+        cluster.on_complete = self._on_pod_completed
+
+    # -- cluster callbacks -------------------------------------------------------
+    def _on_pod_bound(self, pod: Pod) -> None:
+        self.n_pending -= 1
+        if pod.is_batch:
+            self._bound_batch[pod.uid] = pod
+            self._newly_bound_batch.append(pod)
+        elif pod.is_service:
+            self.n_service_bound += 1
+
+    def _on_pod_unbound(self, pod: Pod) -> None:
+        # evict() recreates the pod as a fresh PENDING incarnation
+        self.n_pending += 1
+        self._pending_buf.append(pod)
+        if pod.is_batch:
+            self._bound_batch.pop(pod.uid, None)
+        elif pod.is_service:
+            self.n_service_bound -= 1
+
+    def _on_pod_completed(self, pod: Pod) -> None:
+        self._bound_batch.pop(pod.uid, None)
+        self.n_batch_done += 1
+
+    def drain_newly_bound_batch(self) -> List[Pod]:
+        """Batch pods bound (or re-bound) since the last drain; the simulator
+        schedules one completion event per (pod, incarnation)."""
+        out = self._newly_bound_batch
+        self._newly_bound_batch = []
+        return out
 
     # -- queue ------------------------------------------------------------------
     def submit(self, pod: Pod) -> None:
         self.pods.append(pod)
+        self._pending_buf.append(pod)
+        self.n_pending += 1
+        if pod.is_batch:
+            self.n_batch_total += 1
+        elif pod.is_service:
+            self.n_service_total += 1
 
     def pending_pods(self) -> List[Pod]:
-        return sorted((p for p in self.pods if p.phase == PodPhase.PENDING),
-                      key=lambda p: (p.pending_since, p.uid))
+        """Currently-pending pods, FIFO by (pending_since, uid).  Compacts the
+        buffer: stale entries (bound since) drop out, duplicates (bound then
+        evicted while still buffered) dedupe by uid."""
+        seen = set()
+        out = []
+        for p in self._pending_buf:
+            if p.phase == PodPhase.PENDING and p.uid not in seen:
+                seen.add(p.uid)
+                out.append(p)
+        out.sort(key=lambda p: (p.pending_since, p.uid))
+        self._pending_buf = list(out)
+        return out
 
     def running_pods(self) -> List[Pod]:
         return [p for p in self.pods if p.phase == PodPhase.BOUND]
 
     def batch_all_done(self) -> bool:
-        return all(p.phase == PodPhase.SUCCEEDED
-                   for p in self.pods if p.is_batch)
+        return self.n_batch_done == self.n_batch_total
+
+    def services_all_bound(self) -> bool:
+        return self.n_service_bound == self.n_service_total
+
+    def has_running_batch(self) -> bool:
+        return bool(self._bound_batch)
 
     # -- Algorithm 1 --------------------------------------------------------------
     def cycle(self, now: float) -> CycleStats:
@@ -109,13 +177,19 @@ class Orchestrator:
             removed = self.autoscaler.scale_in(self.cluster, now)
             stats.scale_ins = len(removed)
             self.total_scale_ins += len(removed)
-        self.cluster.check_invariants()
+        # Fast (vectorized) invariant every cycle; full object-walk +
+        # mirror cross-check periodically so drift can't hide for a run.
+        self._cycle_count += 1
+        self.cluster.check_invariants(deep=self._cycle_count % 64 == 0)
         return stats
 
     # -- fleet extension: straggler mitigation -----------------------------------
     def _mitigate_stragglers(self, now: float) -> None:
-        for pod in self.running_pods():
-            if not (pod.is_batch and pod.spec.checkpointable):
+        # uid order == submission order (uids are monotone), matching the
+        # seed's scan over self.pods.
+        for uid in sorted(self._bound_batch):
+            pod = self._bound_batch[uid]
+            if not pod.spec.checkpointable:
                 continue
             node = self.cluster.node_of(pod)
             if node is None or node.speed_factor >= self.straggler_threshold:

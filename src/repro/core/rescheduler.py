@@ -16,6 +16,11 @@ We follow the pseudocode (descending): the node with the most free memory
 needs the fewest evictions to make room, which matches the algorithm's
 evict-as-little-as-possible structure.  (`sort_ascending=True` switches to the
 prose order for the ablation in benchmarks.)
+
+``_ShadowCapacity`` is array-backed when the cluster carries a SoA mirror:
+best-fit placement of each mover is a masked argmin over the free-memory
+vector instead of a dict scan.  The same shadow is used by Alg. 6 scale-in
+placeability checks (see ``autoscaler._all_placeable``).
 """
 from __future__ import annotations
 
@@ -24,6 +29,9 @@ import dataclasses
 import enum
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
+from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node
 from repro.core.pods import Pod
 from repro.core.resources import Resources
@@ -52,9 +60,25 @@ class ReschedulePlan:
 
 
 class _ShadowCapacity:
-    """Hypothetical free-capacity tracker for multi-pod relocation planning."""
+    """Hypothetical free-capacity tracker for multi-pod relocation planning.
+
+    Array mode (cluster has a SoA mirror): snapshot of the free vectors with
+    the victim masked out; ``place_best_fit`` is a masked argmin + in-place
+    subtraction.  Dict mode (seed engine): per-node ``Resources`` map.  Both
+    modes pick min (free_mem, node_id) and subtract with the same float ops,
+    so plans are identical.
+    """
 
     def __init__(self, cluster: Cluster, exclude: Node):
+        self._arr = cluster.arrays
+        if self._arr is not None:
+            arr = self._arr
+            self.free_cpu, self.free_mem = arr.free_views()
+            self.mask = arr.live("active") & (
+                arr.live("state") == _engine.STATE_READY)
+            if exclude._slot is not None and exclude._arrays is arr:
+                self.mask[exclude._slot] = False
+            return
         self.free: Dict[str, Resources] = {
             n.node_id: n.free for n in cluster.ready_nodes()
             if n.node_id != exclude.node_id
@@ -63,6 +87,16 @@ class _ShadowCapacity:
     def place_best_fit(self, req: Resources) -> Optional[str]:
         """Best-fit placement against shadow capacities (consistent with
         the best-fit scheduler the system runs)."""
+        if self._arr is not None:
+            fits = self.mask & (self.free_cpu >= req.cpu_m) & (
+                (self.free_mem + 1e-9) >= req.mem_mb)
+            if not fits.any():
+                return None
+            best = self.free_mem[fits].min()
+            slot = self._arr.first_by_id(fits & (self.free_mem == best))
+            self.free_cpu[slot] -= req.cpu_m
+            self.free_mem[slot] -= req.mem_mb
+            return self._arr.node_ids[slot]
         candidates = [(free.mem_mb, nid) for nid, free in self.free.items()
                       if req.fits_in(free)]
         if not candidates:
@@ -86,14 +120,31 @@ class Rescheduler(abc.ABC):
         """Try to make room for `pod` (see RescheduleOutcome)."""
 
     # -- shared plan construction (Alg. 3/4 body) -----------------------------
-    def _build_plan(self, cluster: Cluster, pod: Pod) -> Optional[ReschedulePlan]:
-        # Stage 1 filter: nodes that already have enough *CPU* for the pod
-        # (evictions only need to free memory, the non-compressible axis).
+    def _candidate_nodes(self, cluster: Cluster, pod: Pod) -> List[Node]:
+        """Stage 1 filter: READY nodes that already have enough *CPU* for the
+        pod (evictions only need to free memory, the non-compressible axis),
+        sorted by (free_mem, node_id) — descending unless sort_ascending."""
+        arr = cluster.arrays
+        if arr is not None:
+            free_cpu, free_mem = arr.free_views()
+            mask = arr.live("active") & (
+                arr.live("state") == _engine.STATE_READY) & (
+                free_cpu >= pod.requests.cpu_m)
+            idx = np.nonzero(mask)[0]
+            rank = arr.live("id_rank")[idx]
+            if self.sort_ascending:
+                order = np.lexsort((rank, free_mem[idx]))
+            else:
+                order = np.lexsort((-rank, -free_mem[idx]))
+            return [cluster.node_by_slot(int(i)) for i in idx[order]]
         nodes = [n for n in cluster.ready_nodes()
                  if pod.requests.cpu_fits_in(n.free)]
         nodes.sort(key=lambda n: (n.free.mem_mb, n.node_id),
                    reverse=not self.sort_ascending)
-        for node in nodes:
+        return nodes
+
+    def _build_plan(self, cluster: Cluster, pod: Pod) -> Optional[ReschedulePlan]:
+        for node in self._candidate_nodes(cluster, pod):
             moveables = node.moveable_pods()
             if not moveables:
                 continue

@@ -7,20 +7,43 @@ the selection rule; filtering is request-based feasibility on both axes.
 Tainted nodes (Alg. 6 step 3) are used **only as a last resort**: the filter
 first considers READY nodes and falls back to TAINTED nodes only when no
 untainted node fits.
+
+Two execution engines share each policy:
+
+* the **object path** (seed engine) — list comprehensions over ``Node``
+  objects, kept for parity testing and as the fallback when the cluster has
+  no SoA mirror;
+* the **array path** — filter+select as masked NumPy reductions over the
+  cluster's :class:`repro.core.engine.ClusterArrays` mirror.  Identical
+  floats, identical IEEE ops, identical tie-breaks => identical bindings.
+
+Tie-breaks are uniform across all four policies: among equally-scored
+feasible nodes the **lexicographically lowest node_id wins**.
 """
 from __future__ import annotations
 
 import abc
 from typing import List, Optional
 
+import numpy as np
+
+from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node
 from repro.core.pods import Pod
+
+
+def _lowest_id(nodes: List[Node]) -> Node:
+    return min(nodes, key=lambda n: n.node_id)
 
 
 class Scheduler(abc.ABC):
     """Base scheduler: filter feasible nodes, pick one, create the binding."""
 
     name = "scheduler"
+
+    # Concrete policies override with a vectorized (arrays, mask, free_cpu,
+    # free_mem, pod) -> slot implementation; None disables the array path.
+    select_slot = None
 
     def suitable_nodes(self, cluster: Cluster, pod: Pod) -> List[Node]:
         """getAllSuitableNodes(p): feasible READY nodes, else TAINTED ones."""
@@ -36,11 +59,34 @@ class Scheduler(abc.ABC):
 
     def schedule(self, cluster: Cluster, pod: Pod, now: float) -> bool:
         """Paper Alg. 2 skeleton. Returns True iff a binding was created."""
+        if cluster.arrays is not None and self.select_slot is not None:
+            return self._schedule_arrays(cluster, pod, now)
         nodes = self.suitable_nodes(cluster, pod)
         node = self.select(nodes, pod) if nodes else None
         if node is None:
             return False
         cluster.bind(pod, node, now)
+        return True
+
+    # -- array engine ---------------------------------------------------------
+    def _schedule_arrays(self, cluster: Cluster, pod: Pod, now: float) -> bool:
+        arr = cluster.arrays
+        if arr.n_slots == 0:
+            return False
+        req = pod.requests
+        free_cpu, free_mem = arr.free_views()
+        # Same feasibility ops as Resources.fits_in, elementwise.
+        fits = (free_cpu >= req.cpu_m) & ((free_mem + 1e-9) >= req.mem_mb)
+        state = arr.live("state")
+        mask = fits & arr.live("active") & (state == _engine.STATE_READY)
+        if not mask.any():
+            mask = fits & arr.live("active") & (state == _engine.STATE_TAINTED)
+            if not mask.any():
+                return False
+        slot = self.select_slot(arr, mask, free_cpu, free_mem, pod)
+        if slot < 0:
+            return False
+        cluster.bind(pod, cluster.node_by_slot(slot), now)
         return True
 
 
@@ -61,6 +107,24 @@ class BestFitBinPackingScheduler(Scheduler):
         # Deterministic tie-break on node_id.
         return min(nodes, key=lambda n: (n.free.mem_mb, n.node_id))
 
+    def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
+        best = free_mem[mask].min()
+        return arr.first_by_id(mask & (free_mem == best))
+
+
+def _k8s_scores(free_cpu, free_mem, alloc_cpu, alloc_mem, req):
+    """LeastRequestedPriority + BalancedResourceAllocation, equally weighted.
+
+    Shared by both engines: the object path feeds scalars, the array path
+    feeds vectors; NumPy elementwise ops are the same IEEE-754 double ops, so
+    the scores are bit-identical.
+    """
+    cpu_frac = (free_cpu - req.cpu_m) / np.maximum(alloc_cpu, 1)
+    mem_frac = (free_mem - req.mem_mb) / np.maximum(alloc_mem, 1e-9)
+    least_requested = 10.0 * (cpu_frac + mem_frac) / 2.0
+    balanced = 10.0 * (1.0 - np.abs(cpu_frac - mem_frac))
+    return (least_requested + balanced) / 2.0
+
 
 class KubernetesDefaultScheduler(Scheduler):
     """The Fig. 4 baseline: default kube-scheduler scoring (v1.10 era).
@@ -77,15 +141,20 @@ class KubernetesDefaultScheduler(Scheduler):
             return None
 
         def score(n: Node) -> float:
-            free = n.free - pod.requests
+            free = n.free
             cap = n.allocatable
-            cpu_frac = free.cpu_m / max(cap.cpu_m, 1)
-            mem_frac = free.mem_mb / max(cap.mem_mb, 1e-9)
-            least_requested = 10.0 * (cpu_frac + mem_frac) / 2.0
-            balanced = 10.0 * (1.0 - abs(cpu_frac - mem_frac))
-            return (least_requested + balanced) / 2.0
+            return float(_k8s_scores(free.cpu_m, free.mem_mb,
+                                     cap.cpu_m, cap.mem_mb, pod.requests))
 
-        return max(nodes, key=lambda n: (score(n), n.node_id))
+        scored = [(score(n), n) for n in nodes]
+        best = max(s for s, _ in scored)
+        return _lowest_id([n for s, n in scored if s == best])
+
+    def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
+        scores = _k8s_scores(free_cpu, free_mem, arr.live("alloc_cpu"),
+                             arr.live("alloc_mem"), pod.requests)
+        best = scores[mask].max()
+        return arr.first_by_id(mask & (scores == best))
 
 
 class FirstFitScheduler(Scheduler):
@@ -94,7 +163,10 @@ class FirstFitScheduler(Scheduler):
     name = "first-fit"
 
     def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
-        return min(nodes, key=lambda n: n.node_id) if nodes else None
+        return _lowest_id(nodes) if nodes else None
+
+    def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
+        return arr.first_by_id(mask)
 
 
 class WorstFitScheduler(Scheduler):
@@ -105,7 +177,12 @@ class WorstFitScheduler(Scheduler):
     def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
         if not nodes:
             return None
-        return max(nodes, key=lambda n: (n.free.mem_mb, n.node_id))
+        best = max(n.free.mem_mb for n in nodes)
+        return _lowest_id([n for n in nodes if n.free.mem_mb == best])
+
+    def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
+        best = free_mem[mask].max()
+        return arr.first_by_id(mask & (free_mem == best))
 
 
 SCHEDULERS = {

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import Autoscaler
@@ -38,6 +39,10 @@ class SimConfig:
     cycle_period_s: float = 10.0
     max_sim_time_s: float = 48 * 3600.0
     sample_period_s: float = SAMPLE_PERIOD_S
+    # Benchmark instrumentation: stop issuing CYCLE events after this many
+    # (None = unlimited) and record per-cycle wall-clock latency.
+    max_cycles: Optional[int] = None
+    record_cycle_times: bool = False
 
 
 class Simulation:
@@ -57,6 +62,9 @@ class Simulation:
         self._heap: List[Tuple[float, int, int, object]] = []
         self._seq = itertools.count()
         self._completion_scheduled: Dict[Tuple[int, int], bool] = {}
+        self.cycle_wall_s: List[float] = []    # per-cycle latency (bench)
+        self.cycle_placed: List[int] = []      # per-cycle placements (bench)
+        self.n_cycles = 0
         self.failures_injected = 0
         self._stuck = False
         self.first_submit: Optional[float] = None
@@ -113,8 +121,16 @@ class Simulation:
         self.orch.submit(pod)
 
     def _on_cycle(self) -> None:
+        t0 = time.perf_counter() if self.config.record_cycle_times else 0.0
         stats = self.orch.cycle(self.now)
         self._schedule_completions()
+        if self.config.record_cycle_times:
+            self.cycle_wall_s.append(time.perf_counter() - t0)
+            self.cycle_placed.append(stats.placed)
+        self.n_cycles += 1
+        if (self.config.max_cycles is not None
+                and self.n_cycles >= self.config.max_cycles):
+            return   # benchmark cap: stop perpetuating cycles
         if self._permanently_stuck(stats):
             self._stuck = True
             return   # stop perpetuating cycles; heap drains, run() returns
@@ -130,16 +146,18 @@ class Simulation:
             return False
         if self.cluster.provisioning_nodes():
             return False
-        if any(p.is_batch for p in self.orch.running_pods()):
+        if self.orch.has_running_batch():
             return False   # a completion may free space later
-        return bool(self.orch.pending_pods())
+        return self.orch.n_pending > 0
 
     def _schedule_completions(self) -> None:
         """Any batch pod bound (or re-bound) since the last cycle gets a
-        completion event for its current incarnation."""
-        for pod in self.orch.running_pods():
-            if not pod.is_batch:
-                continue
+        completion event for its current incarnation.  The orchestrator hands
+        us exactly the pods bound since the last drain — no per-cycle scan of
+        every running pod."""
+        for pod in self.orch.drain_newly_bound_batch():
+            if pod.phase != PodPhase.BOUND:
+                continue   # bound then evicted again before the drain
             key = (pod.uid, pod.incarnation)
             if key in self._completion_scheduled:
                 continue
@@ -154,10 +172,7 @@ class Simulation:
         pod, incarnation = payload
         if pod.phase != PodPhase.BOUND or pod.incarnation != incarnation:
             return   # stale event: pod was evicted/failed since
-        node = self.cluster.node_of(pod)
-        if node is not None:
-            node.remove_pod(pod)
-        pod.complete(self.now)
+        self.cluster.complete(pod, self.now)
         self.last_batch_done = self.now
 
     def _on_node_ready(self, node: Node) -> None:
@@ -195,8 +210,7 @@ class Simulation:
             return False
         if not self.orch.batch_all_done():
             return False
-        return all(p.phase == PodPhase.BOUND
-                   for p in self.orch.pods if p.is_service)
+        return self.orch.services_all_bound()
 
     def _result(self, completed: bool, end: float) -> ExperimentResult:
         for pod in self.orch.pods:

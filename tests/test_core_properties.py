@@ -4,6 +4,7 @@ autoscaler launch discipline, scale-in conservation, cost monotonicity."""
 import math
 
 import pytest
+pytest.importorskip("hypothesis")   # dev-only dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.cloud.adapter import M2_SMALL, SimCloudProvider

@@ -7,6 +7,7 @@ and completion under autoscaling for any admissible workload.
 import math
 
 import pytest
+pytest.importorskip("hypothesis")   # dev-only dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Arrival, CostModel, ExperimentSpec, PodKind, PodPhase,

@@ -1,0 +1,158 @@
+"""Golden parity: the array-backed engine must be bit-for-bit identical to
+the seed object-scan engine.
+
+Two layers:
+
+* **End-to-end** — every fig3 policy combo (3 reschedulers x 2 autoscalers),
+  the fig4 k8s-default static baseline, and the scheduler ablation produce
+  *identical* ``ExperimentResult`` dicts (cost, duration_s, evictions,
+  scale_outs, scale_ins, max_nodes, every sampled ratio) under
+  ``engine="array"`` and ``engine="object"``.
+* **Property-style** — random bind/unbind/add/remove/taint sequences keep the
+  SoA mirror consistent with the object model (``check_invariants(deep=True)``
+  cross-verifies every mirrored field), without needing hypothesis.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, ExperimentSpec, Node, Pod, PodKind, PodSpec,
+                        Resources, gi, reset_id_counters, run_all_combos,
+                        run_experiment, run_k8s_baseline)
+
+COMBOS = [(r, a) for r in ("void", "binding", "non-binding")
+          for a in ("non-binding", "binding")]
+
+
+def _as_dict(result):
+    return dataclasses.asdict(result)
+
+
+def _run_pair(fn):
+    """fn(engine) under identical id-counter state; returns (array, object).
+
+    Auto-generated node ids ("node-<seq>") order *lexicographically*, so a
+    run's tie-breaks depend on where the global counter starts (node-99 >
+    node-100).  Parity runs must therefore start both engines from the same
+    counter value — this is test isolation, not an engine difference."""
+    reset_id_counters()
+    arr = fn("array")
+    reset_id_counters()
+    obj = fn("object")
+    return arr, obj
+
+
+class TestResultParity:
+    @pytest.mark.parametrize("workload", ["slow", "bursty", "mixed"])
+    def test_fig3_combos_identical(self, workload):
+        arr, obj = _run_pair(
+            lambda eng: run_all_combos(workload, seed=0, engine=eng))
+        for ra, ro in zip(arr, obj):
+            assert _as_dict(ra) == _as_dict(ro), ra.combo()
+
+    def test_fig4_k8s_baseline_identical(self):
+        ka, ko = _run_pair(
+            lambda eng: run_k8s_baseline("slow", seed=0, engine=eng))
+        assert _as_dict(ka) == _as_dict(ko)
+
+    @pytest.mark.parametrize("scheduler", ["best-fit", "first-fit",
+                                           "worst-fit", "k8s-default"])
+    def test_scheduler_ablation_identical(self, scheduler):
+        ra, ro = _run_pair(lambda eng: run_experiment(ExperimentSpec(
+            workload="mixed", scheduler=scheduler,
+            rescheduler="non-binding", autoscaler="binding",
+            seed=1, engine=eng)))
+        assert _as_dict(ra) == _as_dict(ro)
+
+    def test_table5_metrics_identical(self):
+        """Table-5 utilization metrics come from the 20s sampler — parity on
+        the sampled ratios, not just the headline cost numbers."""
+        ra, ro = _run_pair(lambda eng: run_experiment(ExperimentSpec(
+            workload="bursty", seed=2, rescheduler="non-binding",
+            autoscaler="non-binding", engine=eng)))
+        assert ra.avg_ram_ratio == ro.avg_ram_ratio
+        assert ra.avg_cpu_ratio == ro.avg_cpu_ratio
+        assert ra.avg_pods_per_node == ro.avg_pods_per_node
+        assert ra.median_pending_s == ro.median_pending_s
+
+
+def _mk_pod(rng):
+    moveable = bool(rng.integers(0, 2))
+    kind = PodKind.SERVICE if moveable or rng.integers(0, 2) else PodKind.BATCH
+    mem = float(rng.choice([0.3, 0.6, 0.9, 1.0, 1.4]))
+    cpu = int(rng.choice([100, 200, 300]))
+    spec = PodSpec("p", kind, Resources(cpu, gi(mem)),
+                   duration_s=60.0 if kind == PodKind.BATCH else 0.0,
+                   moveable=moveable and kind == PodKind.SERVICE)
+    return Pod(spec=spec, submit_time=0.0)
+
+
+class TestMirrorProperty:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_mutation_sequences_keep_mirror_consistent(self, seed):
+        rng = np.random.default_rng(seed)
+        cluster = Cluster(use_arrays=True)
+        bound = []
+        t = 0.0
+        n_added = 0
+        for step in range(200):
+            t += 1.0
+            op = rng.integers(0, 6)
+            if op == 0 or not cluster.nodes:         # add a node
+                node = Node(allocatable=Resources(940, gi(3.5)),
+                            node_id=f"s{seed}-n{n_added}",
+                            autoscaled=bool(rng.integers(0, 2)))
+                node.mark_ready(t)
+                cluster.add_node(node)
+                n_added += 1
+            elif op == 1:                            # bind a fresh pod
+                pod = _mk_pod(rng)
+                fitting = [n for n in cluster.ready_nodes()
+                           if n.fits(pod.requests)]
+                if fitting:
+                    node = fitting[int(rng.integers(0, len(fitting)))]
+                    cluster.bind(pod, node, t)
+                    bound.append(pod)
+            elif op == 2 and bound:                  # unbind (evict)
+                pod = bound.pop(int(rng.integers(0, len(bound))))
+                cluster.unbind(pod, t)
+            elif op == 3:                            # taint / untaint
+                nodes = list(cluster.nodes.values())
+                node = nodes[int(rng.integers(0, len(nodes)))]
+                if node.state.value == "tainted":
+                    node.untaint()
+                else:
+                    node.taint()
+            elif op == 4:                            # remove an empty node
+                empties = [n for n in cluster.nodes.values() if not n.pods]
+                if empties:
+                    cluster.remove_node(
+                        empties[int(rng.integers(0, len(empties)))], t)
+            elif op == 5 and bound:                  # complete a batch pod
+                batch = [p for p in bound if p.is_batch]
+                if batch:
+                    pod = batch[int(rng.integers(0, len(batch)))]
+                    bound.remove(pod)
+                    cluster.complete(pod, t)
+            cluster.check_invariants(deep=True)
+
+    def test_incremental_used_matches_resum(self):
+        """Node.used stays exact (cpu) / within float tolerance (mem) of a
+        fresh re-sum across arbitrary add/remove interleavings."""
+        rng = np.random.default_rng(7)
+        node = Node(allocatable=Resources(10_000, gi(400.0)), node_id="big")
+        node.mark_ready(0.0)
+        resident = []
+        for _ in range(300):
+            if resident and rng.integers(0, 2):
+                node.remove_pod(resident.pop(int(rng.integers(0, len(resident)))))
+            else:
+                pod = _mk_pod(rng)
+                if node.fits(pod.requests):
+                    node.add_pod(pod)
+                    resident.append(pod)
+            fresh_cpu = sum(p.requests.cpu_m for p in node.pods.values())
+            fresh_mem = sum(p.requests.mem_mb for p in node.pods.values())
+            assert node.used.cpu_m == fresh_cpu
+            assert abs(node.used.mem_mb - fresh_mem) < 1e-6

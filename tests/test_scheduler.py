@@ -99,3 +99,37 @@ class TestK8sDefault:
         pod = mk_pod(mem_gi=0.5)
         WorstFitScheduler().schedule(cluster, pod, 0.0)
         assert pod.node_id == "b"
+
+
+class TestTieBreaks:
+    """All four policies break score ties the same way: lowest node_id wins,
+    on both the object engine and the array engine."""
+
+    def _tied_cluster(self, use_arrays):
+        from repro.core import Cluster
+        cluster = Cluster(use_arrays=use_arrays)
+        # b added before a: insertion order must not leak into the tie-break.
+        cluster.add_node(mk_node(node_id="b"))
+        cluster.add_node(mk_node(node_id="a"))
+        cluster.add_node(mk_node(node_id="c"))
+        return cluster
+
+    @pytest.mark.parametrize("use_arrays", [False, True])
+    @pytest.mark.parametrize("sched_name", ["best-fit", "k8s-default",
+                                            "first-fit", "worst-fit"])
+    def test_lowest_id_wins_on_ties(self, sched_name, use_arrays):
+        from repro.core import SCHEDULERS
+        cluster = self._tied_cluster(use_arrays)
+        pod = mk_pod(mem_gi=1.0)
+        assert SCHEDULERS[sched_name]().schedule(cluster, pod, 0.0)
+        assert pod.node_id == "a", sched_name
+
+    @pytest.mark.parametrize("use_arrays", [False, True])
+    def test_tie_break_after_node_removal(self, use_arrays):
+        """The id-order structure stays correct across node removal."""
+        from repro.core import SCHEDULERS
+        cluster = self._tied_cluster(use_arrays)
+        cluster.remove_node(cluster.get("a"), 1.0)
+        pod = mk_pod(mem_gi=1.0)
+        assert SCHEDULERS["first-fit"]().schedule(cluster, pod, 1.0)
+        assert pod.node_id == "b"
