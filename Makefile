@@ -1,6 +1,6 @@
 # Developer entry points.  `make check` is the CI gate.
 
-.PHONY: check test bench-sched
+.PHONY: check test bench-sched docs-check
 
 check:
 	bash scripts/ci.sh
@@ -10,3 +10,6 @@ test:
 
 bench-sched:
 	PYTHONPATH=src python benchmarks/bench_sched_throughput.py --out BENCH_sched.json
+
+docs-check:
+	python scripts/docs_check.py

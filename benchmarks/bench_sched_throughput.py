@@ -1,8 +1,10 @@
 """Scheduler-cycle throughput benchmark: array engine vs. seed object scans.
 
 Measures the end-to-end cycle hot path of the discrete-event simulator —
-pending-queue snapshot, filter+select per pod, bind, scale-in — on synthetic
-batch workloads at three scales:
+pending-queue snapshot, wave placement (cached-buffer select + once-per-wave
+``bind_wave`` commit) on the array engine vs. per-pod filter+select+bind on
+the object engine, plus scale-in — on synthetic batch workloads at three
+scales:
 
 * ``small``  —    50 nodes x  2,000 pods (CI smoke; both engines run fully)
 * ``medium`` —   500 nodes x 10,000 pods

@@ -6,6 +6,9 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== docs checks (links + snippet references) =="
+python scripts/docs_check.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

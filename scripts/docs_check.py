@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Docs gate (``make docs-check``): keep the markdown honest.
+
+Three checks over the repo's markdown (README.md, ROADMAP.md, docs/*.md...):
+
+1. **Relative links resolve** — every ``[text](target)`` pointing inside the
+   repo must name an existing file/directory (anchors and external URLs are
+   skipped).
+2. **Command snippets name real files** — repo-relative paths mentioned in
+   fenced code blocks (``benchmarks/foo.py``, ``requirements-dev.txt``, ...)
+   must exist, and ``make <target>`` invocations must name targets the
+   Makefile defines.  This is the feasible equivalent of doctesting shell
+   snippets: the commands aren't executed, but they can't silently rot.
+3. **Doctest** — any ``>>>`` interactive examples in the markdown run under
+   ``doctest`` (none is fine; the check is a no-op then).
+
+Exit status is non-zero with one line per violation, so CI fails loudly.
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+MD_FILES = sorted(
+    p for p in list(REPO.glob("*.md")) + list(REPO.glob("docs/**/*.md"))
+    if ".claude" not in p.parts)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+# Repo-relative path tokens inside code fences: dir/file.ext or top-level
+# known files.  Deliberately conservative — only tokens that look like paths.
+PATH_TOKEN_RE = re.compile(
+    r"(?<![\w/.-])((?:[A-Za-z_][\w.-]*/)+[\w.-]+\.[A-Za-z]{1,4}"
+    r"|requirements[\w.-]*\.txt|Makefile)(?![\w/])")
+MAKE_RE = re.compile(r"\bmake\s+([A-Za-z][\w-]*)")
+# Generated artifacts a snippet may legitimately reference before they exist.
+GENERATED_OK = {"BENCH_sched.json"}
+
+
+def check_links(md: Path, text: str, errors: list) -> None:
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists() and not (REPO / path).exists():
+            errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+
+
+def _make_targets() -> set:
+    """Targets the Makefile defines (rule lines only, not recipe text)."""
+    return {m.group(1) for m in re.finditer(
+        r"^([A-Za-z][\w-]*):", (REPO / "Makefile").read_text(), re.M)}
+
+
+def check_snippets(md: Path, text: str, errors: list,
+                   make_targets: set) -> None:
+    for block in FENCE_RE.findall(text):
+        for token in PATH_TOKEN_RE.findall(block):
+            name = Path(token).name
+            if name in GENERATED_OK or token.startswith("/"):
+                continue
+            if not (REPO / token).exists():
+                errors.append(
+                    f"{md.relative_to(REPO)}: snippet references missing "
+                    f"file -> {token}")
+        for target in MAKE_RE.findall(block):
+            if target not in make_targets:
+                errors.append(
+                    f"{md.relative_to(REPO)}: snippet references unknown "
+                    f"make target -> {target}")
+
+
+def check_doctests(md: Path, text: str, errors: list) -> None:
+    if ">>>" not in text:
+        return
+    results = doctest.testfile(str(md), module_relative=False,
+                               optionflags=doctest.ELLIPSIS, verbose=False)
+    if results.failed:
+        errors.append(f"{md.relative_to(REPO)}: {results.failed} doctest "
+                      f"failure(s)")
+
+
+def main() -> int:
+    errors: list = []
+    make_targets = _make_targets()
+    for md in MD_FILES:
+        text = md.read_text()
+        check_links(md, text, errors)
+        check_snippets(md, text, errors, make_targets)
+        check_doctests(md, text, errors)
+    for err in errors:
+        print(f"docs-check: {err}")
+    print(f"docs-check: {len(MD_FILES)} markdown files, "
+          f"{len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

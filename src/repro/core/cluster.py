@@ -260,6 +260,33 @@ class Cluster:
         if self.on_bind is not None:
             self.on_bind(pod)
 
+    def bind_wave(self, bindings, now: float) -> None:
+        """Commit one wave of scheduler-chosen ``(pod, node)`` binds.
+
+        Equivalent to calling :meth:`bind` per pair — per-pod object effects
+        (incremental node accounting, ``Pod.bind``, the ``on_bind`` callback)
+        happen in wave order — except that:
+
+        * the SoA mirror's usage columns are synced **once per touched node**
+          after the loop instead of once per bind (the mirror is written by
+          assignment from the node's final accounting, so the result is
+          bit-identical);
+        * the per-bind feasibility assert is skipped: the wave already
+          established feasibility against bit-identical free values, and the
+          per-cycle ``check_invariants`` still guards capacity.
+        """
+        touched: Dict[str, Node] = {}
+        on_bind = self.on_bind
+        for pod, node in bindings:
+            node.pods[pod.uid] = pod
+            node._account_add(pod)
+            touched[node.node_id] = node
+            pod.bind(node.node_id, now)
+            if on_bind is not None:
+                on_bind(pod)
+        for node in touched.values():
+            node._notify_usage()
+
     def unbind(self, pod: Pod, now: float, *, failed: bool = False) -> None:
         node = self.node_of(pod)
         if node is not None:

@@ -2,16 +2,37 @@
 
 The discrete-event simulator's cycle hot path — filter+select over all nodes
 for every pending pod — is O(pods x nodes) in Python objects.  This module
-maintains a NumPy structure-of-arrays (SoA) mirror of the cluster that is
-**incrementally updated** on bind/unbind/add/remove/state changes, so the
-schedulers can run their filter+select as a handful of masked vector
-reductions instead of object scans.
+maintains a NumPy structure-of-arrays (SoA) mirror of the cluster
+(:class:`ClusterArrays`) that is **incrementally updated** on
+bind/unbind/add/remove/state changes, so the schedulers can run their
+filter+select as a handful of masked vector reductions instead of object
+scans.
+
+On top of the mirror sits **wave placement** (:class:`WavePlacer`): instead
+of binding pods one at a time through the object layer, the orchestrator
+hands the scheduler a whole pending snapshot.  The scheduler places the wave
+against the placer's *working copies* of the usage columns — accumulating
+bind effects as array deltas — and the accumulated prefix is committed to
+the ``Cluster``/``Node``/``Pod`` objects once per wave
+(:meth:`repro.core.cluster.Cluster.bind_wave`) instead of once per pod.
 
 Parity contract (enforced by ``tests/test_engine_parity.py``): every value in
 the mirror is *assigned* from the corresponding node's incremental
 accounting — never recomputed with a different operation order — so the
 vectorized engine and the object-scan engine see bit-identical floats and
-make bit-identical decisions.
+make bit-identical decisions.  Wave placement preserves the contract by
+construction:
+
+* working ``used_*`` columns are advanced with the same ``+=`` the object
+  accounting uses, in the same bind order, on the same start values;
+* working ``free_*`` entries are refreshed per bound slot as
+  ``alloc[slot] - used[slot]`` — the identical elementwise operation
+  ``free_views`` applies to the whole vector;
+* selection reads the same masks/scores/tie-breaks as the per-pod path.
+
+So pod *k* of a wave observes bit-identical frees to what it would have seen
+had pods ``1..k-1`` been committed individually — same pods land on the same
+nodes, with the same lowest-node_id tie-breaks.
 
 Slot discipline: slots are append-only (never reused), so ascending slot
 order == ``Cluster.nodes`` insertion order.  This matters: Alg. 6 scale-in
@@ -19,7 +40,8 @@ iterates nodes in insertion order and termination order is behaviour.
 
 Engine selection: the mirror is enabled by default; ``REPRO_SCHED_ENGINE=object``
 (or ``Cluster(use_arrays=False)`` / ``ExperimentSpec(engine="object")``)
-disables it, restoring the seed object-scan path for parity testing and
+disables it, restoring the seed per-pod object-scan path (including the
+per-pod scheduling loop in ``Orchestrator.cycle``) for parity testing and
 benchmarking.
 """
 from __future__ import annotations
@@ -52,6 +74,10 @@ class ClusterArrays:
 
     def __init__(self, capacity: int = 64):
         self.n_slots = 0                       # slots ever allocated (monotone)
+        # Monotone mutation counter: bumped on every membership / state /
+        # usage change.  WavePlacer uses it to detect that its working
+        # arrays went stale (e.g. a rescheduler evicted pods mid-cycle).
+        self.version = 0
         self._cap = capacity
         self.alloc_cpu = np.zeros(capacity, np.int64)
         self.alloc_mem = np.zeros(capacity, np.float64)
@@ -110,6 +136,7 @@ class ClusterArrays:
         return slot
 
     def remove(self, slot: int) -> None:
+        self.version += 1
         self.active[slot] = False
         self.state[slot] = STATE_TERMINATED
         pos = self._sorted_slot_list.index(slot)
@@ -119,9 +146,11 @@ class ClusterArrays:
 
     # -- incremental sync (assignment-copy => bit-identical to the node) -------
     def sync_state(self, slot: int, node) -> None:
+        self.version += 1
         self.state[slot] = node.state.value_code
 
     def sync_usage(self, slot: int, node) -> None:
+        self.version += 1
         self.used_cpu[slot] = node._used_cpu_m
         self.used_mem[slot] = node._used_mem_mb
         self.pod_count[slot] = len(node.pods)
@@ -171,3 +200,78 @@ class ClusterArrays:
         assert ids == sorted(ids)
         assert set(self._sorted_slot_list) == {
             n._slot for n in cluster.nodes.values()}
+
+
+class WavePlacer:
+    """Working state for placing one wave of pods against the SoA mirror.
+
+    A placer snapshots the usage columns (working *copies*) and the lifecycle
+    masks (READY / TAINTED) of a :class:`ClusterArrays` mirror.
+    ``Scheduler.select_wave`` advances the working copies with :meth:`bind`
+    as it places pods, so later pods of the wave see earlier placements
+    **without any object-layer commit**; the orchestrator commits the
+    accumulated bindings once per wave via ``Cluster.bind_wave``.
+
+    Rank order: the working arrays cover the *active* slots permuted into
+    **lexicographic node_id order** (``slot_of_rank[r]`` maps back to the
+    mirror slot).  In rank space, ``argmin``/``argmax`` over a masked score
+    buffer returns the *first* extremum — i.e. the lowest-node_id tie-break —
+    in a single vector pass, replacing the per-pod masked-reduction +
+    explicit tie-break chain of the iterated ``select_slot`` path.
+
+    Bit-parity with committing per pod:
+
+    * :meth:`bind` applies the identical ``+=`` the object accounting
+      (``Node._account_add``) would apply, in the same order, on the same
+      start values, then refreshes the bound rank's free entries as
+      ``alloc[r] - used[r]`` — the same elementwise op
+      ``ClusterArrays.free_views`` uses;
+    * permuting into rank order copies float bits verbatim, and extremum /
+      equality comparisons are order-independent, so selection decisions are
+      identical to the slot-ordered per-pod path;
+    * lifecycle masks cannot change inside a wave (reschedulers/autoscalers
+      only run between waves), so snapshotting them is exact.
+
+    ``cache`` memoizes, per request size, the feasibility mask and the
+    policy's ready-masked score buffer; ``Scheduler.select_wave`` refreshes
+    only the just-bound rank after each placement, making the per-pod filter
+    cost O(1) amortized for repeated request sizes.
+
+    Staleness: ``version`` captures ``ClusterArrays.version`` at snapshot
+    time.  Any mirror mutation that did not flow through this placer (an
+    eviction, a node add/remove/taint) bumps the mirror's counter;
+    :meth:`in_sync` turning False tells the orchestrator to rebuild the
+    placer before placing the rest of the snapshot.  After committing its own
+    wave the orchestrator re-arms ``version`` to the post-commit value.
+    """
+
+    def __init__(self, arr: ClusterArrays):
+        self.arr = arr
+        self.version = arr.version
+        rank = arr._sorted_slots            # active slots in node_id order
+        self.slot_of_rank = rank
+        self.n = rank.size
+        self.used_cpu = arr.used_cpu[rank]  # fancy index => working copies
+        self.used_mem = arr.used_mem[rank]
+        self.alloc_cpu = arr.alloc_cpu[rank]
+        self.alloc_mem = arr.alloc_mem[rank]
+        self.free_cpu = self.alloc_cpu - self.used_cpu
+        self.free_mem = self.alloc_mem - self.used_mem
+        state = arr.state[rank]
+        self.ready = state == STATE_READY
+        self.tainted = state == STATE_TAINTED
+        # (cpu_m, mem_mb) -> [fits, ready_mask, score_buf, requests]
+        self.cache: dict = {}
+
+    def in_sync(self) -> bool:
+        """True while no mirror mutation bypassed this placer."""
+        return self.version == self.arr.version
+
+    def bind(self, r: int, req) -> None:
+        """Record a placement at rank ``r`` in the working arrays (no object
+        commit).  Same ``+=`` / ``alloc - used`` float ops as the object
+        path, so the rest of the wave sees bit-identical frees."""
+        self.used_cpu[r] += req.cpu_m
+        self.used_mem[r] += req.mem_mb
+        self.free_cpu[r] = self.alloc_cpu[r] - self.used_cpu[r]
+        self.free_mem[r] = self.alloc_mem[r] - self.used_mem[r]

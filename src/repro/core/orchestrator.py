@@ -21,16 +21,36 @@ Semantics matched to the paper:
 * pods created by evictions during a cycle wait until the next cycle
   (we iterate over a snapshot of the queue).
 
+Two cycle engines implement the "for each pending task t: schedule t" body:
+
+* **wave placement** (array engine, default) — the whole pending snapshot is
+  handed to ``Scheduler.select_wave``, which places it against a
+  ``WavePlacer``'s working arrays; the placed prefix is committed to the
+  object model once per wave (``Cluster.bind_wave``) instead of once per
+  pod.  When a pod blocks, the wave flushes, the paper's
+  reschedule/scale-out path runs for that pod, and the wave resumes after
+  it — reusing the same placer when the mirror's version counter shows the
+  blocked-pod handling didn't mutate the cluster.  Decisions are
+  bit-identical to the per-pod loop (``tests/test_engine_parity.py``).
+* **per-pod loop** (seed object engine, ``REPRO_SCHED_ENGINE=object``) —
+  one ``Scheduler.schedule`` call per pending pod, kept verbatim as the
+  parity reference.
+
 Queueing is event-driven, not scan-driven: the orchestrator registers
-bind/unbind/complete callbacks on the cluster and maintains a real pending
-buffer plus running counters, so each cycle sorts only the currently-pending
-pods instead of re-sorting every pod ever submitted.
+bind/unbind/complete callbacks on the cluster and maintains the pending set
+as a min-heap keyed on ``(pending_since, uid)`` with lazy invalidation, so a
+cycle's FIFO snapshot costs O(k) pops for the k pending pods (plus dropping
+any entries staled by binds since) instead of filtering and re-sorting a
+buffer of every pod ever submitted.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import engine as _engine
 from repro.core.autoscaler import Autoscaler
 from repro.core.cluster import Cluster
 from repro.core.pods import Pod, PodPhase
@@ -49,7 +69,13 @@ class CycleStats:
 
 
 class Orchestrator:
-    """Glues scheduler + rescheduler + autoscaler over one cluster."""
+    """Glues scheduler + rescheduler + autoscaler over one cluster.
+
+    Owns the pending queue (two-level (pending_since, uid) structure fed by
+    cluster bind/unbind callbacks) and the running counters the simulator's
+    exit condition reads.  ``cycle`` is paper Alg. 1; on the array engine it
+    places each cycle's snapshot in waves (see ``_cycle_wave``), on the
+    object engine it runs the seed per-pod loop — both bit-identical."""
 
     def __init__(self, cluster: Cluster, scheduler: Scheduler,
                  rescheduler: Rescheduler, autoscaler: Autoscaler,
@@ -68,7 +94,16 @@ class Orchestrator:
         self.straggler_threshold = straggler_threshold
         self.on_evict = on_evict
         # Event-driven queue + counters (maintained via cluster callbacks).
-        self._pending_buf: List[Pod] = []
+        # Two-level pending queue keyed on (pending_since, uid): a min-heap
+        # of entries pushed since the last snapshot, merged into the carried
+        # sorted pending prefix by pending_pods().  Entries go stale when
+        # their pod binds (and possibly re-pends with a new pending_since) —
+        # snapshots drop them lazily.  push_seq only breaks ties between
+        # duplicate (pending_since, uid) entries so the heap never compares
+        # Pod objects.
+        self._pending_heap: List[Tuple[float, int, int, Pod]] = []
+        self._pending_sorted: List[Tuple[float, int, int, Pod]] = []
+        self._push_seq = itertools.count()
         self._bound_batch: Dict[int, Pod] = {}     # uid -> BOUND batch pod
         self._newly_bound_batch: List[Pod] = []    # drained by the simulator
         self.n_pending = 0
@@ -93,7 +128,7 @@ class Orchestrator:
     def _on_pod_unbound(self, pod: Pod) -> None:
         # evict() recreates the pod as a fresh PENDING incarnation
         self.n_pending += 1
-        self._pending_buf.append(pod)
+        self._push_pending(pod)
         if pod.is_batch:
             self._bound_batch.pop(pod.uid, None)
         elif pod.is_service:
@@ -111,9 +146,14 @@ class Orchestrator:
         return out
 
     # -- queue ------------------------------------------------------------------
+    def _push_pending(self, pod: Pod) -> None:
+        heapq.heappush(self._pending_heap,
+                       (pod.pending_since, pod.uid, next(self._push_seq), pod))
+
     def submit(self, pod: Pod) -> None:
+        """Enqueue a newly-created pod (simulator ARRIVAL handler)."""
         self.pods.append(pod)
-        self._pending_buf.append(pod)
+        self._push_pending(pod)
         self.n_pending += 1
         if pod.is_batch:
             self.n_batch_total += 1
@@ -121,17 +161,30 @@ class Orchestrator:
             self.n_service_total += 1
 
     def pending_pods(self) -> List[Pod]:
-        """Currently-pending pods, FIFO by (pending_since, uid).  Compacts the
-        buffer: stale entries (bound since) drop out, duplicates (bound then
-        evicted while still buffered) dedupe by uid."""
+        """Currently-pending pods, FIFO by (pending_since, uid).
+
+        O(k + j·log j) snapshot for k pending pods and j pushes since the
+        last snapshot: the previous snapshot is carried forward *already
+        sorted*, the j new entries drain from the heap in key order, and the
+        two sorted streams merge in one pass — nothing is re-sorted.  Lazy
+        invalidation drops each stale entry exactly once during the merge:
+        an entry is stale when its pod is no longer PENDING, when it was
+        re-pended with a newer ``pending_since`` (bound then evicted — the
+        eviction pushed a fresh entry), or when it is a same-key duplicate
+        (bound and evicted twice at one timestamp)."""
+        heap = self._pending_heap
+        fresh = [heapq.heappop(heap) for _ in range(len(heap))]
+        out: List[Pod] = []
+        entries: List[Tuple[float, int, int, Pod]] = []
         seen = set()
-        out = []
-        for p in self._pending_buf:
-            if p.phase == PodPhase.PENDING and p.uid not in seen:
-                seen.add(p.uid)
-                out.append(p)
-        out.sort(key=lambda p: (p.pending_since, p.uid))
-        self._pending_buf = list(out)
+        for entry in heapq.merge(self._pending_sorted, fresh):
+            ps, uid, _, pod = entry
+            if (pod.phase is PodPhase.PENDING and pod.pending_since == ps
+                    and uid not in seen):
+                seen.add(uid)
+                out.append(pod)
+                entries.append(entry)
+        self._pending_sorted = entries
         return out
 
     def running_pods(self) -> List[Pod]:
@@ -148,31 +201,19 @@ class Orchestrator:
 
     # -- Algorithm 1 --------------------------------------------------------------
     def cycle(self, now: float) -> CycleStats:
+        """One scheduling cycle (paper Alg. 1): place the pending snapshot,
+        reschedule/scale-out per blocked pod, scale in after a fully
+        successful cycle.  Dispatches to wave placement on the array engine
+        and to the seed per-pod loop otherwise; both produce bit-identical
+        bindings and stats."""
         stats = CycleStats()
         if self.straggler_threshold > 0:
             self._mitigate_stragglers(now)
         snapshot = self.pending_pods()
-        for pod in snapshot:
-            if pod.phase != PodPhase.PENDING:
-                continue   # a binding rescheduler may have placed it already
-            if self.scheduler.schedule(self.cluster, pod, now):
-                stats.placed += 1
-                continue
-            stats.unschedulable += 1
-            stats.all_placed = False
-            outcome = self.rescheduler.reschedule(self.cluster, pod, now)
-            if outcome == RescheduleOutcome.WAIT:
-                continue   # age gate: suppress autoscaling for this pod too
-            if outcome == RescheduleOutcome.RESCHEDULED:
-                stats.rescheduled += 1
-                # Binding rescheduler may have bound the pod itself.
-                if pod.phase != PodPhase.PENDING:
-                    stats.placed += 1
-                    stats.unschedulable -= 1
-                continue
-            stats.scale_out_requests += 1
-            self.total_scale_outs += 1
-            self.autoscaler.scale_out(self.cluster, pod, now)
+        if self.cluster.arrays is not None:
+            self._cycle_wave(snapshot, now, stats)
+        else:
+            self._cycle_per_pod(snapshot, now, stats)
         if stats.all_placed:
             removed = self.autoscaler.scale_in(self.cluster, now)
             stats.scale_ins = len(removed)
@@ -182,6 +223,67 @@ class Orchestrator:
         self._cycle_count += 1
         self.cluster.check_invariants(deep=self._cycle_count % 64 == 0)
         return stats
+
+    def _cycle_wave(self, snapshot: List[Pod], now: float,
+                    stats: CycleStats) -> None:
+        """Wave placement (array engine): place the snapshot in batches.
+
+        Each ``select_wave`` call places a maximal prefix of the remaining
+        snapshot against the placer's working arrays; the prefix is committed
+        to the object model in one ``bind_wave``, then the blocked pod (if
+        any) goes through the paper's reschedule/scale-out path and the wave
+        resumes after it.  The placer — including its per-request-size filter
+        caches — is reused across waves as long as the mirror's version
+        counter proves nothing mutated cluster state behind its back."""
+        arr = self.cluster.arrays
+        placer = None
+        start = 0
+        while start < len(snapshot):
+            if placer is None or not placer.in_sync():
+                placer = _engine.WavePlacer(arr)
+            bindings, blocked = self.scheduler.select_wave(
+                placer, snapshot, start)
+            if bindings:
+                by_slot = self.cluster.node_by_slot
+                self.cluster.bind_wave(
+                    [(pod, by_slot(slot)) for pod, slot in bindings], now)
+                placer.version = arr.version   # re-arm: our own commit
+                stats.placed += len(bindings)
+            if blocked is None:
+                return
+            self._handle_unschedulable(snapshot[blocked], now, stats)
+            start = blocked + 1
+
+    def _cycle_per_pod(self, snapshot: List[Pod], now: float,
+                       stats: CycleStats) -> None:
+        """Seed per-pod loop (object engine): the parity reference."""
+        for pod in snapshot:
+            if pod.phase != PodPhase.PENDING:
+                continue   # a binding rescheduler may have placed it already
+            if self.scheduler.schedule(self.cluster, pod, now):
+                stats.placed += 1
+                continue
+            self._handle_unschedulable(pod, now, stats)
+
+    def _handle_unschedulable(self, pod: Pod, now: float,
+                              stats: CycleStats) -> None:
+        """Alg. 1 fallback chain for one unplaceable pod: reschedule, and on
+        failure request scale-out (shared by both cycle engines)."""
+        stats.unschedulable += 1
+        stats.all_placed = False
+        outcome = self.rescheduler.reschedule(self.cluster, pod, now)
+        if outcome == RescheduleOutcome.WAIT:
+            return   # age gate: suppress autoscaling for this pod too
+        if outcome == RescheduleOutcome.RESCHEDULED:
+            stats.rescheduled += 1
+            # Binding rescheduler may have bound the pod itself.
+            if pod.phase != PodPhase.PENDING:
+                stats.placed += 1
+                stats.unschedulable -= 1
+            return
+        stats.scale_out_requests += 1
+        self.total_scale_outs += 1
+        self.autoscaler.scale_out(self.cluster, pod, now)
 
     # -- fleet extension: straggler mitigation -----------------------------------
     def _mitigate_stragglers(self, now: float) -> None:

@@ -17,19 +17,46 @@ Two execution engines share each policy:
   cluster's :class:`repro.core.engine.ClusterArrays` mirror.  Identical
   floats, identical IEEE ops, identical tie-breaks => identical bindings.
 
+On the array path the orchestrator schedules in **waves**
+(:meth:`Scheduler.select_wave`): the whole pending snapshot is placed
+against a :class:`repro.core.engine.WavePlacer` in one call, and the chosen
+bindings are committed to the object model once per wave
+(``Cluster.bind_wave``) instead of once per pod.  Each policy contributes
+its vectorized selection rule through two hooks:
+
+* :attr:`Scheduler.wave_mode` — ``'min'``/``'max'``: which extremum of the
+  policy's score vector wins (``None`` = no score, first feasible node in
+  node_id order);
+* :meth:`Scheduler.wave_scores` — the score vector itself, computed over the
+  placer's working free columns (falls back to ``None`` for score-free
+  policies).
+
+``select_slot`` (the iterated single-pod array kernel) remains as the
+non-wave array path used by :meth:`Scheduler.schedule`; a policy that
+defines ``select_slot`` but keeps the default wave hooks is still wave-
+compatible because the base ``select_wave`` loop and ``select_slot`` read
+the same masks and tie-breaks.
+
+Wave-placement parity contract (property-tested by
+``tests/test_engine_parity.py``): a wave must produce the **bit-identical
+bind sequence** the seed per-pod loop produces — same pods on the same
+nodes in the same order, lowest-node_id tie-breaks — because the placer
+advances its working frees with the same float ops the object accounting
+applies (see ``repro.core.engine``).
+
 Tie-breaks are uniform across all four policies: among equally-scored
 feasible nodes the **lexicographically lowest node_id wins**.
 """
 from __future__ import annotations
 
 import abc
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node
-from repro.core.pods import Pod
+from repro.core.pods import Pod, PodPhase
 
 
 def _lowest_id(nodes: List[Node]) -> Node:
@@ -44,6 +71,10 @@ class Scheduler(abc.ABC):
     # Concrete policies override with a vectorized (arrays, mask, free_cpu,
     # free_mem, pod) -> slot implementation; None disables the array path.
     select_slot = None
+
+    # Wave placement: which extremum of `wave_scores` wins ('min' | 'max');
+    # None = score-free policy (first feasible node in node_id order).
+    wave_mode: Optional[str] = None
 
     def suitable_nodes(self, cluster: Cluster, pod: Pod) -> List[Node]:
         """getAllSuitableNodes(p): feasible READY nodes, else TAINTED ones."""
@@ -89,6 +120,111 @@ class Scheduler(abc.ABC):
         cluster.bind(pod, cluster.node_by_slot(slot), now)
         return True
 
+    # -- wave placement (vectorized multi-pod array engine) --------------------
+    def wave_scores(self, placer, req, sl=slice(None)) -> Optional[np.ndarray]:
+        """Policy score vector over ``placer``'s working frees, or None.
+
+        ``sl`` restricts the computation to a slice of ranks: ``select_wave``
+        passes a single-rank slice to refresh a cached score buffer after a
+        placement (NumPy ops on a length-1 view are the same IEEE-754 ops as
+        the full-vector elementwise computation, so the refreshed entry is
+        bit-identical to a recompute).  May return a *view* of a placer
+        column (e.g. ``free_mem``).
+        """
+        return None
+
+    def select_wave(self, placer, pods: List[Pod],
+                    start: int = 0) -> Tuple[list, Optional[int]]:
+        """Place ``pods[start:]`` in order against the placer's working state.
+
+        The wave engine of ``Orchestrator.cycle``: pods are considered in
+        snapshot (FIFO) order; each placement is recorded in the placer's
+        working arrays so later pods of the wave observe it, but **no object
+        state is touched** — the caller commits the returned prefix with
+        ``Cluster.bind_wave``.
+
+        Returns ``(bindings, blocked)``: ``bindings`` is the placed prefix as
+        ``(pod, slot)`` pairs, and ``blocked`` is the index (into ``pods``)
+        of the first pod with no feasible node — or ``None`` when the whole
+        remainder was placed.  The orchestrator then runs the paper's
+        rescheduling/scale-out path for the blocked pod and resumes the wave
+        after it.
+
+        Selection is a single ``argmin``/``argmax`` over a per-request-size
+        score buffer: the buffer holds the policy score where the node is
+        READY and feasible and ±inf elsewhere, lives in node-id rank order
+        (so the first extremum *is* the lowest-node_id tie-break), is
+        memoized in ``placer.cache``, and is refreshed only at the just-bound
+        rank after each placement — O(1) amortized filter+score work per pod
+        for repeated request sizes, one O(nodes) reduction per pod.
+        Decisions are bit-identical to iterating ``select_slot`` pod by pod
+        (see the module docstring).
+        """
+        bindings: List[Tuple[Pod, int]] = []
+        cache = placer.cache
+        mode = self.wave_mode
+        mode_min = mode == "min"
+        fill = np.inf if mode_min else -np.inf
+        slot_of_rank = placer.slot_of_rank
+        ready = placer.ready
+        free_cpu, free_mem = placer.free_cpu, placer.free_mem
+        for i in range(start, len(pods)):
+            pod = pods[i]
+            if pod.phase is not PodPhase.PENDING:
+                continue   # a binding rescheduler may have placed it already
+            if placer.n == 0:
+                return bindings, i
+            req = pod.requests
+            key = (req.cpu_m, req.mem_mb)
+            ent = cache.get(key)
+            if ent is None:
+                # Same feasibility ops as Resources.fits_in, elementwise.
+                fits = (free_cpu >= req.cpu_m) & (
+                    (free_mem + 1e-9) >= req.mem_mb)
+                mask = fits & ready
+                if mode is None:
+                    buf = mask          # argmax(bool) == first feasible rank
+                else:
+                    buf = np.where(mask, self.wave_scores(placer, req), fill)
+                ent = (fits, mask, buf, req)
+                cache[key] = ent
+            fits, mask, buf, _ = ent
+            r = int(buf.argmin() if mode_min else buf.argmax())
+            feasible = mask[r] if mode is None else buf[r] != fill
+            if not feasible:
+                # No READY node fits.  Last resort: tainted nodes (paper:
+                # "unless strictly necessary") — same fallback as per-pod.
+                r = self._select_wave_tainted(placer, fits, req)
+                if r < 0:
+                    return bindings, i
+            bindings.append((pod, int(slot_of_rank[r])))
+            placer.bind(r, req)
+            # Only the bound rank's feasibility/score changed: refresh that
+            # one entry in every cached buffer (scalar ops == elementwise).
+            one = slice(r, r + 1)
+            fc, fm = free_cpu[r], free_mem[r]
+            for (cpu_m, mem_mb), (f2, m2, b2, r2) in cache.items():
+                ok = bool(fc >= cpu_m) and bool((fm + 1e-9) >= mem_mb)
+                f2[r] = ok
+                ok = ok and bool(ready[r])
+                m2[r] = ok
+                if mode is not None:
+                    b2[r] = self.wave_scores(placer, r2, one)[0] if ok else fill
+        return bindings, None
+
+    def _select_wave_tainted(self, placer, fits, req) -> int:
+        """Tainted-node fallback of the wave filter: rank of the policy's
+        pick among feasible TAINTED nodes, or -1.  Cold path — only reached
+        when no READY node fits — so nothing is cached."""
+        mask = fits & placer.tainted
+        if not mask.any():
+            return -1
+        if self.wave_mode is None:
+            return int(mask.argmax())
+        fill = np.inf if self.wave_mode == "min" else -np.inf
+        buf = np.where(mask, self.wave_scores(placer, req), fill)
+        return int(buf.argmin() if self.wave_mode == "min" else buf.argmax())
+
 
 class BestFitBinPackingScheduler(Scheduler):
     """Paper Alg. 2 — online best-fit bin packing.
@@ -100,6 +236,7 @@ class BestFitBinPackingScheduler(Scheduler):
     """
 
     name = "best-fit"
+    wave_mode = "min"
 
     def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
         if not nodes:
@@ -110,6 +247,12 @@ class BestFitBinPackingScheduler(Scheduler):
     def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
         best = free_mem[mask].min()
         return arr.first_by_id(mask & (free_mem == best))
+
+    def wave_scores(self, placer, req, sl=slice(None)):
+        # A view into the working frees: the cached score buffer is still a
+        # masked *copy* (np.where) that select_wave must refresh per bind —
+        # the view only makes that single-element refresh read for free.
+        return placer.free_mem[sl]
 
 
 def _k8s_scores(free_cpu, free_mem, alloc_cpu, alloc_mem, req):
@@ -135,6 +278,7 @@ class KubernetesDefaultScheduler(Scheduler):
     """
 
     name = "k8s-default"
+    wave_mode = "max"
 
     def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
         if not nodes:
@@ -156,6 +300,10 @@ class KubernetesDefaultScheduler(Scheduler):
         best = scores[mask].max()
         return arr.first_by_id(mask & (scores == best))
 
+    def wave_scores(self, placer, req, sl=slice(None)):
+        return _k8s_scores(placer.free_cpu[sl], placer.free_mem[sl],
+                           placer.alloc_cpu[sl], placer.alloc_mem[sl], req)
+
 
 class FirstFitScheduler(Scheduler):
     """Ablation baseline: first feasible node in id order (classic FF)."""
@@ -173,6 +321,7 @@ class WorstFitScheduler(Scheduler):
     """Ablation baseline: emptiest feasible node (Docker Swarm 'spread')."""
 
     name = "worst-fit"
+    wave_mode = "max"
 
     def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
         if not nodes:
@@ -183,6 +332,9 @@ class WorstFitScheduler(Scheduler):
     def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
         best = free_mem[mask].max()
         return arr.first_by_id(mask & (free_mem == best))
+
+    def wave_scores(self, placer, req, sl=slice(None)):
+        return placer.free_mem[sl]
 
 
 SCHEDULERS = {

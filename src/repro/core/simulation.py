@@ -5,8 +5,11 @@ on a heap.  Event kinds:
 
 * ``ARRIVAL``     — a job from the workload trace is submitted;
 * ``CYCLE``       — periodic scheduler cycle (paper Alg. 1);
-* ``POD_DONE``    — a batch pod ran to completion (invalidated by eviction
-  via the pod's incarnation counter);
+* ``POD_DONE``    — batch pods ran to completion.  Completions are
+  *bucketed*: each cycle groups the pods it bound by completion timestamp
+  and pushes **one** heap event per distinct timestamp carrying the whole
+  batch, instead of one heap push per pod (stale entries are invalidated
+  per pod via the incarnation counter);
 * ``NODE_READY``  — a provisioning VM joined the cluster (boot delay model);
 * ``SAMPLE``      — 20 s Table-5 utilization sampling;
 * ``NODE_FAIL``   — fleet extension: a node dies (failure injection).
@@ -152,9 +155,13 @@ class Simulation:
 
     def _schedule_completions(self) -> None:
         """Any batch pod bound (or re-bound) since the last cycle gets a
-        completion event for its current incarnation.  The orchestrator hands
-        us exactly the pods bound since the last drain — no per-cycle scan of
-        every running pod."""
+        completion for its current incarnation.  The orchestrator hands us
+        exactly the pods bound since the last drain — no per-cycle scan of
+        every running pod — and completions sharing a timestamp (pods of the
+        same spec bound in the same cycle) are bucketed into a single heap
+        event, so the event heap sees one push per distinct completion time
+        per cycle instead of one per pod."""
+        buckets: Dict[float, List[Tuple[Pod, int]]] = {}
         for pod in self.orch.drain_newly_bound_batch():
             if pod.phase != PodPhase.BOUND:
                 continue   # bound then evicted again before the drain
@@ -164,16 +171,21 @@ class Simulation:
             node = self.cluster.node_of(pod)
             speed = node.speed_factor if node else 1.0
             remaining = pod.spec.duration_s - pod.progress_s
-            self.push(self.now + remaining / max(speed, 1e-6), POD_DONE,
-                      (pod, pod.incarnation))
+            t_done = self.now + remaining / max(speed, 1e-6)
+            buckets.setdefault(t_done, []).append((pod, pod.incarnation))
             self._completion_scheduled[key] = True
+        for t_done, batch in buckets.items():
+            self.push(t_done, POD_DONE, batch)
 
     def _on_pod_done(self, payload) -> None:
-        pod, incarnation = payload
-        if pod.phase != PodPhase.BOUND or pod.incarnation != incarnation:
-            return   # stale event: pod was evicted/failed since
-        self.cluster.complete(pod, self.now)
-        self.last_batch_done = self.now
+        # One POD_DONE event carries every completion bucketed at this
+        # timestamp, in bind order (matching the per-pod event order the
+        # seed engine produced for equal timestamps).
+        for pod, incarnation in payload:
+            if pod.phase != PodPhase.BOUND or pod.incarnation != incarnation:
+                continue   # stale entry: pod was evicted/failed since
+            self.cluster.complete(pod, self.now)
+            self.last_batch_done = self.now
 
     def _on_node_ready(self, node: Node) -> None:
         if node.state != NodeState.PROVISIONING:

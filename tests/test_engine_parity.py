@@ -1,25 +1,31 @@
-"""Golden parity: the array-backed engine must be bit-for-bit identical to
-the seed object-scan engine.
+"""Golden parity: the array-backed wave-placement engine must be bit-for-bit
+identical to the seed per-pod object-scan engine.
 
-Two layers:
+Three layers:
 
 * **End-to-end** — every fig3 policy combo (3 reschedulers x 2 autoscalers),
   the fig4 k8s-default static baseline, and the scheduler ablation produce
   *identical* ``ExperimentResult`` dicts (cost, duration_s, evictions,
   scale_outs, scale_ins, max_nodes, every sampled ratio) under
   ``engine="array"`` and ``engine="object"``.
-* **Property-style** — random bind/unbind/add/remove/taint sequences keep the
-  SoA mirror consistent with the object model (``check_invariants(deep=True)``
-  cross-verifies every mirrored field), without needing hypothesis.
+* **Bind-sequence property** — on randomized clusters/workloads/policy
+  combos, wave placement produces the *identical bind sequence* (pod,
+  incarnation, node, time — in order) the per-pod loop produces, not just
+  identical aggregates.
+* **Mirror property** — random bind/unbind/add/remove/taint sequences keep
+  the SoA mirror consistent with the object model
+  (``check_invariants(deep=True)`` cross-verifies every mirrored field),
+  without needing hypothesis.
 """
 import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.core import (Cluster, ExperimentSpec, Node, Pod, PodKind, PodSpec,
-                        Resources, gi, reset_id_counters, run_all_combos,
-                        run_experiment, run_k8s_baseline)
+from repro.core import (Arrival, Cluster, ExperimentSpec, Node, Pod, PodKind,
+                        PodSpec, Resources, build_simulation, gi,
+                        reset_id_counters, run_all_combos, run_experiment,
+                        run_k8s_baseline)
 
 COMBOS = [(r, a) for r in ("void", "binding", "non-binding")
           for a in ("non-binding", "binding")]
@@ -75,6 +81,82 @@ class TestResultParity:
         assert ra.avg_cpu_ratio == ro.avg_cpu_ratio
         assert ra.avg_pods_per_node == ro.avg_pods_per_node
         assert ra.median_pending_s == ro.median_pending_s
+
+
+class TestFig4Bisection:
+    def test_bisection_matches_linear_scan(self):
+        """The bisected fig4 baseline must pick the same minimum cluster
+        (and therefore the same result row) as the seed linear scan."""
+        fast = run_k8s_baseline("slow", seed=0, search="bisect")
+        slow = run_k8s_baseline("slow", seed=0, search="linear")
+        assert fast.max_nodes == slow.max_nodes
+        assert _as_dict(fast) == _as_dict(slow)
+
+    def test_unknown_search_rejected(self):
+        with pytest.raises(ValueError):
+            run_k8s_baseline("slow", search="exhaustive")
+
+
+def _random_arrivals(rng, n):
+    """A randomized trace mixing services (some moveable) and batch jobs of
+    random sizes — deliberately *not* one of the curated paper workloads."""
+    out = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(20.0))
+        if rng.integers(0, 3) == 0:
+            spec = PodSpec(f"svc{i}", PodKind.SERVICE,
+                           Resources(int(rng.choice([100, 200, 300])),
+                                     gi(float(rng.choice([0.3, 0.6, 1.0])))),
+                           moveable=bool(rng.integers(0, 2)))
+        else:
+            spec = PodSpec(f"job{i}", PodKind.BATCH,
+                           Resources(int(rng.choice([100, 200, 400])),
+                                     gi(float(rng.choice([0.3, 0.9, 1.4])))),
+                           duration_s=float(rng.choice([60.0, 180.0, 400.0])))
+        out.append(Arrival(t, spec))
+    return out
+
+
+class TestWaveBindSequenceParity:
+    """The tentpole property: wave placement commits the *same bind sequence*
+    the seed per-pod loop produces — same pods on the same nodes in the same
+    order, including rebinds of evicted incarnations — on randomized
+    clusters, workloads and policy combos."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_bind_sequences_identical(self, seed):
+        def run(engine):
+            reset_id_counters()
+            rng = np.random.default_rng(seed)
+            spec = ExperimentSpec(
+                workload="rand",
+                arrivals=_random_arrivals(rng, 80),
+                scheduler=str(rng.choice(["best-fit", "first-fit",
+                                          "worst-fit", "k8s-default"])),
+                rescheduler=str(rng.choice(["void", "binding",
+                                            "non-binding"])),
+                autoscaler=str(rng.choice(["non-binding", "binding"])),
+                initial_workers=int(rng.integers(1, 4)),
+                seed=0, engine=engine)
+            sim = build_simulation(spec)
+            log = []
+            inner = sim.cluster.on_bind
+
+            def spy(pod):
+                log.append((pod.uid, pod.incarnation, pod.node_id,
+                            pod.bound_time))
+                inner(pod)
+
+            sim.cluster.on_bind = spy
+            sim.run()
+            return spec.scheduler, log
+
+        combo_a, wave_log = run("array")
+        combo_o, perpod_log = run("object")
+        assert combo_a == combo_o          # same randomized policy combo
+        assert wave_log, "randomized workload produced no bindings"
+        assert wave_log == perpod_log
 
 
 def _mk_pod(rng):
