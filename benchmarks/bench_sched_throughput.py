@@ -18,11 +18,20 @@ apples-to-apples comparison.  The object engine is capped to a bounded
 number of cycles at the larger scales; the array engine additionally runs
 the workload to completion for an end-to-end pods/second figure.
 
+The array engine additionally runs each capped scale to completion for an
+**end-to-end full-run** figure (arrival batching + bucketed completions +
+incremental Table-5 sampling all live outside the capped cycle window, so
+the full run is where they show up); the large scale records the speedup
+against PR 2's committed wall time.  ``--kernels`` re-measures the
+argmin-vs-segment-tree wave-selection crossover that calibrates
+``engine.SEGTREE_AUTO_MIN_NODES``.
+
 Usage::
 
     python benchmarks/bench_sched_throughput.py                  # all scales
     python benchmarks/bench_sched_throughput.py --scale small    # CI smoke
     python benchmarks/bench_sched_throughput.py --engines array  # skip seed
+    python benchmarks/bench_sched_throughput.py --kernels        # + crossover
 
 Writes ``BENCH_sched.json`` (override with ``--out``); prints
 ``name,us_per_call,derived`` CSV lines like the other benches.
@@ -30,6 +39,7 @@ Writes ``BENCH_sched.json`` (override with ``--out``); prints
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import sys
@@ -67,6 +77,11 @@ SCALES = {
 }
 WARMUP_CYCLES = 5
 
+# PR 2's committed end-to-end full-run wall time at the large scale
+# (BENCH_sched.json @ ba0bc49) — the reference the telemetry/timeline
+# refactor is measured against.
+PR2_FULL_RUN_WALL_S = {"large": 1.414}
+
 
 def synth_arrivals(n_pods: int, n_nodes: int, seed: int = 0,
                    target_util: float = 0.7):
@@ -86,6 +101,10 @@ def run_one(scale: str, engine: str, max_cycles=None) -> dict:
     # same counter to perform identical per-cycle work (node ids order
     # lexicographically — same reason as test_engine_parity).
     reset_id_counters()
+    # Measurement isolation (applies to every engine/scale equally): don't
+    # let garbage from the previous run's ~50k-object graph bill its
+    # collection pauses to this run's wall clock.
+    gc.collect()
 
     cfg = SCALES[scale]
     spec = ExperimentSpec(
@@ -133,10 +152,17 @@ def bench_scale(scale: str, engines) -> dict:
               f"{row['engines'][engine]['cycle_throughput_pods_per_s']}")
     if "array" in engines and cap is not None:
         full = run_one(scale, "array", max_cycles=None)
-        row["engines"]["array"]["full_run"] = {
+        entry = {
             "wall_s": full["wall_s"], "completed": full["completed"],
             "pods_per_s_end_to_end": full.get("pods_per_s_end_to_end"),
         }
+        prev = PR2_FULL_RUN_WALL_S.get(scale)
+        if prev and full["wall_s"]:
+            entry["pr2_wall_s"] = prev
+            entry["speedup_vs_pr2"] = round(prev / full["wall_s"], 2)
+            print(f"bench_sched.{scale}.full_run,"
+                  f"{1e6 * full['wall_s']:.0f},{entry['speedup_vs_pr2']}")
+        row["engines"]["array"]["full_run"] = entry
     if "array" in row["engines"] and "object" in row["engines"]:
         a = row["engines"]["array"]["cycle_throughput_pods_per_s"]
         o = row["engines"]["object"]["cycle_throughput_pods_per_s"]
@@ -145,12 +171,53 @@ def bench_scale(scale: str, engines) -> dict:
     return row
 
 
+def bench_wave_kernels(ns=(2048, 8192, 32768, 65536), reps=2000) -> dict:
+    """Per-placement cost (extremum query + one point update) of the two
+    wave-selection kernels, across node counts — re-measures the crossover
+    behind ``engine.SEGTREE_AUTO_MIN_NODES`` (the kernels are
+    decision-identical, so this is purely a constant-factor question)."""
+    from repro.core.engine import SEGTREE_AUTO_MIN_NODES, SegExtTree
+
+    rng = np.random.default_rng(0)
+    out = {"auto_threshold_nodes": SEGTREE_AUTO_MIN_NODES, "per_n": {}}
+    for n in ns:
+        # Each kernel gets its own copy of the same start buffer and applies
+        # the identical (query, write-random-value) sequence, so both do the
+        # same real work — a constant write value would converge to a fixed
+        # minimum and turn the tree updates into early-exit no-ops.
+        base = rng.random(n)
+        vals = rng.random(reps)
+        flat = base.copy()
+        t0 = time.perf_counter()
+        for i in range(reps):
+            flat[int(flat.argmin())] = vals[i]
+        flat_us = 1e6 * (time.perf_counter() - t0) / reps
+        tree = SegExtTree(base.copy(), True)
+        t0 = time.perf_counter()
+        for i in range(reps):
+            tree.update(tree.argext(), vals[i])
+        tree_us = 1e6 * (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(10):
+            SegExtTree(base, True)
+        build_us = 1e6 * (time.perf_counter() - t0) / 10
+        out["per_n"][str(n)] = {
+            "argmin_us": round(flat_us, 2),
+            "segtree_us": round(tree_us, 2),
+            "segtree_build_us": round(build_us, 1),
+        }
+        print(f"bench_sched.kernels.n{n},{flat_us:.2f},{tree_us:.2f}")
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", default="all",
                     choices=["all"] + list(SCALES))
     ap.add_argument("--engines", default="array,object",
                     help="comma-separated subset of {array,object}")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also run the wave-selection kernel crossover bench")
     ap.add_argument("--out", default="BENCH_sched.json")
     args = ap.parse_args(argv)
 
@@ -166,6 +233,8 @@ def main(argv=None) -> dict:
               "scales": {}}
     for scale in scales:
         report["scales"][scale] = bench_scale(scale, engines)
+    if args.kernels:
+        report["wave_select_kernels"] = bench_wave_kernels()
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"# wrote {args.out}")

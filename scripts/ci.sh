@@ -17,6 +17,7 @@ python benchmarks/bench_sched_throughput.py --scale small \
     --out /tmp/BENCH_sched_smoke.json
 python - <<'EOF'
 import json
+import os
 row = json.load(open("/tmp/BENCH_sched_smoke.json"))["scales"]["small"]
 arr = row["engines"]["array"]
 assert arr["completed"], "array engine failed to complete the smoke workload"
@@ -27,4 +28,23 @@ speedup = row["speedup_cycle_throughput"]
 assert speedup and speedup >= 1.5, f"cycle-path regression: speedup={speedup}"
 print(f"smoke OK: {arr['cycle_throughput_pods_per_s']} pods/s "
       f"(speedup vs object engine: {speedup}x)")
+
+# Bench-regression gate: the smoke's absolute cycle throughput must stay
+# within BENCH_REGRESSION_TOLERANCE (default 30%) of the committed
+# BENCH_sched.json baseline.  Machine-dependent by design — the committed
+# numbers come from the same container class; set BENCH_REGRESSION_SKIP=1
+# when running on unrelated hardware.
+if os.environ.get("BENCH_REGRESSION_SKIP") == "1":
+    print("bench-regression gate skipped (BENCH_REGRESSION_SKIP=1)")
+else:
+    tolerance = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.30"))
+    base_row = json.load(open("BENCH_sched.json"))["scales"]["small"]
+    base = base_row["engines"]["array"]["cycle_throughput_pods_per_s"]
+    now = arr["cycle_throughput_pods_per_s"]
+    floor = (1.0 - tolerance) * base
+    assert now >= floor, (
+        f"cycle-throughput regression: {now} pods/s < {floor:.0f} "
+        f"(committed baseline {base} pods/s - {tolerance:.0%})")
+    print(f"bench-regression gate OK: {now} pods/s vs committed {base} "
+          f"(floor {floor:.0f})")
 EOF

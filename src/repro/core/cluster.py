@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
+import math
 from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
@@ -198,13 +199,15 @@ class Cluster:
     without rescanning every pod each cycle.
     """
 
-    def __init__(self, use_arrays: Optional[bool] = None):
+    def __init__(self, use_arrays: Optional[bool] = None,
+                 wave_select: Optional[str] = None):
         self.nodes: Dict[str, Node] = {}
         self.terminated: List[Node] = []    # kept for cost accounting
         if use_arrays is None:
             use_arrays = _engine.arrays_enabled_default()
         self.arrays: Optional[_engine.ClusterArrays] = (
-            _engine.ClusterArrays() if use_arrays else None)
+            _engine.ClusterArrays(wave_select=wave_select)
+            if use_arrays else None)
         self.on_bind: Optional[Callable[[Pod], None]] = None
         self.on_unbind: Optional[Callable[[Pod], None]] = None
         self.on_complete: Optional[Callable[[Pod], None]] = None
@@ -304,11 +307,54 @@ class Cluster:
         if self.on_complete is not None:
             self.on_complete(pod)
 
+    def complete_wave(self, pods, now: float) -> None:
+        """Commit one batch of completions sharing a timestamp.
+
+        Equivalent to calling :meth:`complete` per pod in order — per-pod
+        object effects (incremental node accounting, ``Pod.complete``, the
+        ``on_complete`` callback) are identical — except the SoA mirror's
+        usage columns sync **once per touched node** after the loop instead
+        of once per pod (assignment from the node's final accounting, so the
+        mirror lands on bit-identical values)."""
+        touched: Dict[str, Node] = {}
+        nodes = self.nodes
+        on_complete = self.on_complete
+        for pod in pods:
+            node = nodes.get(pod.node_id)
+            if node is not None:
+                del node.pods[pod.uid]
+                node._account_remove(pod)
+                touched[node.node_id] = node
+            pod.complete(now)
+            if on_complete is not None:
+                on_complete(pod)
+        for node in touched.values():
+            node._notify_usage()
+
     # -- metrics fast path ----------------------------------------------------
+    def utilization_totals(self):
+        """``(n_nodes, ram_ratio_sum, cpu_ratio_sum, pod_count_sum)`` over
+        READY|TAINTED nodes — the exact sums behind the Table-5 ratios.
+
+        On the array engine this reads the mirror's incrementally-maintained
+        sampling aggregates (O(dirty slots) since the last sample,
+        ``engine.ClusterArrays.sample_totals``); the object path recomputes
+        from scratch.  Both produce the correctly-rounded ``fsum`` of the
+        same per-node ratios, so dividing by ``n_nodes`` gives Table-5
+        values bit-identical across engines and across sampling strategies
+        (``statistics.fmean(xs) == math.fsum(xs) / len(xs)``)."""
+        if self.arrays is not None:
+            return self.arrays.sample_totals()
+        n, ram, cpu, ppn = self.utilization_view()
+        return n, math.fsum(ram), math.fsum(cpu), sum(ppn)
+
     def utilization_view(self):
         """(n_nodes, ram_ratios, cpu_ratios, pods_per_node) over READY|TAINTED
         nodes, in insertion order.  Array path and object path produce
-        bit-identical values (same floats, same elementwise ops)."""
+        bit-identical values (same floats, same elementwise ops).  The
+        Table-5 sampler itself uses :meth:`utilization_totals`; this
+        per-node view remains for diagnostics and as the from-scratch
+        reference the aggregate parity tests compare against."""
         if self.arrays is not None:
             arr = self.arrays
             state = arr.live("state")

@@ -34,6 +34,18 @@ So pod *k* of a wave observes bit-identical frees to what it would have seen
 had pods ``1..k-1`` been committed individually — same pods land on the same
 nodes, with the same lowest-node_id tie-breaks.
 
+The mirror also owns two further array-native subsystems:
+
+* **Table-5 sampling aggregates** — per-node utilization contribution
+  columns with dirty tracking, so the 20 s metrics sampler costs O(dirty
+  nodes) incremental maintenance plus one C-speed exact ``fsum`` instead of
+  a per-node Python scan (see :meth:`ClusterArrays.sample_totals`);
+* **segment-tree selection** (:class:`SegExtTree`) — an O(log n)
+  first-extremum index over the wave path's cached score buffers, selectable
+  against the flat argmin kernel via ``REPRO_WAVE_SELECT`` /
+  ``ExperimentSpec(wave_select=...)`` (identical decisions, different
+  constants; "auto" switches on cluster size).
+
 Slot discipline: slots are append-only (never reused), so ascending slot
 order == ``Cluster.nodes`` insertion order.  This matters: Alg. 6 scale-in
 iterates nodes in insertion order and termination order is behaviour.
@@ -47,6 +59,7 @@ benchmarking.
 from __future__ import annotations
 
 import bisect
+import math
 import os
 from typing import List, Optional
 
@@ -59,10 +72,26 @@ STATE_READY = 1
 STATE_TAINTED = 2
 STATE_TERMINATED = 3
 
+# Below this many active nodes the flat C-speed argmin over the cached score
+# buffer beats the Python-level O(log n) tree descent; "auto" wave selection
+# switches to the segment tree only above it.  Measured on the CPU container
+# (query + one real point update per placement): argmin 0.5us/2k nodes ->
+# ~8us/64k nodes vs segtree ~4-6us roughly flat — crossover ~32k
+# (``benchmarks/bench_sched_throughput.py --kernels`` re-measures).
+SEGTREE_AUTO_MIN_NODES = 32768
+
+WAVE_SELECT_MODES = ("auto", "argmin", "segtree")
+
 
 def arrays_enabled_default() -> bool:
     """Engine selection: REPRO_SCHED_ENGINE=object forces the seed path."""
     return os.environ.get("REPRO_SCHED_ENGINE", "array").lower() != "object"
+
+
+def wave_select_default() -> str:
+    """Wave selection kernel: REPRO_WAVE_SELECT=argmin|segtree|auto (default
+    auto — segment tree above SEGTREE_AUTO_MIN_NODES active nodes)."""
+    return os.environ.get("REPRO_WAVE_SELECT", "auto").lower()
 
 
 class ClusterArrays:
@@ -70,14 +99,36 @@ class ClusterArrays:
 
     All arrays are capacity-doubling; the live prefix is ``[:self.n_slots]``.
     ``active`` masks out removed nodes (slots are never reused).
+
+    **Metrics aggregates** (Table-5 sampling, paper §7.2): alongside the
+    capacity columns the mirror maintains per-node *sampling contribution*
+    columns — the RAM ratio, CPU ratio and pod count each READY|TAINTED node
+    contributes to the 20 s utilization sample — plus running node/pod
+    counters.  Any membership / state / usage mutation marks the slot
+    *dirty*; :meth:`sample_totals` refreshes only the dirty slots
+    (vectorized over the dirty index set) and produces the exact,
+    correctly-rounded column sums the seed ``statistics.fmean``/``fsum``
+    sampler computes — bit-identical by construction, because the final
+    reduction is ``math.fsum`` over the contribution column (zeros for
+    non-sampled slots change neither the exact sum nor its rounding).  A
+    compensated running scalar cannot reproduce ``fsum``'s correct rounding
+    bit-for-bit, so the per-tick cost is O(dirty) incremental maintenance
+    plus one C-speed exact reduction, rather than the seed's per-node Python
+    object scan.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, wave_select: Optional[str] = None):
         self.n_slots = 0                       # slots ever allocated (monotone)
         # Monotone mutation counter: bumped on every membership / state /
         # usage change.  WavePlacer uses it to detect that its working
         # arrays went stale (e.g. a rescheduler evicted pods mid-cycle).
         self.version = 0
+        if wave_select is None:
+            wave_select = wave_select_default()
+        if wave_select not in WAVE_SELECT_MODES:
+            raise ValueError(f"wave_select must be one of {WAVE_SELECT_MODES},"
+                             f" got {wave_select!r}")
+        self.wave_select = wave_select
         self._cap = capacity
         self.alloc_cpu = np.zeros(capacity, np.int64)
         self.alloc_mem = np.zeros(capacity, np.float64)
@@ -94,6 +145,17 @@ class ClusterArrays:
         self._sorted_slot_list: List[int] = []
         self._sorted_slots = np.zeros(0, np.int64)
         self.id_rank = np.zeros(capacity, np.int64)   # slot -> rank in id order
+        # Sampling contribution columns (plain Python containers: the exact
+        # fsum reduction and the O(dirty) flush both run at scalar
+        # granularity, where list/bytearray access beats NumPy indexing).
+        self._samp_ram: List[float] = [0.0] * capacity   # slot -> RAM ratio
+        self._samp_cpu: List[float] = [0.0] * capacity   # slot -> CPU ratio
+        self._samp_ppn: List[int] = [0] * capacity       # slot -> pod count
+        self._samp_in = bytearray(capacity)    # slot currently sampled?
+        self._samp_n = 0                       # nodes contributing
+        self._samp_pods = 0                    # exact running Σ pod_count
+        self._dirty = bytearray(capacity)      # slot stale since last flush?
+        self._dirty_slots: List[int] = []
 
     # -- growth ----------------------------------------------------------------
     def _grow(self) -> None:
@@ -107,6 +169,12 @@ class ClusterArrays:
                 new[:] = STATE_TERMINATED
             new[:self._cap] = old
             setattr(self, name, new)
+        extra = new_cap - self._cap
+        self._samp_ram.extend([0.0] * extra)
+        self._samp_cpu.extend([0.0] * extra)
+        self._samp_ppn.extend([0] * extra)
+        self._samp_in.extend(bytearray(extra))
+        self._dirty.extend(bytearray(extra))
         self._cap = new_cap
 
     def _resync_order(self) -> None:
@@ -139,6 +207,9 @@ class ClusterArrays:
         self.version += 1
         self.active[slot] = False
         self.state[slot] = STATE_TERMINATED
+        if not self._dirty[slot]:
+            self._dirty[slot] = 1
+            self._dirty_slots.append(slot)
         pos = self._sorted_slot_list.index(slot)
         del self._sorted_ids[pos]
         del self._sorted_slot_list[pos]
@@ -148,6 +219,9 @@ class ClusterArrays:
     def sync_state(self, slot: int, node) -> None:
         self.version += 1
         self.state[slot] = node.state.value_code
+        if not self._dirty[slot]:
+            self._dirty[slot] = 1
+            self._dirty_slots.append(slot)
 
     def sync_usage(self, slot: int, node) -> None:
         self.version += 1
@@ -155,6 +229,9 @@ class ClusterArrays:
         self.used_mem[slot] = node._used_mem_mb
         self.pod_count[slot] = len(node.pods)
         self.oversub[slot] = node.oversub
+        if not self._dirty[slot]:
+            self._dirty[slot] = 1
+            self._dirty_slots.append(slot)
 
     # -- vector views ----------------------------------------------------------
     def free_views(self):
@@ -166,6 +243,57 @@ class ClusterArrays:
 
     def live(self, name: str) -> np.ndarray:
         return getattr(self, name)[:self.n_slots]
+
+    # -- Table-5 sampling aggregates -------------------------------------------
+    def sample_totals(self):
+        """``(n_nodes, ram_ratio_sum, cpu_ratio_sum, pod_count_sum)`` over
+        READY|TAINTED nodes — the exact sums the Table-5 sampler divides by
+        ``n_nodes`` (paper §7.2).
+
+        Incremental: only slots dirtied since the previous call are
+        re-derived (one vectorized pass over the dirty index set); the float
+        sums are then rounded exactly with ``math.fsum`` over the
+        contribution columns, whose non-sampled entries are zero — so the
+        result is bit-identical to the seed path's
+        ``fsum(per-node ratios) `` regardless of which slots went dirty, in
+        which order, or how the column is laid out."""
+        d = self._dirty_slots
+        if d:
+            idx = np.fromiter(d, np.int64, len(d))
+            st = self.state[idx]
+            sampled = self.active[idx] & (
+                (st == STATE_READY) | (st == STATE_TAINTED))
+            # Same elementwise IEEE ops as the seed utilization scan.
+            ram = self.used_mem[idx] / self.alloc_mem[idx]
+            cpu = self.used_cpu[idx] / np.maximum(self.alloc_cpu[idx], 1)
+            ppn = self.pod_count[idx]
+            sr, sc = self._samp_ram, self._samp_cpu
+            sp, si = self._samp_ppn, self._samp_in
+            dirty = self._dirty
+            dn = dp = 0
+            for slot, f, r, c, p in zip(d, sampled.tolist(), ram.tolist(),
+                                        cpu.tolist(), ppn.tolist()):
+                if f:
+                    sr[slot] = r
+                    sc[slot] = c
+                    if not si[slot]:
+                        dn += 1
+                        si[slot] = 1
+                    dp += p - sp[slot]
+                    sp[slot] = p
+                elif si[slot]:
+                    dn -= 1
+                    dp -= sp[slot]
+                    sr[slot] = 0.0
+                    sc[slot] = 0.0
+                    sp[slot] = 0
+                    si[slot] = 0
+                dirty[slot] = 0
+            self._dirty_slots = []
+            self._samp_n += dn
+            self._samp_pods += dp
+        return (self._samp_n, math.fsum(self._samp_ram),
+                math.fsum(self._samp_cpu), self._samp_pods)
 
     # -- tie-breaks ------------------------------------------------------------
     def first_by_id(self, mask: np.ndarray) -> int:
@@ -200,6 +328,102 @@ class ClusterArrays:
         assert ids == sorted(ids)
         assert set(self._sorted_slot_list) == {
             n._slot for n in cluster.nodes.values()}
+        # Sampling aggregates: a flush must reproduce a from-scratch scan.
+        n, ram_sum, cpu_sum, pods_sum = self.sample_totals()
+        m = self.n_slots
+        st = self.state[:m]
+        mask = self.active[:m] & ((st == STATE_READY) | (st == STATE_TAINTED))
+        assert n == int(mask.sum()), (n, int(mask.sum()))
+        ram = self.used_mem[:m][mask] / self.alloc_mem[:m][mask]
+        cpu = self.used_cpu[:m][mask] / np.maximum(self.alloc_cpu[:m][mask], 1)
+        assert ram_sum == math.fsum(ram.tolist()), "ram aggregate drifted"
+        assert cpu_sum == math.fsum(cpu.tolist()), "cpu aggregate drifted"
+        assert pods_sum == int(self.pod_count[:m][mask].sum())
+        assert not self._dirty_slots and not any(self._dirty)
+
+
+class SegExtTree:
+    """First-extremum segment tree over one cached wave score buffer.
+
+    Replaces the flat O(nodes) ``argmin``/``argmax`` of the cached-buffer
+    wave path with an O(log nodes) descent: :meth:`argext` returns the
+    *lowest rank attaining the extremum* (ties always prefer the left
+    child), which in node-id rank order is exactly the lowest-node_id
+    tie-break the flat reduction implements — so selections are
+    bit-identical to the argmin path (``tests/test_engine_parity.py``
+    asserts identical bind sequences under both kernels).
+
+    Point updates (:meth:`update`) recompute the leaf's ancestors in
+    O(log n), stopping early once an ancestor's value is unchanged.
+    Construction is one vectorized pairwise reduction per level; levels are
+    stored as plain Python lists because queries/updates run at scalar
+    granularity, where list access beats NumPy indexing.
+
+    Crossover: NumPy's flat argmin has far smaller constants, so the tree
+    only wins above roughly ``SEGTREE_AUTO_MIN_NODES`` active nodes —
+    ``wave_select="auto"`` picks per that threshold; ``"argmin"`` /
+    ``"segtree"`` force a kernel.
+    """
+
+    __slots__ = ("levels", "mode_min", "fill", "n")
+
+    def __init__(self, buf: np.ndarray, mode_min: bool):
+        self.mode_min = mode_min
+        self.fill = np.inf if mode_min else -np.inf
+        self.n = int(buf.shape[0])
+        red = np.minimum if mode_min else np.maximum
+        lv = buf.astype(np.float64)            # bool masks become 0.0 / 1.0
+        levels = []
+        while True:
+            if lv.shape[0] & 1 and lv.shape[0] > 1:
+                lv = np.append(lv, self.fill)  # keep sibling pairs complete
+            levels.append(lv.tolist())
+            if lv.shape[0] <= 1:
+                break
+            lv = red(lv[0::2], lv[1::2])
+        self.levels = levels
+
+    def argext(self) -> int:
+        """Lowest rank attaining the extremum, or -1 when the root is the
+        fill value (every rank masked infeasible)."""
+        levels = self.levels
+        top = levels[-1][0]
+        if top == self.fill:
+            return -1
+        i = 0
+        # The extremum value propagates unchanged down the chosen path, and
+        # preferring the left child on equality yields the first index.
+        for k in range(len(levels) - 2, -1, -1):
+            i <<= 1
+            if levels[k][i] != top:
+                i += 1
+        return i
+
+    def update(self, i: int, v: float) -> None:
+        levels = self.levels
+        levels[0][i] = v
+        if self.mode_min:
+            for k in range(1, len(levels)):
+                j = i & ~1
+                child = levels[k - 1]
+                a, b = child[j], child[j + 1]
+                nv = a if a < b else b
+                i >>= 1
+                parent = levels[k]
+                if parent[i] == nv:
+                    return
+                parent[i] = nv
+        else:
+            for k in range(1, len(levels)):
+                j = i & ~1
+                child = levels[k - 1]
+                a, b = child[j], child[j + 1]
+                nv = a if a >= b else b
+                i >>= 1
+                parent = levels[k]
+                if parent[i] == nv:
+                    return
+                parent[i] = nv
 
 
 class WavePlacer:
@@ -250,6 +474,7 @@ class WavePlacer:
         self.version = arr.version
         rank = arr._sorted_slots            # active slots in node_id order
         self.slot_of_rank = rank
+        self.slot_of_rank_list = rank.tolist()   # scalar reads in the pod loop
         self.n = rank.size
         self.used_cpu = arr.used_cpu[rank]  # fancy index => working copies
         self.used_mem = arr.used_mem[rank]
@@ -260,8 +485,16 @@ class WavePlacer:
         state = arr.state[rank]
         self.ready = state == STATE_READY
         self.tainted = state == STATE_TAINTED
-        # (cpu_m, mem_mb) -> [fits, ready_mask, score_buf, requests]
+        # Selection kernel for this wave: flat argmin/argmax over the cached
+        # buffer, or the O(log n) segment tree (identical decisions).
+        mode = arr.wave_select
+        self.use_tree = (mode == "segtree"
+                         or (mode == "auto" and self.n >= SEGTREE_AUTO_MIN_NODES))
+        # (cpu_m, mem_mb) -> (fits, ready_mask, score_buf, requests, tree,
+        #                     cpu_m, mem_mb); cache_list mirrors the values
+        # for the per-bind refresh loop (no dict-view overhead per pod).
         self.cache: dict = {}
+        self.cache_list: list = []
 
     def in_sync(self) -> bool:
         """True while no mirror mutation bypassed this placer."""
@@ -270,7 +503,9 @@ class WavePlacer:
     def bind(self, r: int, req) -> None:
         """Record a placement at rank ``r`` in the working arrays (no object
         commit).  Same ``+=`` / ``alloc - used`` float ops as the object
-        path, so the rest of the wave sees bit-identical frees."""
+        path, so the rest of the wave sees bit-identical frees.
+        (``Scheduler.select_wave`` inlines these four ops in its pod loop;
+        this method is the documented reference implementation.)"""
         self.used_cpu[r] += req.cpu_m
         self.used_mem[r] += req.mem_mb
         self.free_cpu[r] = self.alloc_cpu[r] - self.used_cpu[r]

@@ -44,6 +44,11 @@ class ExperimentSpec:
     # "array" (vectorized SoA engine, default) or "object" (seed object-scan
     # engine); None defers to the REPRO_SCHED_ENGINE env var.
     engine: Optional[str] = None
+    # Wave selection kernel: "argmin" (flat reduction), "segtree" (O(log n)
+    # index), or "auto" (tree above engine.SEGTREE_AUTO_MIN_NODES active
+    # nodes — the kernels are decision-identical, so this is purely a
+    # performance choice); None defers to the REPRO_WAVE_SELECT env var.
+    wave_select: Optional[str] = None
 
 
 def build_simulation(spec: ExperimentSpec) -> Simulation:
@@ -54,7 +59,7 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
     cost = CostModel(price_per_s=PRICE_PER_S)
     provider = SimCloudProvider(spec.template or M2_SMALL, cost)
     use_arrays = None if spec.engine is None else (spec.engine != "object")
-    cluster = Cluster(use_arrays=use_arrays)
+    cluster = Cluster(use_arrays=use_arrays, wave_select=spec.wave_select)
 
     n_static = (spec.static_workers if spec.static_workers is not None
                 else spec.initial_workers)

@@ -34,21 +34,27 @@ class MetricsCollector:
         self.node_count_series: List[tuple] = []
 
     def sample(self, cluster: Cluster, now: float) -> None:
-        # cluster.utilization_view() vectorizes the per-node extraction when
-        # the SoA mirror is on; fmean (exact fsum) keeps the aggregate
-        # bit-identical across engines regardless of summation order.
-        n_nodes, ram_xs, cpu_xs, ppn_xs = cluster.utilization_view()
+        # cluster.utilization_totals() reads the SoA mirror's incrementally
+        # maintained sampling aggregates (O(dirty nodes) per tick) when the
+        # mirror is on; the sums are exact (fsum rounding), so sum/n is
+        # bit-identical to the seed per-node fmean scan on both engines.
+        n_nodes, ram_sum, cpu_sum, ppn_sum = cluster.utilization_totals()
+        # node_count_series records the n_nodes actually sampled — including
+        # the (now, 0) point on an empty cluster, which the seed dropped.
+        self.node_count_series.append((now, n_nodes))
         if n_nodes == 0:
             self.samples.append(Sample(now, 0, 0.0, 0.0, 0.0))
             return
-        ram = statistics.fmean(ram_xs)
-        cpu = statistics.fmean(cpu_xs)
-        ppn = statistics.fmean(ppn_xs)
-        self.samples.append(Sample(now, n_nodes, ram, cpu, ppn))
-        self.node_count_series.append((now, len(cluster.nodes)))
+        self.samples.append(Sample(now, n_nodes, ram_sum / n_nodes,
+                                   cpu_sum / n_nodes,
+                                   float(ppn_sum) / n_nodes))
 
     def record_pending_interval(self, seconds: float) -> None:
         self.pending_intervals.append(seconds)
+
+    def record_pending_intervals(self, seconds) -> None:
+        """Bulk append (one call per pod at end-of-run, not per interval)."""
+        self.pending_intervals.extend(seconds)
 
     # -- aggregates -------------------------------------------------------------
     def median_pending_s(self) -> float:

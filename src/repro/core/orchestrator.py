@@ -160,6 +160,28 @@ class Orchestrator:
         elif pod.is_service:
             self.n_service_total += 1
 
+    def submit_wave(self, arrivals) -> None:
+        """Create and enqueue one pod per arrival of an ARRIVAL batch.
+
+        Equivalent to ``submit(Pod(spec=a.spec, submit_time=a.time))`` per
+        entry, with the per-pod call overhead hoisted out of the loop —
+        the simulator's batched-arrival handler is the only caller."""
+        pods = self.pods
+        heap = self._pending_heap
+        seq = self._push_seq
+        n_batch = n_service = 0
+        for a in arrivals:
+            pod = Pod(spec=a.spec, submit_time=a.time)
+            pods.append(pod)
+            heapq.heappush(heap, (pod.pending_since, pod.uid, next(seq), pod))
+            if pod.is_batch:
+                n_batch += 1
+            elif pod.is_service:
+                n_service += 1
+        self.n_pending += len(arrivals)
+        self.n_batch_total += n_batch
+        self.n_service_total += n_service
+
     def pending_pods(self) -> List[Pod]:
         """Currently-pending pods, FIFO by (pending_since, uid).
 
@@ -173,13 +195,22 @@ class Orchestrator:
         eviction pushed a fresh entry), or when it is a same-key duplicate
         (bound and evicted twice at one timestamp)."""
         heap = self._pending_heap
-        fresh = [heapq.heappop(heap) for _ in range(len(heap))]
+        if heap:
+            # Draining the whole heap == sorting it (keys are unique), and
+            # one C-level sort beats n heappops.
+            fresh = sorted(heap)
+            heap.clear()
+            merged = (heapq.merge(self._pending_sorted, fresh)
+                      if self._pending_sorted else fresh)
+        else:
+            merged = self._pending_sorted
         out: List[Pod] = []
         entries: List[Tuple[float, int, int, Pod]] = []
         seen = set()
-        for entry in heapq.merge(self._pending_sorted, fresh):
+        pending = PodPhase.PENDING
+        for entry in merged:
             ps, uid, _, pod = entry
-            if (pod.phase is PodPhase.PENDING and pod.pending_since == ps
+            if (pod.phase is pending and pod.pending_since == ps
                     and uid not in seen):
                 seen.add(uid)
                 out.append(pod)

@@ -56,7 +56,6 @@ class PodSpec:
             raise ValueError("paper §5.1: batch jobs cannot be moveable")
 
 
-@dataclasses.dataclass
 class Pod:
     """A live pod instance.
 
@@ -65,44 +64,41 @@ class Pod:
     model that by resetting the instance back to PENDING with a fresh
     ``pending_since`` and an incremented ``incarnation`` — identity (``uid``)
     is stable across incarnations so metrics can track the logical task.
+
+    A plain slotted class, not a dataclass: large traces create one instance
+    per arrival (50 k+ per benchmark run), so construction and attribute
+    access are hot.  ``requests`` / ``is_batch`` / ``is_service`` /
+    ``moveable`` are materialized once from the immutable spec instead of
+    going through property descriptors on every read.
     """
 
-    spec: PodSpec
-    submit_time: float
-    uid: int = dataclasses.field(default_factory=lambda: next(_uid))
-    phase: PodPhase = PodPhase.PENDING
-    node_id: Optional[str] = None
-    pending_since: float = 0.0       # start of the *current* pending interval
-    bound_time: Optional[float] = None
-    finish_time: Optional[float] = None
-    incarnation: int = 0
-    progress_s: float = 0.0          # batch: completed work (checkpoint restore)
-    checkpointed_s: float = 0.0      # batch: durable progress at last checkpoint
-    pending_intervals: list = dataclasses.field(default_factory=list)
+    __slots__ = ("spec", "submit_time", "uid", "phase", "node_id",
+                 "pending_since", "bound_time", "finish_time", "incarnation",
+                 "progress_s", "checkpointed_s", "pending_intervals",
+                 "requests", "is_batch", "is_service", "moveable")
 
-    def __post_init__(self):
-        self.pending_since = self.submit_time
+    def __init__(self, spec: PodSpec, submit_time: float):
+        self.spec = spec
+        self.submit_time = submit_time
+        self.uid: int = next(_uid)
+        self.phase = PodPhase.PENDING
+        self.node_id: Optional[str] = None
+        self.pending_since = submit_time  # start of current pending interval
+        self.bound_time: Optional[float] = None
+        self.finish_time: Optional[float] = None
+        self.incarnation = 0
+        self.progress_s = 0.0       # batch: completed work (checkpoint restore)
+        self.checkpointed_s = 0.0   # batch: durable progress at last checkpoint
+        self.pending_intervals: list = []
+        self.requests: Resources = spec.requests
+        self.is_batch: bool = spec.kind == PodKind.BATCH
+        self.is_service: bool = spec.kind == PodKind.SERVICE
+        self.moveable: bool = spec.moveable
 
     # -- convenience ---------------------------------------------------------
     @property
     def name(self) -> str:
         return f"{self.spec.type_name}-{self.uid}"
-
-    @property
-    def requests(self) -> Resources:
-        return self.spec.requests
-
-    @property
-    def is_batch(self) -> bool:
-        return self.spec.kind == PodKind.BATCH
-
-    @property
-    def is_service(self) -> bool:
-        return self.spec.kind == PodKind.SERVICE
-
-    @property
-    def moveable(self) -> bool:
-        return self.spec.moveable
 
     def age(self, now: float) -> float:
         """Time spent in the current pending interval (rescheduler gate)."""

@@ -133,6 +133,17 @@ class Scheduler(abc.ABC):
         """
         return None
 
+    def wave_score_at(self, placer, req, r: int):
+        """Scalar policy score at rank ``r`` — the per-bind cache refresh.
+
+        Default falls back to a length-1 ``wave_scores`` slice; policies
+        whose score is a direct column read (best-fit / worst-fit) or a
+        scalar formula (k8s-default) override it to skip the vector-slice
+        machinery.  Must apply the same IEEE-754 double ops as the
+        elementwise vector computation so the refreshed entry stays
+        bit-identical to a full recompute."""
+        return self.wave_scores(placer, req, slice(r, r + 1))[0]
+
     def select_wave(self, placer, pods: List[Pod],
                     start: int = 0) -> Tuple[list, Optional[int]]:
         """Place ``pods[start:]`` in order against the placer's working state.
@@ -150,27 +161,42 @@ class Scheduler(abc.ABC):
         rescheduling/scale-out path for the blocked pod and resumes the wave
         after it.
 
-        Selection is a single ``argmin``/``argmax`` over a per-request-size
+        Selection per pod is one extremum query over a per-request-size
         score buffer: the buffer holds the policy score where the node is
         READY and feasible and ±inf elsewhere, lives in node-id rank order
         (so the first extremum *is* the lowest-node_id tie-break), is
         memoized in ``placer.cache``, and is refreshed only at the just-bound
         rank after each placement — O(1) amortized filter+score work per pod
-        for repeated request sizes, one O(nodes) reduction per pod.
-        Decisions are bit-identical to iterating ``select_slot`` pod by pod
-        (see the module docstring).
+        for repeated request sizes.  The extremum itself runs on one of two
+        kernels (``engine.wave_select_default`` / ``ExperimentSpec``):
+
+        * **flat** — one C-speed O(nodes) ``argmin``/``argmax`` per pod;
+        * **segment tree** — an :class:`repro.core.engine.SegExtTree` per
+          cached buffer answers the first-extremum query in O(log nodes)
+          and absorbs the per-bind refresh as an O(log nodes) point update.
+
+        Both kernels return the identical rank (same extremum, same
+        first-index tie-break), so decisions are bit-identical to each other
+        and to iterating ``select_slot`` pod by pod (see the module
+        docstring).
         """
         bindings: List[Tuple[Pod, int]] = []
         cache = placer.cache
+        cache_list = placer.cache_list
         mode = self.wave_mode
         mode_min = mode == "min"
         fill = np.inf if mode_min else -np.inf
-        slot_of_rank = placer.slot_of_rank
+        slot_of_rank = placer.slot_of_rank_list
+        use_tree = placer.use_tree
         ready = placer.ready
         free_cpu, free_mem = placer.free_cpu, placer.free_mem
+        used_cpu, used_mem = placer.used_cpu, placer.used_mem
+        alloc_cpu, alloc_mem = placer.alloc_cpu, placer.alloc_mem
+        pending = PodPhase.PENDING
+        score_at = self.wave_score_at
         for i in range(start, len(pods)):
             pod = pods[i]
-            if pod.phase is not PodPhase.PENDING:
+            if pod.phase is not pending:
                 continue   # a binding rescheduler may have placed it already
             if placer.n == 0:
                 return bindings, i
@@ -186,30 +212,60 @@ class Scheduler(abc.ABC):
                     buf = mask          # argmax(bool) == first feasible rank
                 else:
                     buf = np.where(mask, self.wave_scores(placer, req), fill)
-                ent = (fits, mask, buf, req)
+                if not use_tree:
+                    tree = None
+                elif mode is None:
+                    # Boolean mask as a 'max' tree with -inf infeasible
+                    # entries: first rank attaining 1.0 == first feasible,
+                    # all-(-inf) root == no feasible rank.
+                    tree = _engine.SegExtTree(
+                        np.where(mask, 1.0, -np.inf), False)
+                else:
+                    tree = _engine.SegExtTree(buf, mode_min)
+                ent = (fits, mask, buf, req, tree, key[0], key[1])
                 cache[key] = ent
-            fits, mask, buf, _ = ent
-            r = int(buf.argmin() if mode_min else buf.argmax())
-            feasible = mask[r] if mode is None else buf[r] != fill
+                cache_list.append(ent)
+            fits, mask, buf, _, tree, _, _ = ent
+            if tree is None:
+                r = int(buf.argmin() if mode_min else buf.argmax())
+                feasible = mask[r] if mode is None else buf[r] != fill
+            else:
+                r = tree.argext()
+                feasible = r >= 0
             if not feasible:
                 # No READY node fits.  Last resort: tainted nodes (paper:
                 # "unless strictly necessary") — same fallback as per-pod.
                 r = self._select_wave_tainted(placer, fits, req)
                 if r < 0:
                     return bindings, i
-            bindings.append((pod, int(slot_of_rank[r])))
-            placer.bind(r, req)
+            bindings.append((pod, slot_of_rank[r]))
+            # Inlined placer.bind(r, req): same `+=` / `alloc - used` float
+            # ops as the object accounting, so the rest of the wave sees
+            # bit-identical frees.
+            used_cpu[r] += req.cpu_m
+            used_mem[r] += req.mem_mb
+            free_cpu[r] = alloc_cpu[r] - used_cpu[r]
+            free_mem[r] = alloc_mem[r] - used_mem[r]
             # Only the bound rank's feasibility/score changed: refresh that
-            # one entry in every cached buffer (scalar ops == elementwise).
-            one = slice(r, r + 1)
-            fc, fm = free_cpu[r], free_mem[r]
-            for (cpu_m, mem_mb), (f2, m2, b2, r2) in cache.items():
-                ok = bool(fc >= cpu_m) and bool((fm + 1e-9) >= mem_mb)
+            # one entry in every cached buffer.  Scalar extraction is exact
+            # (int64/float64 round-trip verbatim), and Python int/float
+            # comparisons and the `+ 1e-9` are the identical IEEE doubles
+            # the elementwise vector ops compute.
+            fc = int(free_cpu[r])
+            fm_eps = float(free_mem[r]) + 1e-9
+            ready_r = bool(ready[r])
+            for f2, m2, b2, r2, t2, cpu_m, mem_mb in cache_list:
+                ok = fc >= cpu_m and fm_eps >= mem_mb
                 f2[r] = ok
-                ok = ok and bool(ready[r])
+                ok = ok and ready_r
                 m2[r] = ok
                 if mode is not None:
-                    b2[r] = self.wave_scores(placer, r2, one)[0] if ok else fill
+                    v = score_at(placer, r2, r) if ok else fill
+                    b2[r] = v
+                    if t2 is not None:
+                        t2.update(r, v)
+                elif t2 is not None:   # buf is the mask itself (1/-inf tree)
+                    t2.update(r, 1.0 if ok else -np.inf)
         return bindings, None
 
     def _select_wave_tainted(self, placer, fits, req) -> int:
@@ -253,6 +309,9 @@ class BestFitBinPackingScheduler(Scheduler):
         # masked *copy* (np.where) that select_wave must refresh per bind —
         # the view only makes that single-element refresh read for free.
         return placer.free_mem[sl]
+
+    def wave_score_at(self, placer, req, r: int):
+        return placer.free_mem[r]
 
 
 def _k8s_scores(free_cpu, free_mem, alloc_cpu, alloc_mem, req):
@@ -304,6 +363,12 @@ class KubernetesDefaultScheduler(Scheduler):
         return _k8s_scores(placer.free_cpu[sl], placer.free_mem[sl],
                            placer.alloc_cpu[sl], placer.alloc_mem[sl], req)
 
+    def wave_score_at(self, placer, req, r: int):
+        # NumPy scalar ops are the same IEEE-754 doubles as the elementwise
+        # vector computation — bit-identical to a length-1 slice.
+        return _k8s_scores(placer.free_cpu[r], placer.free_mem[r],
+                           placer.alloc_cpu[r], placer.alloc_mem[r], req)
+
 
 class FirstFitScheduler(Scheduler):
     """Ablation baseline: first feasible node in id order (classic FF)."""
@@ -335,6 +400,9 @@ class WorstFitScheduler(Scheduler):
 
     def wave_scores(self, placer, req, sl=slice(None)):
         return placer.free_mem[sl]
+
+    def wave_score_at(self, placer, req, r: int):
+        return placer.free_mem[r]
 
 
 SCHEDULERS = {

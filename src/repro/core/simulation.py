@@ -1,22 +1,37 @@
 """Discrete-event simulator for the paper's evaluation (§7).
 
-Deterministic (seeded, no wall clock): events are (time, seq, kind, payload)
-on a heap.  Event kinds:
+Deterministic (seeded, no wall clock).  Events live on a typed
+:class:`Timeline` — a two-stream structure replacing the seed's flat
+one-entry-per-event heap:
 
-* ``ARRIVAL``     — a job from the workload trace is submitted;
+* the **arrival stream** — the workload trace is already sorted by
+  submission time, so ARRIVAL events are never heap-managed at all: the
+  timeline merges the presorted stream against the heap head and drains
+  every arrival due before the next non-arrival event as **one batch**
+  (50 k trace entries collapse into a few hundred batch events);
+* the **event heap** — everything else, with POD_DONE *bucketed*: each
+  cycle groups the pods it bound by completion timestamp and pushes one
+  event per distinct timestamp carrying the whole batch (stale entries are
+  invalidated per pod via the incarnation counter).
+
+Event kinds:
+
+* ``ARRIVAL``     — a run of trace jobs is submitted (batch payload);
 * ``CYCLE``       — periodic scheduler cycle (paper Alg. 1);
-* ``POD_DONE``    — batch pods ran to completion.  Completions are
-  *bucketed*: each cycle groups the pods it bound by completion timestamp
-  and pushes **one** heap event per distinct timestamp carrying the whole
-  batch, instead of one heap push per pod (stale entries are invalidated
-  per pod via the incarnation counter);
+* ``POD_DONE``    — batch pods ran to completion (bucketed, see above);
 * ``NODE_READY``  — a provisioning VM joined the cluster (boot delay model);
 * ``SAMPLE``      — 20 s Table-5 utilization sampling;
 * ``NODE_FAIL``   — fleet extension: a node dies (failure injection).
 
-Exit condition: all arrivals submitted and every batch pod SUCCEEDED; services
-are then torn down and billing closed (paper's *scheduling duration* =
-first submission → last batch completion).
+Ordering is identical to the seed heap: the seed pushed every arrival
+before any other event, so at equal timestamps arrivals always won the
+sequence-number tie-break — exactly the ``arrival_time <= heap_head`` rule
+the timeline applies; all other simultaneous events retain push order via
+the heap's sequence counter.
+
+Exit condition: all arrivals submitted and every batch pod SUCCEEDED;
+services are then torn down and billing closed (paper's *scheduling
+duration* = first submission → last batch completion).
 """
 from __future__ import annotations
 
@@ -24,6 +39,7 @@ import dataclasses
 import heapq
 import itertools
 import time
+from bisect import bisect_right
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import Autoscaler
@@ -35,6 +51,64 @@ from repro.core.pods import Pod, PodPhase
 from repro.core.workload import Arrival
 
 ARRIVAL, CYCLE, POD_DONE, NODE_READY, SAMPLE, NODE_FAIL = range(6)
+
+_INF = float("inf")
+
+
+class Timeline:
+    """Typed event timeline: presorted arrival stream + bucketed heap.
+
+    ``pop()`` yields ``(t, kind, payload)`` in global time order.  ARRIVAL
+    events carry a **batch payload** (a list of :class:`Arrival`): one pop
+    drains every arrival due at or before the next heap event, bounded by
+    ``horizon`` so a batch never crosses the simulation's time limit (the
+    consumer must still see the first out-of-limit event to stop on it,
+    exactly like popping it off the seed heap).
+
+    Tie-break contract (bit-parity with the seed heap): arrivals were
+    pushed first in the seed, so they carried the lowest sequence numbers —
+    at equal timestamps an arrival always preceded any other event.  Here
+    that is the ``t_arrival <= t_heap`` comparison.  Heap events pushed
+    later keep their relative push order via ``seq``.
+    """
+
+    def __init__(self, arrivals: List[Arrival], horizon: float = _INF):
+        self._arrivals = arrivals
+        self._times = [a.time for a in arrivals]   # bisect-able key column
+        self._ai = 0
+        self._horizon = horizon
+        self._heap: List[Tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, kind: int, payload=None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def __bool__(self) -> bool:
+        return bool(self._heap) or self._ai < len(self._arrivals)
+
+    def pop(self) -> Tuple[float, int, object]:
+        """Earliest event; ARRIVAL runs come out as one batch."""
+        ai = self._ai
+        t_arr = self._times[ai] if ai < len(self._arrivals) else _INF
+        heap = self._heap
+        if heap:
+            head = heap[0]
+            if head[0] < t_arr:
+                heapq.heappop(heap)
+                return head[0], head[2], head[3]
+            limit = head[0]
+        else:
+            if t_arr is _INF:
+                raise IndexError("pop from empty Timeline")
+            limit = _INF
+        if t_arr > self._horizon:
+            # Out-of-horizon arrival: surface it alone, like the seed heap
+            # popping the first over-limit event (the consumer stops on it).
+            self._ai = ai + 1
+            return t_arr, ARRIVAL, self._arrivals[ai:ai + 1]
+        j = bisect_right(self._times, min(limit, self._horizon), ai)
+        self._ai = j
+        return t_arr, ARRIVAL, self._arrivals[ai:j]
 
 
 @dataclasses.dataclass
@@ -62,8 +136,7 @@ class Simulation:
         self.metrics = MetricsCollector()
         self.failure_injector = failure_injector
         self.now = 0.0
-        self._heap: List[Tuple[float, int, int, object]] = []
-        self._seq = itertools.count()
+        self.timeline: Optional[Timeline] = None
         self._completion_scheduled: Dict[Tuple[int, int], bool] = {}
         self.cycle_wall_s: List[float] = []    # per-cycle latency (bench)
         self.cycle_placed: List[int] = []      # per-cycle placements (bench)
@@ -75,7 +148,9 @@ class Simulation:
 
     # -- event plumbing -----------------------------------------------------------
     def push(self, t: float, kind: int, payload=None) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+        if self.timeline is None:   # pre-run priming (failure injectors)
+            self.timeline = Timeline(self.arrivals)
+        self.timeline.push(t, kind, payload)
 
     # -- public: used by SimProvider ----------------------------------------------
     def schedule_node_ready(self, node: Node, t: float) -> None:
@@ -83,21 +158,24 @@ class Simulation:
 
     # -- main loop ------------------------------------------------------------------
     def run(self) -> ExperimentResult:
-        for a in self.arrivals:
-            self.push(a.time, ARRIVAL, a)
-        self.push(0.0, CYCLE)
-        self.push(0.0, SAMPLE)
+        if self.timeline is None:
+            self.timeline = Timeline(self.arrivals)
+        tl = self.timeline
+        tl._horizon = self.config.max_sim_time_s   # config may change pre-run
+        tl.push(0.0, CYCLE)
+        tl.push(0.0, SAMPLE)
         if self.failure_injector is not None:
             self.failure_injector.prime(self)
 
+        max_t = self.config.max_sim_time_s
         completed = False
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > self.config.max_sim_time_s:
+        while tl:
+            t, kind, payload = tl.pop()
+            if t > max_t:
                 break
             self.now = t
             if kind == ARRIVAL:
-                self._on_arrival(payload)
+                self._on_arrivals(payload)
             elif kind == CYCLE:
                 self._on_cycle()
             elif kind == POD_DONE:
@@ -117,11 +195,17 @@ class Simulation:
         return self._result(completed, end)
 
     # -- handlers --------------------------------------------------------------------
-    def _on_arrival(self, arrival: Arrival) -> None:
-        pod = Pod(spec=arrival.spec, submit_time=self.now)
+    def _on_arrivals(self, batch: List[Arrival]) -> None:
+        """Submit one ARRIVAL batch.  Each pod's submit_time/pending_since
+        is its own arrival instant, exactly as under per-event handling;
+        ``now`` jumps straight to the batch's last arrival because nothing
+        can observe the intermediate instants — no other event is due
+        before then (Timeline contract) and submission never reads the
+        clock."""
         if self.first_submit is None:
-            self.first_submit = self.now
-        self.orch.submit(pod)
+            self.first_submit = batch[0].time
+        self.now = batch[-1].time
+        self.orch.submit_wave(batch)
 
     def _on_cycle(self) -> None:
         t0 = time.perf_counter() if self.config.record_cycle_times else 0.0
@@ -136,7 +220,7 @@ class Simulation:
             return   # benchmark cap: stop perpetuating cycles
         if self._permanently_stuck(stats):
             self._stuck = True
-            return   # stop perpetuating cycles; heap drains, run() returns
+            return   # stop perpetuating cycles; timeline drains, run() returns
         self.push(self.now + self.config.cycle_period_s, CYCLE)
 
     def _permanently_stuck(self, stats) -> bool:
@@ -162,29 +246,45 @@ class Simulation:
         event, so the event heap sees one push per distinct completion time
         per cycle instead of one per pod."""
         buckets: Dict[float, List[Tuple[Pod, int]]] = {}
+        scheduled = self._completion_scheduled
+        node_of = self.cluster.nodes.get
+        now = self.now
         for pod in self.orch.drain_newly_bound_batch():
-            if pod.phase != PodPhase.BOUND:
+            if pod.phase is not PodPhase.BOUND:
                 continue   # bound then evicted again before the drain
-            key = (pod.uid, pod.incarnation)
-            if key in self._completion_scheduled:
+            incarnation = pod.incarnation
+            key = (pod.uid, incarnation)
+            if scheduled.get(key):
                 continue
-            node = self.cluster.node_of(pod)
+            scheduled[key] = True
+            node = node_of(pod.node_id)
             speed = node.speed_factor if node else 1.0
             remaining = pod.spec.duration_s - pod.progress_s
-            t_done = self.now + remaining / max(speed, 1e-6)
-            buckets.setdefault(t_done, []).append((pod, pod.incarnation))
-            self._completion_scheduled[key] = True
+            t_done = now + remaining / max(speed, 1e-6)
+            bucket = buckets.get(t_done)
+            if bucket is None:
+                buckets[t_done] = [(pod, incarnation)]
+            else:
+                bucket.append((pod, incarnation))
         for t_done, batch in buckets.items():
             self.push(t_done, POD_DONE, batch)
 
     def _on_pod_done(self, payload) -> None:
         # One POD_DONE event carries every completion bucketed at this
         # timestamp, in bind order (matching the per-pod event order the
-        # seed engine produced for equal timestamps).
+        # seed engine produced for equal timestamps).  Keys drop out of
+        # _completion_scheduled here — live or stale, this event was that
+        # incarnation's one shot — so the map stays bounded by the number
+        # of in-flight pods instead of growing for the whole run.
+        scheduled = self._completion_scheduled
+        live: List[Pod] = []
         for pod, incarnation in payload:
-            if pod.phase != PodPhase.BOUND or pod.incarnation != incarnation:
+            scheduled.pop((pod.uid, incarnation), None)
+            if pod.phase is not PodPhase.BOUND or pod.incarnation != incarnation:
                 continue   # stale entry: pod was evicted/failed since
-            self.cluster.complete(pod, self.now)
+            live.append(pod)
+        if live:
+            self.cluster.complete_wave(live, self.now)
             self.last_batch_done = self.now
 
     def _on_node_ready(self, node: Node) -> None:
@@ -226,8 +326,7 @@ class Simulation:
 
     def _result(self, completed: bool, end: float) -> ExperimentResult:
         for pod in self.orch.pods:
-            for iv in pod.pending_intervals:
-                self.metrics.record_pending_interval(iv)
+            self.metrics.record_pending_intervals(pod.pending_intervals)
         start = self.first_submit or 0.0
         evictions = sum(p.incarnation for p in self.orch.pods)
         return ExperimentResult(

@@ -1,7 +1,7 @@
 """Golden parity: the array-backed wave-placement engine must be bit-for-bit
 identical to the seed per-pod object-scan engine.
 
-Three layers:
+Five layers:
 
 * **End-to-end** — every fig3 policy combo (3 reschedulers x 2 autoscalers),
   the fig4 k8s-default static baseline, and the scheduler ablation produce
@@ -14,10 +14,18 @@ Three layers:
   identical aggregates.
 * **Mirror property** — random bind/unbind/add/remove/taint sequences keep
   the SoA mirror consistent with the object model
-  (``check_invariants(deep=True)`` cross-verifies every mirrored field),
-  without needing hypothesis.
+  (``check_invariants(deep=True)`` cross-verifies every mirrored field —
+  including the incremental Table-5 sampling aggregates against a
+  from-scratch scan), without needing hypothesis.
+* **Metrics parity** — the incremental sampler (dirty-tracked aggregate
+  columns + exact fsum rounding) produces every 20 s sample bit-identical
+  to the seed per-node ``fmean`` scan, on curated and randomized runs.
+* **Selection-kernel parity** — the O(log n) segment-tree wave index and
+  the flat argmin kernel make identical decisions (same extremum, same
+  lowest-rank tie-break), unit-level and end-to-end.
 """
 import dataclasses
+import math
 
 import numpy as np
 import pytest
@@ -26,6 +34,8 @@ from repro.core import (Arrival, Cluster, ExperimentSpec, Node, Pod, PodKind,
                         PodSpec, Resources, build_simulation, gi,
                         reset_id_counters, run_all_combos, run_experiment,
                         run_k8s_baseline)
+from repro.core.engine import SegExtTree
+from repro.core.failures import FailureInjector, StragglerInjector
 
 COMBOS = [(r, a) for r in ("void", "binding", "non-binding")
           for a in ("non-binding", "binding")]
@@ -238,3 +248,315 @@ class TestMirrorProperty:
             fresh_mem = sum(p.requests.mem_mb for p in node.pods.values())
             assert node.used.cpu_m == fresh_cpu
             assert abs(node.used.mem_mb - fresh_mem) < 1e-6
+
+
+class TestMetricsParity:
+    """Tentpole: Table-5 sampling reads the mirror's incremental aggregate
+    columns (O(dirty) maintenance + exact fsum rounding) and must stay
+    bit-identical to the seed per-node scan — per *sample*, not just on the
+    time-averaged headline numbers."""
+
+    def _samples(self, engine, seed):
+        reset_id_counters()
+        rng = np.random.default_rng(seed)
+        spec = ExperimentSpec(
+            workload="rand",
+            arrivals=_random_arrivals(rng, 60),
+            scheduler=str(rng.choice(["best-fit", "first-fit",
+                                      "worst-fit", "k8s-default"])),
+            rescheduler=str(rng.choice(["void", "binding", "non-binding"])),
+            autoscaler=str(rng.choice(["non-binding", "binding"])),
+            initial_workers=int(rng.integers(1, 4)),
+            seed=0, engine=engine)
+        sim = build_simulation(spec)
+        sim.run()
+        return ([dataclasses.astuple(s) for s in sim.metrics.samples],
+                sim.metrics.node_count_series)
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_sample_series_identical_randomized(self, seed):
+        arr_samples, arr_counts = self._samples("array", seed)
+        obj_samples, obj_counts = self._samples("object", seed)
+        assert arr_samples, "run produced no samples"
+        assert arr_samples == obj_samples
+        assert arr_counts == obj_counts
+
+    def test_totals_match_scratch_scan_under_mutation(self):
+        """Direct aggregate unit: utilization_totals() after an arbitrary
+        mutation sequence equals an exact from-scratch fsum of the per-node
+        view, on both engines."""
+        rng = np.random.default_rng(11)
+        for use_arrays in (True, False):
+            cluster = Cluster(use_arrays=use_arrays)
+            bound = []
+            t = 0.0
+            for step in range(120):
+                t += 1.0
+                op = rng.integers(0, 6)
+                if op == 0 or not cluster.nodes:
+                    node = Node(allocatable=Resources(940, gi(3.5)),
+                                node_id=f"mm{use_arrays}-{step}")
+                    if rng.integers(0, 3):
+                        node.mark_ready(t)   # else stays PROVISIONING
+                    cluster.add_node(node)
+                elif op == 1:
+                    pod = _mk_pod(rng)
+                    fitting = [n for n in cluster.ready_nodes()
+                               if n.fits(pod.requests)]
+                    if fitting:
+                        cluster.bind(pod, fitting[0], t)
+                        bound.append(pod)
+                elif op == 2 and bound:
+                    cluster.unbind(bound.pop(), t)
+                elif op == 3:
+                    nodes = list(cluster.nodes.values())
+                    node = nodes[int(rng.integers(0, len(nodes)))]
+                    node.taint() if rng.integers(0, 2) else node.untaint()
+                elif op == 4:
+                    empties = [n for n in cluster.nodes.values()
+                               if not n.pods and n.state.value != "provisioning"]
+                    if empties:
+                        cluster.remove_node(empties[0], t)
+                elif op == 5 and bound:
+                    batch = [p for p in bound if p.is_batch]
+                    if batch:
+                        bound.remove(batch[0])
+                        cluster.complete(batch[0], t)
+                n, ram_sum, cpu_sum, ppn_sum = cluster.utilization_totals()
+                n2, ram, cpu, ppn = cluster.utilization_view()
+                assert n == n2
+                assert ram_sum == math.fsum(ram)
+                assert cpu_sum == math.fsum(cpu)
+                assert ppn_sum == sum(ppn)
+
+    def test_empty_cluster_sample_recorded(self):
+        """Satellite regression: the (now, 0) point must land in
+        node_count_series, and non-empty points record the *sampled* node
+        count (READY|TAINTED), not len(cluster.nodes)."""
+        from repro.core.metrics import MetricsCollector
+        cluster = Cluster(use_arrays=True)
+        mc = MetricsCollector()
+        mc.sample(cluster, 0.0)
+        assert mc.node_count_series == [(0.0, 0)]
+        assert mc.samples[0].n_nodes == 0
+        ready = Node(allocatable=Resources(940, gi(3.5)), node_id="mc-r")
+        ready.mark_ready(1.0)
+        cluster.add_node(ready)
+        cluster.add_node(Node(allocatable=Resources(940, gi(3.5)),
+                              node_id="mc-p"))   # stays PROVISIONING
+        mc.sample(cluster, 20.0)
+        assert mc.node_count_series[-1] == (20.0, 1)   # not len(nodes) == 2
+        assert mc.samples[-1].n_nodes == 1
+
+
+class TestWaveSelectParity:
+    """Tentpole: the segment-tree selection kernel must make bit-identical
+    decisions to the flat argmin kernel — same extremum value, same
+    lowest-rank tie-break — unit-level and through whole experiments."""
+
+    @pytest.mark.parametrize("mode_min", [True, False])
+    def test_tree_matches_flat_reduction_under_updates(self, mode_min):
+        rng = np.random.default_rng(5)
+        fill = np.inf if mode_min else -np.inf
+        for n in (1, 2, 3, 7, 16, 33, 100):
+            # Small discrete value set => plenty of ties to break.
+            vals = rng.choice([1.0, 2.0, 3.0], size=n)
+            vals[rng.random(n) < 0.3] = fill
+            tree = SegExtTree(vals, mode_min)
+
+            def flat(v):
+                r = int(v.argmin() if mode_min else v.argmax())
+                return -1 if v[r] == fill else r
+
+            assert tree.argext() == flat(vals)
+            for _ in range(60):
+                i = int(rng.integers(0, n))
+                v = float(rng.choice([0.5, 1.0, 2.0, 3.0, fill]))
+                vals[i] = v
+                tree.update(i, v)
+                assert tree.argext() == flat(vals)
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_bind_sequences_identical_across_kernels(self, seed):
+        def run(wave_select):
+            reset_id_counters()
+            rng = np.random.default_rng(seed)
+            spec = ExperimentSpec(
+                workload="rand",
+                arrivals=_random_arrivals(rng, 80),
+                scheduler=str(rng.choice(["best-fit", "first-fit",
+                                          "worst-fit", "k8s-default"])),
+                rescheduler=str(rng.choice(["void", "binding",
+                                            "non-binding"])),
+                autoscaler=str(rng.choice(["non-binding", "binding"])),
+                initial_workers=int(rng.integers(1, 4)),
+                seed=0, engine="array", wave_select=wave_select)
+            sim = build_simulation(spec)
+            log = []
+            inner = sim.cluster.on_bind
+
+            def spy(pod):
+                log.append((pod.uid, pod.incarnation, pod.node_id,
+                            pod.bound_time))
+                inner(pod)
+
+            sim.cluster.on_bind = spy
+            result = sim.run()
+            return log, dataclasses.asdict(result)
+
+        tree_log, tree_result = run("segtree")
+        flat_log, flat_result = run("argmin")
+        assert tree_log, "randomized workload produced no bindings"
+        assert tree_log == flat_log
+        assert tree_result == flat_result
+
+    def test_fig3_combo_identical_under_segtree(self):
+        reset_id_counters()
+        seg = run_experiment(ExperimentSpec(
+            workload="mixed", rescheduler="non-binding",
+            autoscaler="binding", seed=0, engine="array",
+            wave_select="segtree"))
+        reset_id_counters()
+        obj = run_experiment(ExperimentSpec(
+            workload="mixed", rescheduler="non-binding",
+            autoscaler="binding", seed=0, engine="object"))
+        assert dataclasses.asdict(seg) == dataclasses.asdict(obj)
+
+    def test_unknown_wave_select_rejected(self):
+        with pytest.raises(ValueError):
+            Cluster(use_arrays=True, wave_select="quantum")
+
+    def test_waveplacer_bind_matches_inlined_wave_ops(self):
+        """``WavePlacer.bind`` is the documented reference implementation of
+        the four accounting ops ``select_wave`` inlines in its pod loop;
+        replaying a wave's bindings through it must reproduce the placer's
+        working arrays bit-for-bit (guards the two copies against drift)."""
+        from repro.core.engine import WavePlacer
+        from repro.core.scheduler import BestFitBinPackingScheduler
+
+        cluster = Cluster(use_arrays=True)
+        rng = np.random.default_rng(3)
+        for i in range(8):
+            node = Node(allocatable=Resources(940, gi(3.5)),
+                        node_id=f"wb-{i}")
+            node.mark_ready(0.0)
+            cluster.add_node(node)
+        pods = [_mk_pod(rng) for _ in range(30)]
+        arr = cluster.arrays
+        placer = WavePlacer(arr)
+        bindings, _ = BestFitBinPackingScheduler().select_wave(placer, pods)
+        assert bindings, "wave placed nothing"
+        replay = WavePlacer(arr)   # same snapshot: nothing was committed
+        for pod, slot in bindings:
+            replay.bind(int(arr.id_rank[slot]), pod.requests)
+        for name in ("used_cpu", "used_mem", "free_cpu", "free_mem"):
+            assert getattr(placer, name).tolist() == \
+                getattr(replay, name).tolist(), name
+
+
+class TestFailureWaveParity:
+    """Satellite: failure / straggler injection interacting with wave
+    placement.  A node death (or any mutation the placer did not make)
+    bumps the mirror's version counter; the orchestrator must rebuild the
+    placer rather than bind pods to stale — possibly dead — nodes."""
+
+    def _run_with_failures(self, engine, straggler=False):
+        reset_id_counters()
+        injector = FailureInjector(mtbf_s=900.0, seed=3)
+        spec = ExperimentSpec(
+            workload="slow", rescheduler="non-binding", autoscaler="binding",
+            seed=0, engine=engine, failure_injector=injector,
+            straggler_threshold=0.8 if straggler else 0.0)
+        sim = build_simulation(spec)
+        if straggler:
+            slowifier = StragglerInjector(every_k=2, slow_factor=0.4)
+            for node in sorted(sim.cluster.nodes.values(),
+                               key=lambda n: n.node_id):
+                slowifier.maybe_slow(node)
+        cluster = sim.cluster
+        log = []
+        inner = cluster.on_bind
+
+        def spy(pod):
+            # Every bind must land on a node that is alive *right now*.
+            node = cluster.nodes.get(pod.node_id)
+            assert node is not None, f"{pod} bound to dead {pod.node_id}"
+            assert node.state.value != "terminated"
+            log.append((pod.uid, pod.incarnation, pod.node_id,
+                        pod.bound_time))
+            inner(pod)
+
+        cluster.on_bind = spy
+        result = sim.run()
+        return dataclasses.asdict(result), log
+
+    def test_failure_injection_parity(self):
+        ra, la = self._run_with_failures("array")
+        ro, lo = self._run_with_failures("object")
+        assert ra["failures_injected"] > 0, "injector never fired"
+        assert ra == ro
+        assert la == lo
+
+    def test_straggler_and_failure_parity(self):
+        ra, la = self._run_with_failures("array", straggler=True)
+        ro, lo = self._run_with_failures("object", straggler=True)
+        assert ra == ro
+        assert la == lo
+
+    def test_mid_cycle_node_loss_never_binds_to_dead_node(self):
+        """Direct stale-placer scenario: the cluster loses a node *between*
+        the wave snapshot and the bind commit (modelled by a rescheduler
+        that kills a node while handling a blocked pod).  The wave must be
+        rebuilt — later pods cannot bind to the dead node."""
+        from repro.core.autoscaler import VoidAutoscaler
+        from repro.core.orchestrator import Orchestrator
+        from repro.core.rescheduler import RescheduleOutcome, VoidRescheduler
+        from repro.core.scheduler import BestFitBinPackingScheduler
+
+        cluster = Cluster(use_arrays=True)
+        big = Node(allocatable=Resources(2000, gi(8.0)), node_id="a-big")
+        small = Node(allocatable=Resources(400, gi(1.0)), node_id="b-small")
+        big.mark_ready(0.0)
+        small.mark_ready(0.0)
+        cluster.add_node(big)
+        cluster.add_node(small)
+
+        killed = []
+
+        class NodeKillingRescheduler(VoidRescheduler):
+            def reschedule(self, cluster_, pod, now):
+                # Simulate a NODE_FAIL surfacing mid-cycle: the big node
+                # dies while the orchestrator handles the blocked pod.
+                if not killed:
+                    for p in list(big.pods.values()):
+                        cluster_.unbind(p, now, failed=True)
+                    cluster_.remove_node(big, now)
+                    killed.append(True)
+                return RescheduleOutcome.FAILED
+
+        class _NullProvider:
+            def request_node(self, *a, **k):
+                return None
+
+        orch = Orchestrator(cluster, BestFitBinPackingScheduler(),
+                            NodeKillingRescheduler(max_pod_age_s=0.0),
+                            VoidAutoscaler(_NullProvider()))
+
+        def mk(name, cpu, mem):
+            return Pod(spec=PodSpec(name, PodKind.SERVICE,
+                                    Resources(cpu, gi(mem))), submit_time=0.0)
+
+        # p1 fits only the big node, p2 is unplaceable (triggers the
+        # rescheduler, which kills the big node), p3 would fit the big
+        # node's *stale* free columns but must not land there.
+        orch.submit(mk("p1", 600, 2.0))
+        orch.submit(mk("p2", 5000, 32.0))
+        orch.submit(mk("p3", 600, 2.0))
+        orch.cycle(10.0)
+
+        assert killed, "rescheduler never fired"
+        assert big.node_id not in cluster.nodes
+        for pod in orch.pods:
+            assert pod.node_id != big.node_id, \
+                f"{pod} bound to the dead node"
+        cluster.check_invariants(deep=True)

@@ -1,0 +1,123 @@
+"""Timeline event model (simulation.py): two-stream ordering semantics,
+arrival batching, horizon capping, and the bounded completion-event map.
+
+The Timeline replaces the seed's one-entry-per-event heap; these tests pin
+the contract the batching relies on: arrivals win every timestamp tie
+(seed: lowest sequence numbers), a batch never crosses the next heap event
+or the horizon, and heap events keep push order at equal timestamps.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (Arrival, ExperimentSpec, PodKind, PodSpec,
+                        Resources, build_simulation, gi, reset_id_counters)
+from repro.core.simulation import (ARRIVAL, CYCLE, NODE_READY, POD_DONE,
+                                   SAMPLE, Timeline)
+
+_SPEC = PodSpec("tl", PodKind.BATCH, Resources(100, gi(0.3)), duration_s=60.0)
+
+
+def _arr(*times):
+    return [Arrival(t, _SPEC) for t in times]
+
+
+class TestTimelineOrdering:
+    def test_batches_split_at_heap_events(self):
+        tl = Timeline(_arr(1.0, 2.0, 3.0, 11.0, 12.0, 25.0))
+        tl.push(10.0, CYCLE)
+        tl.push(20.0, CYCLE)
+        got = []
+        while tl:
+            t, kind, payload = tl.pop()
+            got.append((t, kind,
+                        [a.time for a in payload] if kind == ARRIVAL else None))
+        assert got == [
+            (1.0, ARRIVAL, [1.0, 2.0, 3.0]),
+            (10.0, CYCLE, None),
+            (11.0, ARRIVAL, [11.0, 12.0]),
+            (20.0, CYCLE, None),
+            (25.0, ARRIVAL, [25.0]),
+        ]
+
+    def test_arrivals_win_timestamp_ties(self):
+        """Seed contract: arrivals were pushed first, so at equal times the
+        arrival fired before any other event — and an arrival exactly at a
+        heap event's time joins the batch *before* that event."""
+        tl = Timeline(_arr(5.0, 10.0))
+        tl.push(5.0, CYCLE)
+        t0, k0, p0 = tl.pop()
+        assert (t0, k0, [a.time for a in p0]) == (5.0, ARRIVAL, [5.0])
+        assert tl.pop()[:2] == (5.0, CYCLE)
+        assert tl.pop()[1] == ARRIVAL
+
+    def test_heap_events_keep_push_order_at_equal_times(self):
+        tl = Timeline([])
+        tl.push(7.0, SAMPLE)
+        tl.push(7.0, CYCLE)
+        tl.push(7.0, POD_DONE, "batch")
+        kinds = [tl.pop()[1] for _ in range(3)]
+        assert kinds == [SAMPLE, CYCLE, POD_DONE]
+        assert not tl
+
+    def test_heap_event_before_arrivals(self):
+        tl = Timeline(_arr(3.0))
+        tl.push(1.0, NODE_READY, "n")
+        assert tl.pop()[:2] == (1.0, NODE_READY)
+        assert tl.pop()[1] == ARRIVAL
+
+    def test_horizon_caps_batches(self):
+        """A batch must not swallow arrivals beyond the horizon: the first
+        over-horizon arrival surfaces alone so the simulation can stop on
+        it, exactly like popping it off the seed heap."""
+        tl = Timeline(_arr(1.0, 2.0, 50.0), horizon=10.0)
+        t, kind, payload = tl.pop()
+        assert [a.time for a in payload] == [1.0, 2.0]
+        t, kind, payload = tl.pop()
+        assert (t, kind) == (50.0, ARRIVAL)
+        assert [a.time for a in payload] == [50.0]
+        assert not tl
+
+    def test_pop_empty_raises(self):
+        with pytest.raises(IndexError):
+            Timeline([]).pop()
+
+
+class TestCompletionMapBounded:
+    """Satellite: _completion_scheduled entries must drop when their
+    POD_DONE event fires (live or stale), so the map is bounded by in-flight
+    pods instead of growing for the whole trace."""
+
+    def _spec(self, rescheduler="void"):
+        arrivals = [Arrival(float(i), _SPEC) for i in range(40)]
+        return ExperimentSpec(workload="tl", arrivals=arrivals,
+                              rescheduler=rescheduler, autoscaler="binding",
+                              initial_workers=2)
+
+    @pytest.mark.parametrize("engine", ["array", "object"])
+    def test_map_empty_after_completed_run(self, engine):
+        reset_id_counters()
+        spec = dataclasses.replace(self._spec(), engine=engine)
+        sim = build_simulation(spec)
+        result = sim.run()
+        assert result.completed
+        assert sim._completion_scheduled == {}
+
+    def test_map_bounded_during_run(self):
+        """At every cycle the map holds at most one entry per bound batch
+        pod incarnation — nothing accumulates across completions."""
+        reset_id_counters()
+        sim = build_simulation(self._spec(rescheduler="non-binding"))
+        orig = sim._on_cycle
+        high_water = []
+
+        def spy():
+            orig()
+            high_water.append(len(sim._completion_scheduled))
+            assert len(sim._completion_scheduled) <= len(sim.orch.pods)
+
+        sim._on_cycle = spy
+        result = sim.run()
+        assert result.completed
+        assert high_water, "no cycles observed"
+        assert sim._completion_scheduled == {}   # drained with the heap
