@@ -76,11 +76,13 @@ SCALES = {
     "large": dict(nodes=2_000, pods=50_000, object_cap=25),
 }
 WARMUP_CYCLES = 5
+FULL_RUN_REPEATS = 3
 
-# PR 2's committed end-to-end full-run wall time at the large scale
-# (BENCH_sched.json @ ba0bc49) — the reference the telemetry/timeline
-# refactor is measured against.
+# Committed end-to-end full-run wall times at the large scale: PR 2
+# (BENCH_sched.json @ ba0bc49, the telemetry/timeline reference) and PR 3
+# (BENCH_sched.json @ b863234, the PodStore/SoA-pod-state reference).
 PR2_FULL_RUN_WALL_S = {"large": 1.414}
+PR3_FULL_RUN_WALL_S = {"large": 0.63}
 
 
 def synth_arrivals(n_pods: int, n_nodes: int, seed: int = 0,
@@ -151,17 +153,29 @@ def bench_scale(scale: str, engines) -> dict:
               f"{1e3 * row['engines'][engine]['mean_cycle_ms']:.1f},"
               f"{row['engines'][engine]['cycle_throughput_pods_per_s']}")
     if "array" in engines and cap is not None:
-        full = run_one(scale, "array", max_cycles=None)
+        # Median of FULL_RUN_REPEATS: a single full-run sample wobbles by
+        # +/-15% with interpreter/allocator state (the preceding capped
+        # object run churns the heap), which is larger than the effects the
+        # full-run gate wants to resolve.
+        runs = sorted((run_one(scale, "array", max_cycles=None)
+                       for _ in range(FULL_RUN_REPEATS)),
+                      key=lambda r: r["wall_s"])
+        full = runs[len(runs) // 2]
         entry = {
             "wall_s": full["wall_s"], "completed": full["completed"],
+            "full_run_repeats": FULL_RUN_REPEATS,
             "pods_per_s_end_to_end": full.get("pods_per_s_end_to_end"),
         }
         prev = PR2_FULL_RUN_WALL_S.get(scale)
         if prev and full["wall_s"]:
             entry["pr2_wall_s"] = prev
             entry["speedup_vs_pr2"] = round(prev / full["wall_s"], 2)
+        pr3 = PR3_FULL_RUN_WALL_S.get(scale)
+        if pr3 and full["wall_s"]:
+            entry["pr3_wall_s"] = pr3
+            entry["speedup_vs_pr3"] = round(pr3 / full["wall_s"], 2)
             print(f"bench_sched.{scale}.full_run,"
-                  f"{1e6 * full['wall_s']:.0f},{entry['speedup_vs_pr2']}")
+                  f"{1e6 * full['wall_s']:.0f},{entry['speedup_vs_pr3']}")
         row["engines"]["array"]["full_run"] = entry
     if "array" in row["engines"] and "object" in row["engines"]:
         a = row["engines"]["array"]["cycle_throughput_pods_per_s"]

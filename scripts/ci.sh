@@ -9,8 +9,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== docs checks (links + snippet references) =="
 python scripts/docs_check.py
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== tier-1 tests (with wall-time budget) =="
+# The parity suite grows with every engine refactor; --durations surfaces
+# the slowest tests and the budget gate keeps total wall time bounded so
+# new property tests must pay for themselves.  Override with
+# TEST_BUDGET_S=<seconds>, or TEST_BUDGET_SKIP=1 on unusually slow runners.
+TEST_BUDGET_S="${TEST_BUDGET_S:-480}"
+test_t0=$SECONDS
+python -m pytest -x -q --durations=15
+test_elapsed=$(( SECONDS - test_t0 ))
+if [ "${TEST_BUDGET_SKIP:-0}" = "1" ]; then
+    echo "test-budget gate skipped (TEST_BUDGET_SKIP=1; took ${test_elapsed}s)"
+elif [ "$test_elapsed" -gt "$TEST_BUDGET_S" ]; then
+    echo "test-budget gate FAILED: suite took ${test_elapsed}s > ${TEST_BUDGET_S}s budget"
+    exit 1
+else
+    echo "test-budget gate OK: ${test_elapsed}s <= ${TEST_BUDGET_S}s"
+fi
 
 echo "== scheduler throughput smoke (small scale, both engines) =="
 python benchmarks/bench_sched_throughput.py --scale small \
@@ -48,3 +63,33 @@ else:
     print(f"bench-regression gate OK: {now} pods/s vs committed {base} "
           f"(floor {floor:.0f})")
 EOF
+
+echo "== full-run gate (large scale, array engine) =="
+# Cycle throughput alone misses regressions in the event path (arrival
+# ingest, completion commits, telemetry): gate the *end-to-end* 2k-node x
+# 50k-pod full-run wall time at -30% vs the committed BENCH_sched.json.
+# Skipped wholesale on unrelated hardware — unlike the small smoke, this
+# run exists only for the machine-dependent comparison.
+if [ "${BENCH_REGRESSION_SKIP:-0}" = "1" ]; then
+    echo "full-run gate skipped (BENCH_REGRESSION_SKIP=1)"
+else
+python benchmarks/bench_sched_throughput.py --scale large --engines array \
+    --out /tmp/BENCH_sched_full_smoke.json
+python - <<'EOF'
+import json
+import os
+tolerance = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.30"))
+row = json.load(open("/tmp/BENCH_sched_full_smoke.json"))
+full = row["scales"]["large"]["engines"]["array"]["full_run"]
+assert full["completed"], "large-scale full run failed to complete"
+base = json.load(open("BENCH_sched.json"))
+base_wall = base["scales"]["large"]["engines"]["array"]["full_run"]["wall_s"]
+# -30% throughput == wall time growing past base / (1 - tolerance).
+ceiling = base_wall / (1.0 - tolerance)
+assert full["wall_s"] <= ceiling, (
+    f"full-run regression: {full['wall_s']}s > {ceiling:.3f}s "
+    f"(committed baseline {base_wall}s + {tolerance:.0%})")
+print(f"full-run gate OK: {full['wall_s']}s vs committed {base_wall}s "
+      f"(ceiling {ceiling:.3f}s)")
+EOF
+fi

@@ -19,6 +19,14 @@ structure-of-arrays mirror (``repro.core.engine.ClusterArrays``) is kept in
 lockstep so schedulers can vectorize filter+select.  Both the object path and
 the array path read the *same* incrementally-maintained floats, so the two
 engines are bit-for-bit identical.
+
+On the array engine, pod state itself is SoA too
+(``repro.core.engine.PodStore``, attached as ``Cluster.pod_store``): the
+bind/unbind/complete commit points write the pod columns alongside any
+materialized ``Pod`` shells, ``bind_wave_store``/``complete_wave_store``
+commit whole waves as column writes with the identical accounting ops in
+the identical order, and ``Node.pods`` is a :class:`ResidentPods` mapping
+whose shell-less residents materialize lazily on first object access.
 """
 from __future__ import annotations
 
@@ -57,6 +65,81 @@ _STATE_CODES = {
 _node_seq = itertools.count()
 
 
+class ResidentPods(dict):
+    """``Node.pods``: a ``{uid: Pod}`` mapping whose values may be *lazy*.
+
+    On the array engine's shell-less fast path (``Cluster.bind_wave_store``)
+    a resident pod is recorded as ``uid -> None`` plus its SoA columns in the
+    :class:`repro.core.engine.PodStore`; the ``Pod`` shell is materialized
+    from the columns the first time any reader actually asks for the object
+    (``values()`` / ``items()`` / ``__getitem__`` / ``get``).  Keys, length
+    and truthiness never materialize — ``len(node.pods)`` and membership
+    checks stay O(1) — so counters, the mirror's ``pod_count`` sync and the
+    ``terminate`` guard all see shell-less residents.
+
+    On the seed object engine no lazy entry is ever inserted and every
+    operation degrades to the plain dict it subclasses.
+    """
+
+    __slots__ = ("_store", "_lazy")
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._store = None
+        # Conservative "may contain uid -> None entries" flag: set by the
+        # fast bind path (once per touched node per wave, not per pod — the
+        # per-pod insert stays the inherited C setitem), cleared when a full
+        # materialization proves the mapping dense again.  Deletions don't
+        # maintain it, so the flag may stay True after the last lazy entry
+        # is gone; that only costs one no-op scan on the next values() call.
+        self._lazy = False
+
+    # Lazy insertion happens in Cluster.bind_wave_store: a plain
+    # ``pods[uid] = None`` per pod (the inherited C setitem) plus one
+    # ``_store``/``_lazy`` write per touched node after the wave.
+
+    # -- lazy materialization --------------------------------------------------
+    def _materialize(self, uid: int):
+        pod = self._store.pod_by_uid(uid)
+        dict.__setitem__(self, uid, pod)
+        return pod
+
+    def __getitem__(self, uid: int):
+        pod = dict.__getitem__(self, uid)
+        if pod is None:
+            pod = self._materialize(uid)
+        return pod
+
+    def get(self, uid, default=None):
+        pod = dict.get(self, uid, default)
+        if pod is None and dict.__contains__(self, uid):
+            pod = self._materialize(uid)
+        return pod
+
+    def values(self):
+        if self._lazy:
+            self._materialize_all()
+        return dict.values(self)
+
+    def items(self):
+        if self._lazy:
+            self._materialize_all()
+        return dict.items(self)
+
+    def _materialize_all(self) -> None:
+        for uid, pod in list(dict.items(self)):
+            if pod is None:
+                self._materialize(uid)
+        self._lazy = False
+
+    # -- store-aware iteration (invariant checks avoid materializing) ---------
+    def lazy_uids(self):
+        return [uid for uid, pod in dict.items(self) if pod is None]
+
+    def materialized_values(self):
+        return [pod for pod in dict.values(self) if pod is not None]
+
+
 @dataclasses.dataclass
 class Node:
     """One worker (paper: m2.small VM; fleet: one TPU v5e host)."""
@@ -78,6 +161,9 @@ class Node:
     def __post_init__(self):
         if not self.node_id:
             self.node_id = f"node-{next(_node_seq)}"
+        # Resident-pod mapping with lazy shell materialization (plain-dict
+        # behaviour on the seed engine; see ResidentPods).
+        self.pods = ResidentPods(self.pods)
         # Incremental accounting (seeded from any pre-populated pods dict).
         self._used_cpu_m: int = 0
         self._used_mem_mb: float = 0.0
@@ -112,6 +198,8 @@ class Node:
         return self.state == NodeState.TAINTED
 
     def moveable_pods(self) -> List[Pod]:
+        if self._moveable_count == 0:
+            return []   # count-based early exit: never materializes shells
         return [p for p in self.pods.values() if p.moveable]
 
     def has_only_moveable(self) -> bool:
@@ -208,6 +296,13 @@ class Cluster:
         self.arrays: Optional[_engine.ClusterArrays] = (
             _engine.ClusterArrays(wave_select=wave_select)
             if use_arrays else None)
+        # SoA pod columns (set by the orchestrator on the array engine); the
+        # bind/unbind/complete commit points keep it in lockstep with any
+        # materialized Pod shells.
+        self.pod_store = None
+        # slot -> live Node (None once removed): O(1) node lookup for the
+        # store fast paths, in lockstep with ClusterArrays slots.
+        self._slot_nodes: List[Optional[Node]] = []
         self.on_bind: Optional[Callable[[Pod], None]] = None
         self.on_unbind: Optional[Callable[[Pod], None]] = None
         self.on_complete: Optional[Callable[[Pod], None]] = None
@@ -218,6 +313,7 @@ class Cluster:
         if self.arrays is not None:
             node._arrays = self.arrays
             node._slot = self.arrays.add(node)
+            self._slot_nodes.append(node)
         return node
 
     def remove_node(self, node: Node, now: float) -> None:
@@ -225,6 +321,7 @@ class Cluster:
         self.terminated.append(node)
         del self.nodes[node.node_id]
         if node._arrays is not None:
+            self._slot_nodes[node._slot] = None
             node._arrays.remove(node._slot)
             node._arrays = None
 
@@ -260,6 +357,8 @@ class Cluster:
              enforce: bool = True) -> None:
         node.add_pod(pod, enforce=enforce)
         pod.bind(node.node_id, now)
+        if self.pod_store is not None:
+            self.pod_store.sync_bind(pod, node._slot)
         if self.on_bind is not None:
             self.on_bind(pod)
 
@@ -280,14 +379,82 @@ class Cluster:
         """
         touched: Dict[str, Node] = {}
         on_bind = self.on_bind
+        store = self.pod_store
         for pod, node in bindings:
             node.pods[pod.uid] = pod
             node._account_add(pod)
             touched[node.node_id] = node
             pod.bind(node.node_id, now)
+            if store is not None:
+                store.sync_bind(pod, node._slot)
             if on_bind is not None:
                 on_bind(pod)
         for node in touched.values():
+            node._notify_usage()
+
+    def bind_wave_store(self, bindings, now: float) -> None:
+        """Commit one wave of ``(row, slot)`` binds straight into the SoA pod
+        columns — the shell-less fast path of ``Orchestrator._cycle_wave``.
+
+        Semantically :meth:`bind_wave` with ``Pod`` objects elided: node
+        accounting applies the identical ``+=`` in the identical order, the
+        pod's bind record lands in the store columns instead of object
+        attributes, and residency is a lazy ``uid -> None`` entry that
+        materializes into a shell only if something later asks for the
+        object.  Rows that already carry a shell (a re-pended evictee placed
+        by the wave) go through the full object transition so the shell and
+        columns stay in lockstep.
+
+        The caller guarantees no external ``on_bind`` observer is attached
+        (an observer is an API boundary: ``Orchestrator._cycle_wave``
+        detects one and falls back to the materializing :meth:`bind_wave`);
+        orchestrator bookkeeping happens row-wise on the caller's side.
+        """
+        store = self.pod_store
+        shells = store.shells
+        slot_nodes = self._slot_nodes
+        uid_col = store.uid
+        cpu_col = store.cpu_m
+        mem_col = store.mem_mb
+        flag_col = store.flags
+        phase_col = store.phase
+        slot_col = store.node_slot
+        bt_col = store.bound_time
+        touched: Dict[int, Node] = {}
+        F_BATCH = _engine.POD_F_BATCH
+        F_MOVE = _engine.POD_F_MOVEABLE
+        for row, slot in bindings:
+            node = slot_nodes[slot]
+            uid = uid_col[row]
+            pod = shells.get(row)
+            if pod is not None:
+                node.pods[uid] = pod
+                node._account_add(pod)
+                pod.bind(node.node_id, now)
+                phase_col[row] = _engine.POD_BOUND
+                slot_col[row] = slot
+                bt_col[row] = pod.bound_time
+            else:
+                # Lazy residency: uid -> None via the inherited C dict
+                # setitem; the touched loop below arms the node's
+                # ResidentPods (_store/_lazy) once per node, not per pod.
+                node.pods[uid] = None
+                # Same += order as Node._account_add, on the same scalars.
+                node._used_cpu_m += cpu_col[row]
+                node._used_mem_mb += mem_col[row]
+                f = flag_col[row]
+                if f & F_MOVE:
+                    node._moveable_count += 1
+                if f & F_BATCH:
+                    node._batch_count += 1
+                phase_col[row] = _engine.POD_BOUND
+                slot_col[row] = slot
+                bt_col[row] = now
+            touched[slot] = node
+        for node in touched.values():
+            pods = node.pods
+            pods._store = store
+            pods._lazy = True
             node._notify_usage()
 
     def unbind(self, pod: Pod, now: float, *, failed: bool = False) -> None:
@@ -295,6 +462,8 @@ class Cluster:
         if node is not None:
             node.remove_pod(pod)
         pod.evict(now, failed=failed)
+        if self.pod_store is not None:
+            self.pod_store.sync_unbind(pod)
         if self.on_unbind is not None:
             self.on_unbind(pod)
 
@@ -304,6 +473,8 @@ class Cluster:
         if node is not None:
             node.remove_pod(pod)
         pod.complete(now)
+        if self.pod_store is not None:
+            self.pod_store.sync_complete(pod)
         if self.on_complete is not None:
             self.on_complete(pod)
 
@@ -319,6 +490,7 @@ class Cluster:
         touched: Dict[str, Node] = {}
         nodes = self.nodes
         on_complete = self.on_complete
+        store = self.pod_store
         for pod in pods:
             node = nodes.get(pod.node_id)
             if node is not None:
@@ -326,6 +498,74 @@ class Cluster:
                 node._account_remove(pod)
                 touched[node.node_id] = node
             pod.complete(now)
+            if store is not None:
+                store.sync_complete(pod)
+            if on_complete is not None:
+                on_complete(pod)
+        for node in touched.values():
+            node._notify_usage()
+
+    def complete_wave_store(self, entries, now: float, on_row=None) -> None:
+        """Commit one timestamp-bucket of completions on the store path.
+
+        ``entries`` preserves bind order and may mix shell-less **rows**
+        (ints) with materialized **Pod** objects (a shelled pod bound in the
+        same bucket as shell-less ones): each entry applies the seed's
+        per-completion effects — node accounting decrements in entry order,
+        ``Pod.complete`` semantics (phase SUCCEEDED, finish time, node
+        linkage retained) — with rows writing columns instead of attributes.
+        ``on_row`` is the orchestrator's row-level ``on_complete``
+        equivalent; ``Pod`` entries still go through ``self.on_complete``.
+        The mirror syncs once per touched node, like :meth:`complete_wave`.
+        """
+        store = self.pod_store
+        slot_nodes = self._slot_nodes
+        uid_col = store.uid
+        cpu_col = store.cpu_m
+        mem_col = store.mem_mb
+        flag_col = store.flags
+        phase_col = store.phase
+        ft_col = store.finish_time
+        nodes = self.nodes
+        on_complete = self.on_complete
+        touched: Dict[int, Node] = {}   # id(node) -> node
+        F_BATCH = _engine.POD_F_BATCH
+        F_MOVE = _engine.POD_F_MOVEABLE
+        shells = store.shells
+        for entry in entries:
+            if type(entry) is int:
+                row = entry
+                pod = shells.get(row)
+                if pod is None:
+                    uid = uid_col[row]
+                    node = slot_nodes[store.node_slot[row]]
+                    if node is not None:
+                        del node.pods[uid]
+                        # Same -= order as Node._account_remove.
+                        node._used_cpu_m -= cpu_col[row]
+                        node._used_mem_mb -= mem_col[row]
+                        f = flag_col[row]
+                        if f & F_MOVE:
+                            node._moveable_count -= 1
+                        if f & F_BATCH:
+                            node._batch_count -= 1
+                        touched[id(node)] = node
+                    phase_col[row] = _engine.POD_SUCCEEDED
+                    ft_col[row] = now
+                    if on_row is not None:
+                        on_row(row)
+                    continue
+                # A shell materialized since the bind: fall through to the
+                # object transition so shell and columns stay in lockstep.
+            else:
+                pod = entry
+            node = nodes.get(pod.node_id)
+            if node is not None:
+                del node.pods[pod.uid]
+                node._account_remove(pod)
+                touched[id(node)] = node
+            pod.complete(now)
+            store.sync_complete(pod)
             if on_complete is not None:
                 on_complete(pod)
         for node in touched.values():
@@ -388,17 +628,31 @@ class Cluster:
                 raise AssertionError(
                     f"capacity violated on {arr.node_ids[slot]}")
             return
+        store = self.pod_store
         for n in self.nodes.values():
             if n.oversub:
                 continue   # estimator-driven oversubscription is intentional
             used = n.used
             assert used.cpu_m <= n.allocatable.cpu_m, n
             assert used.mem_mb <= n.allocatable.mem_mb + 1e-6, n
-            for p in n.pods.values():
+            # Shell-less residents are checked against their columns rather
+            # than materialized — a deep check must not defeat the lazy-shell
+            # economics of the store fast path.
+            lazy = n.pods.lazy_uids() if store is not None else []
+            for p in n.pods.materialized_values():
                 assert p.node_id == n.node_id, (p, n)
+            for uid in lazy:
+                row = store.index[uid]
+                assert store.phase[row] == _engine.POD_BOUND, (uid, n)
+                assert store.node_slot[row] == n._slot, (uid, n)
             if deep:
                 # incremental accounting matches a fresh re-sum
-                resum = sum_resources(p.requests for p in n.pods.values())
+                resum = sum_resources(
+                    p.requests for p in n.pods.materialized_values())
+                for uid in lazy:
+                    row = store.index[uid]
+                    resum = resum + Resources(store.cpu_m[row],
+                                              store.mem_mb[row])
                 assert used.cpu_m == resum.cpu_m, n
                 assert abs(used.mem_mb - resum.mem_mb) < 1e-6, n
         if deep and self.arrays is not None:

@@ -34,7 +34,7 @@ So pod *k* of a wave observes bit-identical frees to what it would have seen
 had pods ``1..k-1`` been committed individually — same pods land on the same
 nodes, with the same lowest-node_id tie-breaks.
 
-The mirror also owns two further array-native subsystems:
+The mirror also anchors three further array-native subsystems:
 
 * **Table-5 sampling aggregates** — per-node utilization contribution
   columns with dirty tracking, so the 20 s metrics sampler costs O(dirty
@@ -44,7 +44,14 @@ The mirror also owns two further array-native subsystems:
   first-extremum index over the wave path's cached score buffers, selectable
   against the flat argmin kernel via ``REPRO_WAVE_SELECT`` /
   ``ExperimentSpec(wave_select=...)`` (identical decisions, different
-  constants; "auto" switches on cluster size).
+  constants; "auto" switches on cluster size);
+* **pod state** (:class:`PodStore`) — uid-indexed SoA columns that are the
+  source of truth for pod lifecycle on the array engine; ``Pod`` objects are
+  lazily-materialized shells handed out only at API boundaries (callbacks,
+  reschedulers/autoscalers, metrics, direct ``pods`` access, the object
+  engine).  Arrival batches ingest in bulk, binds/completions commit as
+  column writes, and the best-fit wave loop amortizes its extremum queries
+  over runs of same-size pods (``Scheduler.select_wave_store``).
 
 Slot discipline: slots are append-only (never reused), so ascending slot
 order == ``Cluster.nodes`` insertion order.  This matters: Alg. 6 scale-in
@@ -59,6 +66,7 @@ benchmarking.
 from __future__ import annotations
 
 import bisect
+import itertools
 import math
 import os
 from typing import List, Optional
@@ -71,6 +79,20 @@ STATE_PROVISIONING = 0
 STATE_READY = 1
 STATE_TAINTED = 2
 STATE_TERMINATED = 3
+
+# Pod-phase codes (PodStore.phase column).  Only the three *observable*
+# phases exist at rest: ``Pod.evict`` passes through EVICTED/FAILED and lands
+# back on PENDING within one call, so the column never needs those codes.
+POD_PENDING = 0
+POD_BOUND = 1
+POD_SUCCEEDED = 2
+
+# Pod-kind flag bits (PodStore.flags column, one byte per pod, derived from
+# the immutable spec at ingest).
+POD_F_BATCH = 1
+POD_F_SERVICE = 2
+POD_F_MOVEABLE = 4
+POD_F_CHECKPOINTABLE = 8
 
 # Below this many active nodes the flat C-speed argmin over the cached score
 # buffer beats the Python-level O(log n) tree descent; "auto" wave selection
@@ -92,6 +114,16 @@ def wave_select_default() -> str:
     """Wave selection kernel: REPRO_WAVE_SELECT=argmin|segtree|auto (default
     auto — segment tree above SEGTREE_AUTO_MIN_NODES active nodes)."""
     return os.environ.get("REPRO_WAVE_SELECT", "auto").lower()
+
+
+def wave_runlen_enabled() -> bool:
+    """Run-length best-fit fast path: REPRO_WAVE_RUNLEN=0 disables it.
+
+    Decision-identical to querying the extremum per pod (see
+    ``Scheduler.select_wave_store``); the switch exists so parity tests can
+    compare the two paths and so a regression can be bisected in the field.
+    """
+    return os.environ.get("REPRO_WAVE_RUNLEN", "1") != "0"
 
 
 class ClusterArrays:
@@ -495,6 +527,13 @@ class WavePlacer:
         # for the per-bind refresh loop (no dict-view overhead per pod).
         self.cache: dict = {}
         self.cache_list: list = []
+        # Request keys proven infeasible against this placer.  Sound as a
+        # *latch* because working frees only decrease over a placer's
+        # lifetime (binds consume capacity; anything that frees capacity
+        # bumps the mirror version and forces a placer rebuild), so a size
+        # that once found no READY or TAINTED node never fits again — a
+        # saturated cycle's backlog skips the extremum query entirely.
+        self.blocked_keys: set = set()
 
     def in_sync(self) -> bool:
         """True while no mirror mutation bypassed this placer."""
@@ -510,3 +549,299 @@ class WavePlacer:
         self.used_mem[r] += req.mem_mb
         self.free_cpu[r] = self.alloc_cpu[r] - self.used_cpu[r]
         self.free_mem[r] = self.alloc_mem[r] - self.used_mem[r]
+
+
+# Phase-code <-> PodPhase mapping for shell materialization (built lazily so
+# this module keeps importing before repro.core.pods on cold starts).
+_PHASE_OBJ = None
+
+
+def _phase_objects():
+    global _PHASE_OBJ
+    if _PHASE_OBJ is None:
+        from repro.core.pods import PodPhase
+        _PHASE_OBJ = {POD_PENDING: PodPhase.PENDING,
+                      POD_BOUND: PodPhase.BOUND,
+                      POD_SUCCEEDED: PodPhase.SUCCEEDED}
+    return _PHASE_OBJ
+
+
+class PodStore:
+    """Uid-indexed SoA columns for pod state; ``Pod`` objects become shells.
+
+    On the array engine the store — not a ``Pod`` instance — is the source
+    of truth for every pod the orchestrator ingests:
+
+    * ``Orchestrator.submit_wave`` bulk-ingests each presorted ARRIVAL batch
+      straight into the columns (:meth:`ingest`) — no ``Pod`` construction,
+      no per-pod heap push;
+    * the wave scheduler reads request sizes and phases from the columns
+      (``Scheduler.select_wave_store``);
+    * bind/complete effects commit as column writes
+      (``Cluster.bind_wave_store`` / ``Cluster.complete_wave_store``) when no
+      external observer needs the objects.
+
+    A ``Pod`` *shell* is materialized on demand (:meth:`pod_at`) only at API
+    boundaries: registered callbacks, reschedulers/autoscalers handling a
+    blocked pod, evictions, metrics/`_result`, direct ``orch.pods`` /
+    ``node.pods`` access, and the seed object engine (which bypasses the
+    store entirely).  Materialization reads the columns verbatim, so a shell
+    is attribute-for-attribute identical to the object the seed path would
+    have produced (property-tested).  Once a shell exists it becomes the
+    mutable face of the pod and every subsequent transition — object-path or
+    column-path — keeps the two in lockstep via the ``sync_*`` hooks, the
+    same assignment-copy discipline :class:`ClusterArrays` uses for nodes.
+
+    Storage: plain Python lists / bytearrays, not NumPy arrays — every hot
+    access is scalar-granular (one pod at a time), where list indexing beats
+    NumPy boxing; bulk ingest uses C-speed ``list.extend``.  Rows are
+    append-only and allocated in uid order (uids come from the same global
+    counter ``Pod.__init__`` uses), so row order == uid order == submission
+    order.
+    """
+
+    def __init__(self, arr: ClusterArrays):
+        self.arr = arr                     # node_id lookup for shells
+        self.n_rows = 0
+        self.index = {}                    # uid -> row
+        # -- columns (one entry per row) --------------------------------------
+        self.uid = []                      # int
+        self.spec_id = []                  # int -> _spec_by_id
+        self.cpu_m = []                    # int   (spec.requests.cpu_m)
+        self.mem_mb = []                   # float (spec.requests.mem_mb)
+        self.duration_s = []               # float (spec.duration_s)
+        self.submit_time = []              # float
+        self.pending_since = []            # float (current pending interval)
+        self.phase = bytearray()           # POD_PENDING/BOUND/SUCCEEDED
+        self.node_slot = []                # int, -1 == unbound
+        self.bound_time = []               # float | None
+        self.finish_time = []              # float | None
+        self.incarnation = []              # int
+        self.flags = bytearray()           # POD_F_* bits, from the spec
+        # -- interned spec table ----------------------------------------------
+        # Keyed by id(spec), not value: shells must carry the *identical*
+        # spec object the seed path would have stored (``pod.spec is
+        # arrival.spec``), the table keeps every interned spec alive so ids
+        # stay unique, and identity hashing skips the frozen-dataclass
+        # value hash on the ingest hot path.
+        self._spec_by_id = []
+        self._spec_ids = {}                # id(PodSpec) -> spec id
+        self._spec_flags = []              # spec id -> POD_F_* byte
+        self._spec_cpu = []                # spec id -> requests.cpu_m
+        self._spec_mem = []                # spec id -> requests.mem_mb
+        self._spec_dur = []                # spec id -> duration_s
+        # -- materialized shells ----------------------------------------------
+        self.shells = {}                   # row -> Pod
+
+    # -- spec interning --------------------------------------------------------
+    def _intern_spec(self, spec) -> int:
+        sid = self._spec_ids.get(id(spec))
+        if sid is None:
+            from repro.core.pods import PodKind
+            sid = len(self._spec_by_id)
+            self._spec_ids[id(spec)] = sid
+            self._spec_by_id.append(spec)
+            f = 0
+            if spec.kind == PodKind.BATCH:
+                f |= POD_F_BATCH
+            elif spec.kind == PodKind.SERVICE:
+                f |= POD_F_SERVICE
+            if spec.moveable:
+                f |= POD_F_MOVEABLE
+            if spec.checkpointable:
+                f |= POD_F_CHECKPOINTABLE
+            self._spec_flags.append(f)
+            self._spec_cpu.append(spec.requests.cpu_m)
+            self._spec_mem.append(spec.requests.mem_mb)
+            self._spec_dur.append(spec.duration_s)
+        return sid
+
+    # -- ingestion -------------------------------------------------------------
+    def ingest(self, arrivals):
+        """Bulk-ingest one presorted ARRIVAL batch; returns ``(rows, uids)``.
+
+        Semantically identical to constructing one PENDING ``Pod`` per
+        arrival in order — uids are drawn from the same global counter, and
+        ``submit_time == pending_since == arrival.time`` — but pod state
+        lands directly in the columns: the only per-pod Python work is spec
+        interning (a dict hit) plus C-speed column extends.
+        """
+        from repro.core import pods as _pods_mod
+        n = len(arrivals)
+        first = self.n_rows
+        ids = self._spec_ids
+        intern = self._intern_spec
+        for a in arrivals:               # register any first-seen specs
+            if id(a.spec) not in ids:
+                intern(a.spec)
+        sids = [ids[id(a.spec)] for a in arrivals]
+        times = [a.time for a in arrivals]
+        uids = list(itertools.islice(_pods_mod._uid, n))
+        spec_cpu, spec_mem, spec_dur = (self._spec_cpu, self._spec_mem,
+                                        self._spec_dur)
+        self.uid.extend(uids)
+        self.spec_id.extend(sids)
+        self.cpu_m.extend([spec_cpu[s] for s in sids])
+        self.mem_mb.extend([spec_mem[s] for s in sids])
+        self.duration_s.extend([spec_dur[s] for s in sids])
+        self.submit_time.extend(times)
+        self.pending_since.extend(times)
+        self.phase.extend(bytes(n))              # POD_PENDING == 0
+        self.node_slot.extend([-1] * n)
+        self.bound_time.extend([None] * n)
+        self.finish_time.extend([None] * n)
+        self.incarnation.extend([0] * n)
+        spec_flags = self._spec_flags
+        self.flags.extend(bytes(spec_flags[s] for s in sids))
+        self.n_rows = first + n
+        index = self.index
+        for row, u in enumerate(uids, first):
+            index[u] = row
+        return range(first, first + n), uids
+
+    def adopt(self, pod) -> int:
+        """Register an externally-constructed (PENDING) ``Pod`` as a row.
+
+        The object-path entry point (``Orchestrator.submit``, live-cluster
+        submissions, tests): the pod itself stays the mutable face, the
+        columns mirror it from day one."""
+        row = self.index.get(pod.uid)
+        if row is not None:
+            return row
+        row = self.n_rows
+        self.n_rows = row + 1
+        self.index[pod.uid] = row
+        sid = self._intern_spec(pod.spec)
+        self.uid.append(pod.uid)
+        self.spec_id.append(sid)
+        self.cpu_m.append(pod.spec.requests.cpu_m)
+        self.mem_mb.append(pod.spec.requests.mem_mb)
+        self.duration_s.append(pod.spec.duration_s)
+        self.submit_time.append(pod.submit_time)
+        self.pending_since.append(pod.pending_since)
+        from repro.core.pods import PodPhase
+        code = {PodPhase.PENDING: POD_PENDING, PodPhase.BOUND: POD_BOUND,
+                PodPhase.SUCCEEDED: POD_SUCCEEDED}[pod.phase]
+        self.phase.append(code)
+        self.node_slot.append(-1)
+        self.bound_time.append(pod.bound_time)
+        self.finish_time.append(pod.finish_time)
+        self.incarnation.append(pod.incarnation)
+        self.flags.append(self._spec_flags[sid])
+        self.shells[row] = pod
+        return row
+
+    # -- shells ----------------------------------------------------------------
+    def pod_at(self, row: int):
+        """The ``Pod`` for ``row``, materializing (and caching) a shell from
+        the columns on first access."""
+        pod = self.shells.get(row)
+        if pod is None:
+            from repro.core.pods import Pod
+            code = self.phase[row]
+            slot = self.node_slot[row]
+            bt = self.bound_time[row]
+            pod = Pod._restore(
+                spec=self._spec_by_id[self.spec_id[row]],
+                submit_time=self.submit_time[row],
+                uid=self.uid[row],
+                phase=_phase_objects()[code],
+                node_id=self.arr.node_ids[slot] if slot >= 0 else None,
+                pending_since=self.pending_since[row],
+                bound_time=bt,
+                finish_time=self.finish_time[row],
+                incarnation=self.incarnation[row],
+                # A store-resident pod is never evicted without materializing
+                # first, so it has at most the one interval its bind closed:
+                # the same `now - pending_since` float op Pod.bind applies.
+                pending_intervals=([bt - self.pending_since[row]]
+                                   if bt is not None else []),
+            )
+            self.shells[row] = pod
+        return pod
+
+    def pod_by_uid(self, uid: int):
+        return self.pod_at(self.index[uid])
+
+    # -- object-path writeback (assignment-copy => bit-identical) --------------
+    def sync_bind(self, pod, slot: int) -> None:
+        row = self.index.get(pod.uid)
+        if row is None:
+            return
+        self.phase[row] = POD_BOUND
+        self.node_slot[row] = slot
+        self.bound_time[row] = pod.bound_time
+
+    def sync_unbind(self, pod) -> None:
+        row = self.index.get(pod.uid)
+        if row is None:
+            return
+        self.phase[row] = POD_PENDING
+        self.node_slot[row] = -1
+        self.bound_time[row] = None
+        self.pending_since[row] = pod.pending_since
+        self.incarnation[row] = pod.incarnation
+
+    def sync_complete(self, pod) -> None:
+        row = self.index.get(pod.uid)
+        if row is None:
+            return
+        self.phase[row] = POD_SUCCEEDED
+        self.finish_time[row] = pod.finish_time
+
+    # Column-path bind/complete commits live in Cluster.bind_wave_store /
+    # Cluster.complete_wave_store, which interleave the column writes with
+    # node accounting per entry; Pod semantics are preserved there (complete
+    # retains node_slot/bound_time exactly like the object keeps node_id).
+
+    # -- end-of-run aggregates -------------------------------------------------
+    def pending_intervals_all(self):
+        """Every pod's pending intervals (the multiset `_result` feeds to the
+        metrics collector): shells contribute their recorded lists, shell-less
+        rows derive their single interval from the columns."""
+        out = []
+        shells = self.shells
+        ps = self.pending_since
+        bt = self.bound_time
+        for row in range(self.n_rows):
+            pod = shells.get(row)
+            if pod is not None:
+                out.extend(pod.pending_intervals)
+            else:
+                b = bt[row]
+                if b is not None:
+                    out.append(b - ps[row])
+        return out
+
+    def total_incarnations(self) -> int:
+        """Σ incarnation — the seed's eviction count (columns are synced on
+        every eviction, so no shell walk is needed)."""
+        return sum(self.incarnation)
+
+    # -- consistency (property tests) ------------------------------------------
+    def verify_against(self, cluster) -> None:
+        """Assert columns, shells and node residency agree exactly."""
+        from repro.core.pods import PodPhase
+        rev = {PodPhase.PENDING: POD_PENDING, PodPhase.BOUND: POD_BOUND,
+               PodPhase.SUCCEEDED: POD_SUCCEEDED}
+        assert len(self.uid) == self.n_rows == len(self.index)
+        for row in range(self.n_rows):
+            uid = self.uid[row]
+            assert self.index[uid] == row
+            pod = self.shells.get(row)
+            if pod is not None:
+                assert pod.uid == uid
+                assert rev[pod.phase] == self.phase[row], pod
+                assert self.pending_since[row] == pod.pending_since, pod
+                assert self.bound_time[row] == pod.bound_time, pod
+                assert self.finish_time[row] == pod.finish_time, pod
+                assert self.incarnation[row] == pod.incarnation, pod
+                if pod.phase == PodPhase.BOUND:
+                    slot = self.node_slot[row]
+                    assert slot >= 0
+                    assert self.arr.node_ids[slot] == pod.node_id, pod
+            if self.phase[row] == POD_BOUND:
+                slot = self.node_slot[row]
+                node = cluster.nodes.get(self.arr.node_ids[slot])
+                assert node is not None, f"bound row {row} on dead node"
+                assert uid in node.pods, f"bound row {row} missing from node"

@@ -23,25 +23,35 @@ Semantics matched to the paper:
 
 Two cycle engines implement the "for each pending task t: schedule t" body:
 
-* **wave placement** (array engine, default) — the whole pending snapshot is
-  handed to ``Scheduler.select_wave``, which places it against a
-  ``WavePlacer``'s working arrays; the placed prefix is committed to the
-  object model once per wave (``Cluster.bind_wave``) instead of once per
-  pod.  When a pod blocks, the wave flushes, the paper's
-  reschedule/scale-out path runs for that pod, and the wave resumes after
-  it — reusing the same placer when the mirror's version counter shows the
-  blocked-pod handling didn't mutate the cluster.  Decisions are
-  bit-identical to the per-pod loop (``tests/test_engine_parity.py``).
+* **wave placement** (array engine, default) — pod state lives in the SoA
+  ``engine.PodStore`` (uid-indexed columns; ``Pod`` objects are shells
+  materialized on demand at API boundaries) and the whole pending snapshot
+  of store *rows* is handed to ``Scheduler.select_wave_store``, which
+  places it against a ``WavePlacer``'s working arrays; the placed prefix
+  commits once per wave — as pure column writes
+  (``Cluster.bind_wave_store``) when no external ``on_bind`` observer is
+  attached, through the object-path ``Cluster.bind_wave`` (shells
+  materialize) otherwise.  When a pod blocks, the wave flushes, the paper's
+  reschedule/scale-out path runs for that pod (materialized — policies are
+  an object API), and the wave resumes after it — reusing the same placer
+  when the mirror's version counter shows the blocked-pod handling didn't
+  mutate the cluster.  Decisions are bit-identical to the per-pod loop
+  (``tests/test_engine_parity.py``).
 * **per-pod loop** (seed object engine, ``REPRO_SCHED_ENGINE=object``) —
-  one ``Scheduler.schedule`` call per pending pod, kept verbatim as the
-  parity reference.
+  one ``Scheduler.schedule`` call per pending pod over real ``Pod``
+  objects, kept verbatim as the parity reference.
 
 Queueing is event-driven, not scan-driven: the orchestrator registers
 bind/unbind/complete callbacks on the cluster and maintains the pending set
-as a min-heap keyed on ``(pending_since, uid)`` with lazy invalidation, so a
-cycle's FIFO snapshot costs O(k) pops for the k pending pods (plus dropping
-any entries staled by binds since) instead of filtering and re-sorting a
-buffer of every pod ever submitted.
+keyed on ``(pending_since, uid)`` with lazy invalidation, so a cycle's FIFO
+snapshot costs O(k) for the k pending pods instead of filtering and
+re-sorting a buffer of every pod ever submitted.  On the store path the
+arrival stream never touches a heap at all: ``submit_wave`` bulk-ingests
+each presorted ARRIVAL batch into the columns and *appends* its queue
+entries (batch times are nondecreasing and uids monotone, so the whole
+stream is sorted by construction); only eviction re-pends and object-path
+submissions go through a small heap, and ``pending_rows`` merges the three
+sorted streams in one pass.
 """
 from __future__ import annotations
 
@@ -51,10 +61,11 @@ import itertools
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import engine as _engine
-from repro.core.autoscaler import Autoscaler
+from repro.core.autoscaler import Autoscaler, VoidAutoscaler
 from repro.core.cluster import Cluster
 from repro.core.pods import Pod, PodPhase
-from repro.core.rescheduler import Rescheduler, RescheduleOutcome
+from repro.core.rescheduler import (Rescheduler, RescheduleOutcome,
+                                    VoidRescheduler)
 from repro.core.scheduler import Scheduler
 
 
@@ -66,6 +77,38 @@ class CycleStats:
     scale_out_requests: int = 0
     scale_ins: int = 0
     all_placed: bool = True
+
+
+class _StorePodSeq:
+    """``Orchestrator.pods`` on the store path: a sequence view over every
+    ingested row, in submission (uid) order.
+
+    ``len``/truthiness are O(1) column reads — the simulator's exit condition
+    polls them every cycle — while indexing/iteration materialize ``Pod``
+    shells on demand (an API boundary: external readers get full-fidelity
+    objects, the hot path never touches this)."""
+
+    __slots__ = ("_store",)
+
+    def __init__(self, store):
+        self._store = store
+
+    def __len__(self) -> int:
+        return self._store.n_rows
+
+    def __bool__(self) -> bool:
+        return self._store.n_rows > 0
+
+    def __getitem__(self, i):
+        store = self._store
+        if isinstance(i, slice):
+            return [store.pod_at(r) for r in range(store.n_rows)[i]]
+        return store.pod_at(range(store.n_rows)[i])
+
+    def __iter__(self):
+        store = self._store
+        for row in range(store.n_rows):
+            yield store.pod_at(row)
 
 
 class Orchestrator:
@@ -85,7 +128,16 @@ class Orchestrator:
         self.scheduler = scheduler
         self.rescheduler = rescheduler
         self.autoscaler = autoscaler
-        self.pods: List[Pod] = []          # every pod ever submitted
+        # Pod state: on the array engine the SoA PodStore is the source of
+        # truth and `pods` is a lazy sequence view (shells on demand); on the
+        # seed object engine `pods` is the plain list of every Pod submitted.
+        if cluster.arrays is not None:
+            self.store = _engine.PodStore(cluster.arrays)
+            cluster.pod_store = self.store
+            self.pods = _StorePodSeq(self.store)
+        else:
+            self.store = None
+            self.pods: List[Pod] = []      # every pod ever submitted
         self.total_evictions = 0
         self.total_scale_outs = 0
         self.total_scale_ins = 0
@@ -104,8 +156,23 @@ class Orchestrator:
         self._pending_heap: List[Tuple[float, int, int, Pod]] = []
         self._pending_sorted: List[Tuple[float, int, int, Pod]] = []
         self._push_seq = itertools.count()
-        self._bound_batch: Dict[int, Pod] = {}     # uid -> BOUND batch pod
-        self._newly_bound_batch: List[Pod] = []    # drained by the simulator
+        # Store-path pending queue: three sorted (pending_since, uid, row)
+        # streams.  Arrival ingests *append* (batches are presorted and uids
+        # monotone, so the whole arrival stream is sorted by construction —
+        # zero heap pushes); evictions/adoptions go through the small heap;
+        # snapshots carry their sorted prefix forward.  Same keys, same lazy
+        # invalidation, same FIFO order as the seed queue.
+        self._arrival_entries: List[Tuple[float, int, int]] = []
+        self._row_heap: List[Tuple[float, int, int]] = []
+        self._row_sorted: List[Tuple[float, int, int]] = []
+        # uid -> BOUND batch pod; values are None on the store fast path
+        # until something needs the shell (e.g. straggler mitigation).
+        self._bound_batch: Dict[int, Optional[Pod]] = {}
+        # Batch pods bound since the last drain, in global bind order:
+        # Pod objects from object-path binds, store rows (ints) from
+        # fast-path wave commits.  One list so completion scheduling sees
+        # the exact seed bucketing order even when the two mix in a cycle.
+        self._newly_bound_batch: list = []
         self.n_pending = 0
         self.n_batch_total = 0
         self.n_batch_done = 0
@@ -134,26 +201,43 @@ class Orchestrator:
         elif pod.is_service:
             self.n_service_bound -= 1
 
+    def _on_row_completed(self, row: int) -> None:
+        """Store-path ``_on_pod_completed``: same bookkeeping, no shell."""
+        self._bound_batch.pop(self.store.uid[row], None)
+        self.n_batch_done += 1
+
     def _on_pod_completed(self, pod: Pod) -> None:
         self._bound_batch.pop(pod.uid, None)
         self.n_batch_done += 1
 
-    def drain_newly_bound_batch(self) -> List[Pod]:
-        """Batch pods bound (or re-bound) since the last drain; the simulator
-        schedules one completion event per (pod, incarnation)."""
+    def drain_newly_bound_batch(self) -> list:
+        """Batch pods bound (or re-bound) since the last drain, in bind
+        order; the simulator schedules one completion event per
+        (pod, incarnation).  Entries are ``Pod`` objects (object-path binds)
+        or ``PodStore`` rows (ints, shell-less fast-path binds)."""
         out = self._newly_bound_batch
         self._newly_bound_batch = []
         return out
 
     # -- queue ------------------------------------------------------------------
     def _push_pending(self, pod: Pod) -> None:
+        if self.store is not None:
+            row = self.store.index.get(pod.uid)
+            if row is None:
+                row = self.store.adopt(pod)
+            heapq.heappush(self._row_heap, (pod.pending_since, pod.uid, row))
+            return
         heapq.heappush(self._pending_heap,
                        (pod.pending_since, pod.uid, next(self._push_seq), pod))
 
     def submit(self, pod: Pod) -> None:
-        """Enqueue a newly-created pod (simulator ARRIVAL handler)."""
-        self.pods.append(pod)
-        self._push_pending(pod)
+        """Enqueue a newly-created pod (object-path entry point: the seed
+        ARRIVAL handler, live-cluster submissions, tests).  On the array
+        engine the pod is adopted into the PodStore — it stays the mutable
+        face, the columns mirror it."""
+        if self.store is None:
+            self.pods.append(pod)
+        self._push_pending(pod)   # adopts into the store on the array engine
         self.n_pending += 1
         if pod.is_batch:
             self.n_batch_total += 1
@@ -161,11 +245,36 @@ class Orchestrator:
             self.n_service_total += 1
 
     def submit_wave(self, arrivals) -> None:
-        """Create and enqueue one pod per arrival of an ARRIVAL batch.
+        """Enqueue one pod per arrival of a presorted ARRIVAL batch.
 
-        Equivalent to ``submit(Pod(spec=a.spec, submit_time=a.time))`` per
-        entry, with the per-pod call overhead hoisted out of the loop —
-        the simulator's batched-arrival handler is the only caller."""
+        Store path (array engine): the batch ingests straight into the SoA
+        columns — no ``Pod`` construction, no heap pushes.  Queue entries
+        append to the sorted arrival stream: batch times are nondecreasing,
+        uids are allocated in batch order, and every entry pushed before
+        this event carries ``pending_since <= now <= arrivals[0].time``, so
+        appends preserve the stream's sort (property-tested against
+        one-at-a-time heappush in ``tests/test_pod_store.py``).
+
+        Object path: equivalent to ``submit(Pod(...))`` per entry with the
+        per-pod call overhead hoisted out of the loop."""
+        if self.store is not None:
+            rows, uids = self.store.ingest(arrivals)
+            entries = self._arrival_entries
+            flags = self.store.flags
+            n_batch = n_service = 0
+            first = rows[0] if len(rows) else 0
+            for off, a in enumerate(arrivals):
+                row = first + off
+                entries.append((a.time, uids[off], row))
+                f = flags[row]
+                if f & _engine.POD_F_BATCH:
+                    n_batch += 1
+                elif f & _engine.POD_F_SERVICE:
+                    n_service += 1
+            self.n_pending += len(arrivals)
+            self.n_batch_total += n_batch
+            self.n_service_total += n_service
+            return
         pods = self.pods
         heap = self._pending_heap
         seq = self._push_seq
@@ -193,7 +302,14 @@ class Orchestrator:
         an entry is stale when its pod is no longer PENDING, when it was
         re-pended with a newer ``pending_since`` (bound then evicted — the
         eviction pushed a fresh entry), or when it is a same-key duplicate
-        (bound and evicted twice at one timestamp)."""
+        (bound and evicted twice at one timestamp).
+
+        On the store path this is an API boundary: the row snapshot comes
+        from :meth:`pending_rows` (idempotent — the carried prefix is
+        preserved) and each row materializes its ``Pod`` shell."""
+        if self.store is not None:
+            store = self.store
+            return [store.pod_at(r) for r in self.pending_rows()]
         heap = self._pending_heap
         if heap:
             # Draining the whole heap == sorting it (keys are unique), and
@@ -218,7 +334,57 @@ class Orchestrator:
         self._pending_sorted = entries
         return out
 
+    def pending_rows(self) -> List[int]:
+        """Store-path :meth:`pending_pods`: currently-pending store rows,
+        FIFO by (pending_since, uid).
+
+        Same three-way merge discipline, row-native: the carried sorted
+        prefix, the bulk-appended arrival stream (already sorted — see
+        :meth:`submit_wave`) and the sorted eviction heap merge in one pass,
+        with stale entries (phase or pending_since moved on, or same-key
+        duplicates) dropped lazily against the SoA columns instead of Pod
+        attributes."""
+        heap = self._row_heap
+        arrivals = self._arrival_entries
+        streams = []
+        if self._row_sorted:
+            streams.append(self._row_sorted)
+        if arrivals:
+            streams.append(arrivals)
+            self._arrival_entries = []
+        if heap:
+            fresh = sorted(heap)
+            heap.clear()
+            streams.append(fresh)
+        if len(streams) == 1:
+            merged = streams[0]
+        elif streams:
+            merged = heapq.merge(*streams)
+        else:
+            merged = ()
+        store = self.store
+        phase = store.phase
+        ps_col = store.pending_since
+        pending = _engine.POD_PENDING
+        out: List[int] = []
+        entries: List[Tuple[float, int, int]] = []
+        seen = set()
+        for entry in merged:
+            ps, uid, row = entry
+            if (phase[row] == pending and ps_col[row] == ps
+                    and uid not in seen):
+                seen.add(uid)
+                out.append(row)
+                entries.append(entry)
+        self._row_sorted = entries
+        return out
+
     def running_pods(self) -> List[Pod]:
+        if self.store is not None:
+            store = self.store
+            bound = _engine.POD_BOUND
+            return [store.pod_at(r) for r in range(store.n_rows)
+                    if store.phase[r] == bound]
         return [p for p in self.pods if p.phase == PodPhase.BOUND]
 
     def batch_all_done(self) -> bool:
@@ -240,11 +406,10 @@ class Orchestrator:
         stats = CycleStats()
         if self.straggler_threshold > 0:
             self._mitigate_stragglers(now)
-        snapshot = self.pending_pods()
-        if self.cluster.arrays is not None:
-            self._cycle_wave(snapshot, now, stats)
+        if self.store is not None:
+            self._cycle_wave(self.pending_rows(), now, stats)
         else:
-            self._cycle_per_pod(snapshot, now, stats)
+            self._cycle_per_pod(self.pending_pods(), now, stats)
         if stats.all_placed:
             removed = self.autoscaler.scale_in(self.cluster, now)
             stats.scale_ins = len(removed)
@@ -255,35 +420,92 @@ class Orchestrator:
         self.cluster.check_invariants(deep=self._cycle_count % 64 == 0)
         return stats
 
-    def _cycle_wave(self, snapshot: List[Pod], now: float,
+    def _cycle_wave(self, snapshot: List[int], now: float,
                     stats: CycleStats) -> None:
-        """Wave placement (array engine): place the snapshot in batches.
+        """Wave placement (array engine): place the snapshot of store rows
+        in batches.
 
-        Each ``select_wave`` call places a maximal prefix of the remaining
-        snapshot against the placer's working arrays; the prefix is committed
-        to the object model in one ``bind_wave``, then the blocked pod (if
-        any) goes through the paper's reschedule/scale-out path and the wave
-        resumes after it.  The placer — including its per-request-size filter
-        caches — is reused across waves as long as the mirror's version
-        counter proves nothing mutated cluster state behind its back."""
+        Each ``select_wave_store`` call places a maximal prefix of the
+        remaining snapshot against the placer's working arrays; the prefix
+        commits once per wave, then the blocked pod (if any) goes through
+        the paper's reschedule/scale-out path — materialized to a ``Pod``
+        shell, since reschedulers/autoscalers are an object API — and the
+        wave resumes after it.  The placer — including its per-request-size
+        filter caches — is reused across waves as long as the mirror's
+        version counter proves nothing mutated cluster state behind its
+        back.
+
+        Commit flavour: when ``cluster.on_bind`` is still this
+        orchestrator's own handler, the wave commits shell-less
+        (``Cluster.bind_wave_store`` — pure column/accounting writes, with
+        the orchestrator bookkeeping done row-wise here).  Any *external*
+        ``on_bind`` observer (parity spies, user callbacks) is an API
+        boundary: shells materialize and the wave commits through the
+        object-path ``bind_wave`` so the observer sees real pods, in order.
+        """
         arr = self.cluster.arrays
+        store = self.store
+        fast = self.cluster.on_bind == self._on_pod_bound
+        # Void rescheduler + void autoscaler (exact types: subclasses may
+        # override behaviour) ignore the pod entirely — Alg. 1's fallback
+        # chain degenerates to counter updates, so a blocked pod needs no
+        # shell.  This is the static-cluster regime (fig-4 baseline,
+        # throughput benchmarks), where a saturated cluster re-blocks tens
+        # of thousands of pending pods every cycle.
+        void_fallback = (type(self.rescheduler) is VoidRescheduler
+                         and type(self.autoscaler) is VoidAutoscaler)
         placer = None
         start = 0
         while start < len(snapshot):
             if placer is None or not placer.in_sync():
                 placer = _engine.WavePlacer(arr)
-            bindings, blocked = self.scheduler.select_wave(
-                placer, snapshot, start)
+            bindings, blocked = self.scheduler.select_wave_store(
+                placer, store, snapshot, start)
             if bindings:
-                by_slot = self.cluster.node_by_slot
-                self.cluster.bind_wave(
-                    [(pod, by_slot(slot)) for pod, slot in bindings], now)
+                if fast:
+                    self.cluster.bind_wave_store(bindings, now)
+                    self._note_bound_rows(bindings)
+                else:
+                    by_slot = self.cluster.node_by_slot
+                    self.cluster.bind_wave(
+                        [(store.pod_at(row), by_slot(slot))
+                         for row, slot in bindings], now)
                 placer.version = arr.version   # re-arm: our own commit
                 stats.placed += len(bindings)
             if blocked is None:
                 return
-            self._handle_unschedulable(snapshot[blocked], now, stats)
+            if void_fallback:
+                # Inlined _handle_unschedulable for the void/void chain:
+                # reschedule FAILED -> scale-out request -> ignored.
+                stats.unschedulable += 1
+                stats.all_placed = False
+                stats.scale_out_requests += 1
+                self.total_scale_outs += 1
+            else:
+                self._handle_unschedulable(store.pod_at(snapshot[blocked]),
+                                           now, stats)
             start = blocked + 1
+
+    def _note_bound_rows(self, bindings) -> None:
+        """Row-wise ``_on_pod_bound`` for one fast-committed wave."""
+        store = self.store
+        flags = store.flags
+        uid_col = store.uid
+        shells = store.shells
+        bound_batch = self._bound_batch
+        newly = self._newly_bound_batch
+        n_service = 0
+        F_BATCH = _engine.POD_F_BATCH
+        F_SERVICE = _engine.POD_F_SERVICE
+        for row, _slot in bindings:
+            f = flags[row]
+            if f & F_BATCH:
+                bound_batch[uid_col[row]] = shells.get(row)
+                newly.append(row)
+            elif f & F_SERVICE:
+                n_service += 1
+        self.n_pending -= len(bindings)
+        self.n_service_bound += n_service
 
     def _cycle_per_pod(self, snapshot: List[Pod], now: float,
                        stats: CycleStats) -> None:
@@ -320,8 +542,18 @@ class Orchestrator:
     def _mitigate_stragglers(self, now: float) -> None:
         # uid order == submission order (uids are monotone), matching the
         # seed's scan over self.pods.
+        store = self.store
         for uid in sorted(self._bound_batch):
             pod = self._bound_batch[uid]
+            if pod is None:
+                # Shell-less fast-path resident: gate on the spec flag first
+                # (same decision the object path takes) and materialize only
+                # candidates that pass it.
+                row = store.index[uid]
+                if not store.flags[row] & _engine.POD_F_CHECKPOINTABLE:
+                    continue
+                pod = store.pod_at(row)
+                self._bound_batch[uid] = pod
             if not pod.spec.checkpointable:
                 continue
             node = self.cluster.node_of(pod)

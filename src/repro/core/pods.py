@@ -95,6 +95,41 @@ class Pod:
         self.is_service: bool = spec.kind == PodKind.SERVICE
         self.moveable: bool = spec.moveable
 
+    @classmethod
+    def _restore(cls, spec: PodSpec, submit_time: float, uid: int,
+                 phase: "PodPhase", node_id: Optional[str],
+                 pending_since: float, bound_time: Optional[float],
+                 finish_time: Optional[float], incarnation: int,
+                 pending_intervals: list) -> "Pod":
+        """Materialize a pod *shell* from SoA column state (PodStore).
+
+        Unlike ``__init__`` this does **not** draw from the global uid
+        counter: the store already allocated the uid at ingest time.  The
+        attribute values are handed in verbatim from the columns, so the
+        shell is indistinguishable from the object the seed path would have
+        produced (property-tested by ``tests/test_engine_parity.py``).
+        Store-resident pods are never evicted without being materialized
+        first, so ``progress_s`` / ``checkpointed_s`` are always zero here.
+        """
+        pod = object.__new__(cls)
+        pod.spec = spec
+        pod.submit_time = submit_time
+        pod.uid = uid
+        pod.phase = phase
+        pod.node_id = node_id
+        pod.pending_since = pending_since
+        pod.bound_time = bound_time
+        pod.finish_time = finish_time
+        pod.incarnation = incarnation
+        pod.progress_s = 0.0
+        pod.checkpointed_s = 0.0
+        pod.pending_intervals = pending_intervals
+        pod.requests = spec.requests
+        pod.is_batch = spec.kind == PodKind.BATCH
+        pod.is_service = spec.kind == PodKind.SERVICE
+        pod.moveable = spec.moveable
+        return pod
+
     # -- convenience ---------------------------------------------------------
     @property
     def name(self) -> str:

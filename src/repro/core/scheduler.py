@@ -18,11 +18,15 @@ Two execution engines share each policy:
   floats, identical IEEE ops, identical tie-breaks => identical bindings.
 
 On the array path the orchestrator schedules in **waves**
-(:meth:`Scheduler.select_wave`): the whole pending snapshot is placed
-against a :class:`repro.core.engine.WavePlacer` in one call, and the chosen
-bindings are committed to the object model once per wave
-(``Cluster.bind_wave``) instead of once per pod.  Each policy contributes
-its vectorized selection rule through two hooks:
+(:meth:`Scheduler.select_wave_store`): the whole pending snapshot — rows of
+the SoA :class:`repro.core.engine.PodStore` — is placed against a
+:class:`repro.core.engine.WavePlacer` in one call, and the chosen bindings
+are committed once per wave (``Cluster.bind_wave_store``, or the
+object-path ``Cluster.bind_wave`` when an external observer needs ``Pod``
+shells) instead of once per pod.  :meth:`Scheduler.select_wave` is the
+``Pod``-based twin, kept as the documented reference implementation and for
+direct callers.  Each policy contributes its vectorized selection rule
+through two hooks:
 
 * :attr:`Scheduler.wave_mode` — ``'min'``/``'max'``: which extremum of the
   policy's score vector wins (``None`` = no score, first feasible node in
@@ -57,6 +61,7 @@ import numpy as np
 from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node
 from repro.core.pods import Pod, PodPhase
+from repro.core.resources import Resources
 
 
 def _lowest_id(nodes: List[Node]) -> Node:
@@ -75,6 +80,14 @@ class Scheduler(abc.ABC):
     # Wave placement: which extremum of `wave_scores` wins ('min' | 'max');
     # None = score-free policy (first feasible node in node_id order).
     wave_mode: Optional[str] = None
+
+    # Run-length fast path (select_wave_store): amortize one extremum query
+    # over a run of same-size pods.  Sound only for 'min' policies whose
+    # score at the bound rank can only move further into the minimum or go
+    # infeasible (best-fit: free_mem decreases per bind) — every other rank's
+    # cached score is frozen during the run, so the runner-up comparison is
+    # exact.  Decision-identical to querying per pod (parity-tested).
+    wave_run_length = False
 
     def suitable_nodes(self, cluster: Cluster, pod: Pod) -> List[Node]:
         """getAllSuitableNodes(p): feasible READY nodes, else TAINTED ones."""
@@ -281,6 +294,204 @@ class Scheduler(abc.ABC):
         buf = np.where(mask, self.wave_scores(placer, req), fill)
         return int(buf.argmin() if self.wave_mode == "min" else buf.argmax())
 
+    def select_wave_store(self, placer, store, rows,
+                          start: int = 0) -> Tuple[list, Optional[int]]:
+        """Row-native :meth:`select_wave`: place ``rows[start:]`` of a
+        :class:`repro.core.engine.PodStore` against the placer.
+
+        The store-path wave engine of ``Orchestrator.cycle``.  Identical
+        decision procedure to :meth:`select_wave` — same cached ±inf-masked
+        score buffers, same per-bind float ops, same refresh, same
+        tie-breaks — except pod phase and request sizes are read from the
+        SoA columns instead of ``Pod`` attributes, and no object is ever
+        touched.  Returns ``(bindings, blocked)`` where ``bindings`` is the
+        placed prefix as ``(row, slot)`` pairs.
+
+        **Run-length fast path** (``wave_run_length`` policies, best-fit):
+        one extremum query is amortized over a run of consecutive same-size
+        pods.  After placing a pod at rank ``r``, the runner-up ``(v2, r2)``
+        — the first extremum with ``r`` masked out — is computed once; while
+        successive pods carry the same request key, the next extremum is
+        decidable from two scalars, because only ``buf[r]`` has changed:
+        the per-pod query collapses to *stay at r iff
+        ``(buf[r], r) < (v2, r2)`` lexicographically and r still fits*.  The
+        moment ``r`` goes infeasible or loses to the runner-up the loop
+        falls back to a full query.  Accounting floats still advance one pod
+        at a time in bind order (``+=`` / ``alloc − used``), so the working
+        frees — and therefore every subsequent decision — are bit-identical
+        to the per-pod query path; cache refreshes for the run's rank are
+        flushed before the next query reads any buffer (refreshes are pure
+        functions of the current working frees, so one flush equals the
+        per-bind refreshes it replaces).  ``REPRO_WAVE_RUNLEN=0`` forces the
+        per-pod query path for A/B parity testing.
+        """
+        bindings: List[Tuple[int, int]] = []
+        cache = placer.cache
+        cache_list = placer.cache_list
+        mode = self.wave_mode
+        mode_min = mode == "min"
+        fill = np.inf if mode_min else -np.inf
+        slot_of_rank = placer.slot_of_rank_list
+        use_tree = placer.use_tree
+        ready = placer.ready
+        free_cpu, free_mem = placer.free_cpu, placer.free_mem
+        used_cpu, used_mem = placer.used_cpu, placer.used_mem
+        alloc_cpu, alloc_mem = placer.alloc_cpu, placer.alloc_mem
+        phase_col = store.phase
+        cpu_col = store.cpu_m
+        mem_col = store.mem_mb
+        pending = _engine.POD_PENDING
+        score_at = self.wave_score_at
+        run_len = (self.wave_run_length and mode_min
+                   and _engine.wave_runlen_enabled())
+
+        def refresh(r):
+            # Only rank r's feasibility/score changed: refresh that one
+            # entry in every cached buffer.  Scalar extraction is exact
+            # (int64/float64 round-trip verbatim), and Python int/float
+            # comparisons and the `+ 1e-9` are the identical IEEE doubles
+            # the elementwise vector ops compute.
+            fc = int(free_cpu[r])
+            fm_eps = float(free_mem[r]) + 1e-9
+            ready_r = bool(ready[r])
+            for f2, m2, b2, r2, t2, c2, m_mb2 in cache_list:
+                ok = fc >= c2 and fm_eps >= m_mb2
+                f2[r] = ok
+                ok = ok and ready_r
+                m2[r] = ok
+                if mode is not None:
+                    v = score_at(placer, r2, r) if ok else fill
+                    b2[r] = v
+                    if t2 is not None:
+                        t2.update(r, v)
+                elif t2 is not None:   # buf is the mask itself (1/-inf tree)
+                    t2.update(r, 1.0 if ok else -np.inf)
+
+        blocked_keys = placer.blocked_keys
+        i = start
+        n = len(rows)
+        while i < n:
+            row = rows[i]
+            if phase_col[row] != pending:
+                i += 1
+                continue   # a binding rescheduler may have placed it already
+            if placer.n == 0:
+                return bindings, i
+            cpu_m = cpu_col[row]
+            mem_mb = mem_col[row]
+            key = (cpu_m, mem_mb)
+            if key in blocked_keys:
+                return bindings, i   # latched infeasible (frees only shrink)
+            ent = cache.get(key)
+            if ent is None:
+                req = Resources(cpu_m, mem_mb)
+                # Same feasibility ops as Resources.fits_in, elementwise.
+                fits = (free_cpu >= cpu_m) & ((free_mem + 1e-9) >= mem_mb)
+                mask = fits & ready
+                if mode is None:
+                    buf = mask          # argmax(bool) == first feasible rank
+                else:
+                    buf = np.where(mask, self.wave_scores(placer, req), fill)
+                if not use_tree:
+                    tree = None
+                elif mode is None:
+                    tree = _engine.SegExtTree(
+                        np.where(mask, 1.0, -np.inf), False)
+                else:
+                    tree = _engine.SegExtTree(buf, mode_min)
+                ent = (fits, mask, buf, req, tree, cpu_m, mem_mb)
+                cache[key] = ent
+                cache_list.append(ent)
+            fits, mask, buf, req, tree, _, _ = ent
+            if tree is None:
+                r = int(buf.argmin() if mode_min else buf.argmax())
+                feasible = mask[r] if mode is None else buf[r] != fill
+            else:
+                r = tree.argext()
+                feasible = r >= 0
+            if not feasible:
+                # No READY node fits.  Last resort: tainted nodes (paper:
+                # "unless strictly necessary") — same fallback as per-pod.
+                r = self._select_wave_tainted(placer, fits, req)
+                if r < 0:
+                    blocked_keys.add(key)
+                    return bindings, i
+            bindings.append((row, slot_of_rank[r]))
+            # Same `+=` / `alloc - used` float ops as the object accounting,
+            # so the rest of the wave sees bit-identical frees.
+            used_cpu[r] += cpu_m
+            used_mem[r] += mem_mb
+            free_cpu[r] = alloc_cpu[r] - used_cpu[r]
+            free_mem[r] = alloc_mem[r] - used_mem[r]
+            # Inlined refresh(r) — the per-bind hot path skips the call.
+            fc = int(free_cpu[r])
+            fm_eps = float(free_mem[r]) + 1e-9
+            rdy = bool(ready[r])
+            for f2, m2, b2, r2_, t2, c2, m_mb2 in cache_list:
+                ok = fc >= c2 and fm_eps >= m_mb2
+                f2[r] = ok
+                ok = ok and rdy
+                m2[r] = ok
+                if mode is not None:
+                    v = score_at(placer, r2_, r) if ok else fill
+                    b2[r] = v
+                    if t2 is not None:
+                        t2.update(r, v)
+                elif t2 is not None:
+                    t2.update(r, 1.0 if ok else -np.inf)
+            i += 1
+            # Run-length continuation must pay for itself: the runner-up
+            # query is one extra extremum pass, and a run of exactly two
+            # breaks even (one saved query, one paid) — so peek *two* rows
+            # ahead and only arm the fast path for runs of three or more.
+            if (not run_len or not feasible or i + 1 >= n
+                    or cpu_col[rows[i]] != cpu_m
+                    or mem_col[rows[i]] != mem_mb
+                    or cpu_col[rows[i + 1]] != cpu_m
+                    or mem_col[rows[i + 1]] != mem_mb):
+                continue   # (feasible False => tainted fallback bind: no run)
+            # -- run-length continuation at rank r -----------------------------
+            if tree is None:
+                old = buf[r]
+                buf[r] = fill
+                r2 = int(buf.argmin())
+                v2 = buf[r2]
+                buf[r] = old
+            else:
+                old = buf[r]
+                tree.update(r, fill)
+                r2 = tree.argext()
+                tree.update(r, old)
+                v2 = buf[r2] if r2 >= 0 else fill
+                if r2 < 0:
+                    r2 = placer.n   # sentinel: no competitor, v2 == fill
+            ready_r = bool(ready[r])
+            dirty = False
+            while i < n:
+                row2 = rows[i]
+                if phase_col[row2] != pending:
+                    i += 1
+                    continue
+                if cpu_col[row2] != cpu_m or mem_col[row2] != mem_mb:
+                    break   # run over: next pod has a different request key
+                # Identical scalar feasibility ops as refresh()/fits_in.
+                if not (ready_r and int(free_cpu[r]) >= cpu_m
+                        and float(free_mem[r]) + 1e-9 >= mem_mb):
+                    break   # r no longer fits: full re-query needed
+                v = score_at(placer, req, r)
+                if v > v2 or (v == v2 and r2 < r):
+                    break   # the frozen runner-up now wins the extremum
+                bindings.append((row2, slot_of_rank[r]))
+                used_cpu[r] += cpu_m
+                used_mem[r] += mem_mb
+                free_cpu[r] = alloc_cpu[r] - used_cpu[r]
+                free_mem[r] = alloc_mem[r] - used_mem[r]
+                dirty = True
+                i += 1
+            if dirty:
+                refresh(r)   # flush the run's deferred per-bind refreshes
+        return bindings, None
+
 
 class BestFitBinPackingScheduler(Scheduler):
     """Paper Alg. 2 — online best-fit bin packing.
@@ -293,6 +504,10 @@ class BestFitBinPackingScheduler(Scheduler):
 
     name = "best-fit"
     wave_mode = "min"
+    # Binding at rank r strictly decreases free_mem[r] while all other ranks
+    # are frozen, so a run of same-size pods piles onto r until it fills or
+    # ties against the runner-up — the premise of the run-length fast path.
+    wave_run_length = True
 
     def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
         if not nodes:

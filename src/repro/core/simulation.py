@@ -42,6 +42,7 @@ import time
 from bisect import bisect_right
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import engine as _engine
 from repro.core.autoscaler import Autoscaler
 from repro.core.cluster import Cluster, Node, NodeState
 from repro.core.cost import CostModel
@@ -244,12 +245,46 @@ class Simulation:
         every running pod — and completions sharing a timestamp (pods of the
         same spec bound in the same cycle) are bucketed into a single heap
         event, so the event heap sees one push per distinct completion time
-        per cycle instead of one per pod."""
-        buckets: Dict[float, List[Tuple[Pod, int]]] = {}
+        per cycle instead of one per pod.
+
+        Drained entries are ``Pod`` objects (object-path binds) or PodStore
+        rows (ints, shell-less fast-path binds) in global bind order; rows
+        whose shell has materialized since the bind rejoin the pod path, so
+        a bucket entry is a row only while the pod is column-only.  Bucket
+        entries keep that shape — ``(pod | row, incarnation)`` — and both
+        shapes compute ``t_done`` with the identical float ops (a shell-less
+        row has ``progress_s == 0`` by construction)."""
+        buckets: Dict[float, list] = {}
         scheduled = self._completion_scheduled
         node_of = self.cluster.nodes.get
         now = self.now
-        for pod in self.orch.drain_newly_bound_batch():
+        store = self.orch.store
+        slot_nodes = self.cluster._slot_nodes
+        for item in self.orch.drain_newly_bound_batch():
+            if type(item) is int:
+                row = item
+                pod = store.shells.get(row)
+                if pod is None:
+                    if store.phase[row] != _engine.POD_BOUND:
+                        continue   # bound then evicted before the drain
+                    incarnation = store.incarnation[row]
+                    key = (store.uid[row], incarnation)
+                    if scheduled.get(key):
+                        continue
+                    scheduled[key] = True
+                    node = slot_nodes[store.node_slot[row]]
+                    speed = node.speed_factor if node else 1.0
+                    # progress_s is 0 for a never-evicted, shell-less pod.
+                    remaining = store.duration_s[row] - 0.0
+                    t_done = now + remaining / max(speed, 1e-6)
+                    bucket = buckets.get(t_done)
+                    if bucket is None:
+                        buckets[t_done] = [(row, incarnation)]
+                    else:
+                        bucket.append((row, incarnation))
+                    continue
+            else:
+                pod = item
             if pod.phase is not PodPhase.BOUND:
                 continue   # bound then evicted again before the drain
             incarnation = pod.incarnation
@@ -276,15 +311,47 @@ class Simulation:
         # _completion_scheduled here — live or stale, this event was that
         # incarnation's one shot — so the map stays bounded by the number
         # of in-flight pods instead of growing for the whole run.
+        #
+        # Entries are (pod | store-row, incarnation).  Rows stay column-only
+        # through the commit (``Cluster.complete_wave_store``) unless an
+        # external ``on_complete`` observer is attached — an API boundary,
+        # which materializes shells and routes through the object-path
+        # ``complete_wave`` so the observer sees real pods, in order.
         scheduled = self._completion_scheduled
-        live: List[Pod] = []
-        for pod, incarnation in payload:
-            scheduled.pop((pod.uid, incarnation), None)
+        store = self.orch.store
+        live: list = []
+        rows_present = False
+        for first, incarnation in payload:
+            if type(first) is int:
+                row = first
+                scheduled.pop((store.uid[row], incarnation), None)
+                pod = store.shells.get(row)
+                if pod is None:
+                    if (store.phase[row] != _engine.POD_BOUND
+                            or store.incarnation[row] != incarnation):
+                        continue   # stale: pod was evicted/failed since
+                    live.append(row)
+                    rows_present = True
+                    continue
+            else:
+                pod = first
+                scheduled.pop((pod.uid, incarnation), None)
             if pod.phase is not PodPhase.BOUND or pod.incarnation != incarnation:
                 continue   # stale entry: pod was evicted/failed since
             live.append(pod)
         if live:
-            self.cluster.complete_wave(live, self.now)
+            if rows_present:
+                orch = self.orch
+                if self.cluster.on_complete == orch._on_pod_completed:
+                    self.cluster.complete_wave_store(
+                        live, self.now, on_row=orch._on_row_completed)
+                else:
+                    # External observer: materialize rows, keep bind order.
+                    self.cluster.complete_wave(
+                        [store.pod_at(e) if type(e) is int else e
+                         for e in live], self.now)
+            else:
+                self.cluster.complete_wave(live, self.now)
             self.last_batch_done = self.now
 
     def _on_node_ready(self, node: Node) -> None:
@@ -325,10 +392,19 @@ class Simulation:
         return self.orch.services_all_bound()
 
     def _result(self, completed: bool, end: float) -> ExperimentResult:
-        for pod in self.orch.pods:
-            self.metrics.record_pending_intervals(pod.pending_intervals)
+        store = self.orch.store
+        if store is not None:
+            # Column-native end-of-run walk: shells contribute their
+            # recorded interval lists, shell-less rows derive theirs from
+            # the columns — same multiset, no 50k-shell materialization.
+            self.metrics.record_pending_intervals(
+                store.pending_intervals_all())
+            evictions = store.total_incarnations()
+        else:
+            for pod in self.orch.pods:
+                self.metrics.record_pending_intervals(pod.pending_intervals)
+            evictions = sum(p.incarnation for p in self.orch.pods)
         start = self.first_submit or 0.0
-        evictions = sum(p.incarnation for p in self.orch.pods)
         return ExperimentResult(
             workload="", scheduler=self.orch.scheduler.name,
             rescheduler=self.orch.rescheduler.name,

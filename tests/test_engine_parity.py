@@ -560,3 +560,111 @@ class TestFailureWaveParity:
             assert pod.node_id != big.node_id, \
                 f"{pod} bound to the dead node"
         cluster.check_invariants(deep=True)
+
+
+class TestRunLengthParity:
+    """Satellite: the best-fit run-length fast path (one extremum query
+    amortized over runs of same-size pods) must produce bit-identical bind
+    sequences *and node used-floats* versus both the per-pod query path
+    (``REPRO_WAVE_RUNLEN=0``) and the seed object engine — float
+    accumulation order included, which is why the spy records the bound
+    node's ``used`` bit patterns at every bind."""
+
+    def _bind_log(self, arrivals, engine, monkeypatch, runlen,
+                  wave_select=None, initial_workers=2):
+        import struct
+
+        monkeypatch.setenv("REPRO_WAVE_RUNLEN", "1" if runlen else "0")
+        reset_id_counters()
+        spec = ExperimentSpec(
+            workload="runlen", arrivals=list(arrivals),
+            scheduler="best-fit", rescheduler="void", autoscaler="binding",
+            initial_workers=initial_workers, seed=0, engine=engine,
+            wave_select=wave_select)
+        sim = build_simulation(spec)
+        log = []
+        inner = sim.cluster.on_bind
+
+        def spy(pod):
+            node = sim.cluster.nodes[pod.node_id]
+            log.append((pod.uid, pod.incarnation, pod.node_id,
+                        pod.bound_time, node._used_cpu_m,
+                        struct.pack("<d", node._used_mem_mb).hex()))
+            inner(pod)
+
+        sim.cluster.on_bind = spy
+        result = sim.run()
+        return log, dataclasses.asdict(result)
+
+    def _assert_all_identical(self, arrivals, monkeypatch, **kw):
+        fast_log, fast_res = self._bind_log(arrivals, "array", monkeypatch,
+                                            runlen=True, **kw)
+        slow_log, slow_res = self._bind_log(arrivals, "array", monkeypatch,
+                                            runlen=False, **kw)
+        obj_log, obj_res = self._bind_log(arrivals, "object", monkeypatch,
+                                          runlen=True, **kw)
+        assert fast_log, "workload produced no bindings"
+        assert fast_log == slow_log, "run-length path diverged from per-pod"
+        assert fast_log == obj_log, "run-length path diverged from seed"
+        assert fast_res == slow_res == obj_res
+
+    def test_same_size_runs(self, monkeypatch):
+        """A pure same-size stream: maximal run lengths, nodes fill one by
+        one — the scenario the fast path was built for."""
+        spec = PodSpec("rl-same", PodKind.BATCH, Resources(200, gi(0.6)),
+                       duration_s=600.0)
+        arrivals = [Arrival(float(i), spec) for i in range(40)]
+        self._assert_all_identical(arrivals, monkeypatch)
+
+    def test_mixed_size_runs(self, monkeypatch):
+        """Random run lengths of mixed sizes (including services) stress the
+        run-break conditions: key changes, ties against the runner-up and
+        nodes going infeasible mid-run."""
+        rng = np.random.default_rng(7)
+        specs = [
+            PodSpec("rl-s", PodKind.BATCH, Resources(100, gi(0.3)),
+                    duration_s=300.0),
+            PodSpec("rl-m", PodKind.BATCH, Resources(200, gi(0.6)),
+                    duration_s=420.0),
+            PodSpec("rl-l", PodKind.BATCH, Resources(300, gi(0.9)),
+                    duration_s=540.0),
+            PodSpec("rl-svc", PodKind.SERVICE, Resources(150, gi(0.5)),
+                    moveable=True),
+        ]
+        arrivals = []
+        t = 0.0
+        while len(arrivals) < 70:
+            spec = specs[int(rng.integers(0, len(specs)))]
+            for _ in range(int(rng.integers(1, 8))):
+                t += float(rng.exponential(3.0))
+                arrivals.append(Arrival(t, spec))
+        self._assert_all_identical(arrivals, monkeypatch)
+
+    def test_runs_interrupted_by_scale_out(self, monkeypatch):
+        """A one-node cluster forces mid-run blocking: the wave flushes, the
+        binding autoscaler provisions, and the run resumes later — bind
+        sequences must survive the interruption bit-for-bit."""
+        spec = PodSpec("rl-burst", PodKind.BATCH, Resources(300, gi(1.2)),
+                       duration_s=900.0)
+        arrivals = [Arrival(float(i) * 0.5, spec) for i in range(30)]
+        self._assert_all_identical(arrivals, monkeypatch,
+                                   initial_workers=1)
+
+    def test_runs_under_segtree_kernel(self, monkeypatch):
+        """The run-length path drives the segment tree through its
+        mask/restore runner-up queries; decisions must match the flat
+        argmin kernel and the seed engine."""
+        spec = PodSpec("rl-tree", PodKind.BATCH, Resources(200, gi(0.6)),
+                       duration_s=600.0)
+        arrivals = [Arrival(float(i), spec) for i in range(36)]
+        fast_tree, res_tree = self._bind_log(arrivals, "array", monkeypatch,
+                                             runlen=True,
+                                             wave_select="segtree")
+        fast_flat, res_flat = self._bind_log(arrivals, "array", monkeypatch,
+                                             runlen=True,
+                                             wave_select="argmin")
+        obj_log, res_obj = self._bind_log(arrivals, "object", monkeypatch,
+                                          runlen=True)
+        assert fast_tree, "workload produced no bindings"
+        assert fast_tree == fast_flat == obj_log
+        assert res_tree == res_flat == res_obj

@@ -1,0 +1,130 @@
+"""Golden end-to-end trace: a committed fixture of one deterministic run.
+
+The throughput gates catch perf regressions and the parity suite catches
+array-vs-object drift, but neither catches *semantic* drift that lands in
+both engines at once (a changed tie-break, a shifted event order, a
+re-rounded float).  This test replays a small deterministic workload —
+``mixed`` seed 3 under the paper's NBR-NBAS combo (non-binding rescheduler
+and autoscaler) — and diffs the **full event log** against
+``tests/data/golden_trace.json``:
+
+* every bind (uid, incarnation, node, time);
+* every eviction and completion;
+* every scale event (node terminations with times; launches show up as
+  first-bind node ids and in the node-count series);
+* every 20 s Table-5 sample, bit-exact (JSON round-trips doubles exactly);
+* the final ``ExperimentResult`` row.
+
+Both engines must match the fixture.  To regenerate after an *intentional*
+semantic change::
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+
+and commit the diff with an explanation of why behaviour moved.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import pytest
+
+if __name__ == "__main__":          # --regen entry point (see module docstring)
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core import ExperimentSpec, reset_id_counters
+from repro.core.experiment import build_simulation
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "data", "golden_trace.json")
+
+SPEC = dict(workload="mixed", seed=3, scheduler="best-fit",
+            rescheduler="non-binding", autoscaler="non-binding",
+            initial_workers=1)
+
+
+def capture_trace(engine):
+    """Run the golden workload on `engine` and capture the full event log."""
+    reset_id_counters()
+    sim = build_simulation(ExperimentSpec(engine=engine, **SPEC))
+    binds, evictions, completions = [], [], []
+    cluster = sim.cluster
+    inner_bind = cluster.on_bind
+    inner_unbind = cluster.on_unbind
+    inner_complete = cluster.on_complete
+
+    def on_bind(pod):
+        binds.append([pod.uid, pod.incarnation, pod.node_id, pod.bound_time])
+        inner_bind(pod)
+
+    def on_unbind(pod):
+        evictions.append([pod.uid, pod.incarnation, pod.pending_since])
+        inner_unbind(pod)
+
+    def on_complete(pod):
+        completions.append([pod.uid, pod.node_id, pod.finish_time])
+        inner_complete(pod)
+
+    cluster.on_bind = on_bind
+    cluster.on_unbind = on_unbind
+    cluster.on_complete = on_complete
+    result = sim.run()
+    trace = {
+        "spec": SPEC,
+        "binds": binds,
+        "evictions": evictions,
+        "completions": completions,
+        "scale_events": [[n.node_id, n.terminate_time]
+                         for n in cluster.terminated],
+        "samples": [list(dataclasses.astuple(s)) for s in sim.metrics.samples],
+        "node_counts": [list(x) for x in sim.metrics.node_count_series],
+        "result": dataclasses.asdict(result),
+    }
+    # JSON round-trip normalization: tuples become lists, floats survive
+    # bit-exactly (Python's repr round-trip), so == against the loaded
+    # fixture is a bit-exact diff.
+    return json.loads(json.dumps(trace))
+
+
+@pytest.mark.parametrize("engine", ["array", "object"])
+def test_trace_matches_golden_fixture(engine):
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    trace = capture_trace(engine)
+    for key in golden:
+        assert trace[key] == golden[key], (
+            f"golden-trace drift in {key!r} on the {engine} engine — if this "
+            f"change is intentional, regenerate with "
+            f"`PYTHONPATH=src python tests/test_golden_trace.py --regen` "
+            f"and explain the semantic change in the commit")
+    assert trace == golden
+
+
+def test_fixture_is_nontrivial():
+    """The fixture must keep exercising the interesting machinery: binds,
+    evictions (rescheduler), scale events (autoscaler) and samples."""
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    assert len(golden["binds"]) >= 50
+    assert golden["evictions"], "fixture lost its rescheduler activity"
+    assert golden["scale_events"], "fixture lost its scale-in activity"
+    assert len(golden["samples"]) >= 10
+    assert golden["result"]["completed"] is True
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        print(__doc__)
+        sys.exit(2)
+    trace = capture_trace("array")
+    obj = capture_trace("object")
+    assert trace == obj, "engines disagree; fix parity before regenerating"
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(trace, f, indent=1)
+        f.write("\n")
+    print(f"wrote {FIXTURE}: {len(trace['binds'])} binds, "
+          f"{len(trace['evictions'])} evictions, "
+          f"{len(trace['completions'])} completions, "
+          f"{len(trace['samples'])} samples")

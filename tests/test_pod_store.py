@@ -1,0 +1,337 @@
+"""PodStore parity: SoA pod columns + on-demand shells vs. seed Pod objects.
+
+Three layers:
+
+* **Shell-view property** — randomized interleavings of submit / bind /
+  complete / fail, replayed through (a) the store fast path (bulk ingest,
+  ``bind_wave_store`` / ``complete_wave_store`` column commits) and (b) the
+  seed object path (``Pod`` construction + ``cluster.bind/complete/unbind``),
+  must yield identical ``Pod`` attribute views — including shells that
+  materialize mid-sequence and keep mutating afterwards.  A numpy-seeded
+  driver always runs; a hypothesis wrapper widens the search when the
+  dependency is installed.
+* **Bulk arrival-merge** — ``submit_wave``'s append-only arrival stream +
+  eviction heap must snapshot in exactly the order one-at-a-time heappush
+  produces, including equal ``pending_since`` ties broken by uid.
+* **Store consistency** — ``PodStore.verify_against`` cross-checks columns,
+  shells and node residency after every scripted interleaving.
+"""
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.core import (Arrival, Cluster, Node, Pod, PodKind, PodSpec,
+                        Resources, gi, reset_id_counters)
+from repro.core.engine import POD_PENDING, PodStore
+from repro.core.orchestrator import Orchestrator
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+SPECS = [
+    PodSpec("ps-batch-s", PodKind.BATCH, Resources(100, gi(0.3)),
+            duration_s=120.0),
+    PodSpec("ps-batch-l", PodKind.BATCH, Resources(300, gi(0.9)),
+            duration_s=300.0),
+    PodSpec("ps-svc", PodKind.SERVICE, Resources(200, gi(0.6)),
+            moveable=True),
+    PodSpec("ps-svc-pin", PodKind.SERVICE, Resources(100, gi(0.4))),
+]
+
+# Attributes a shell must reproduce bit-for-bit (the full observable Pod
+# surface minus `spec`, which is asserted to be the identical object).
+POD_ATTRS = ("uid", "phase", "node_id", "submit_time", "pending_since",
+             "bound_time", "finish_time", "incarnation", "progress_s",
+             "checkpointed_s", "pending_intervals", "requests", "is_batch",
+             "is_service", "moveable")
+
+N_NODES = 4
+
+
+def _script(rng, n_ops):
+    """A backend-agnostic op script: every random choice is made here, so
+    both replays perform the identical sequence.
+
+    The script mirrors the replays' queue model — pending kept in uid
+    order, bound in bind order — so it can address pods by index and knows
+    each bound pod's kind (only batch pods may complete, exactly like the
+    simulator)."""
+    ops = []
+    t = 0.0
+    uid = 0
+    pending = []        # (model uid, spec idx), uid order
+    bound = []          # (model uid, spec idx), bind order
+    for _ in range(n_ops):
+        t += float(rng.integers(1, 30))
+        roll = int(rng.integers(0, 10))
+        batch_positions = [i for i, (_, s) in enumerate(bound)
+                           if SPECS[s].kind == PodKind.BATCH]
+        if roll < 4 or (not pending and not bound):
+            k = int(rng.integers(1, 4))
+            spec_idxs = [int(rng.integers(0, len(SPECS))) for _ in range(k)]
+            ops.append(("submit", t, spec_idxs))
+            for s in spec_idxs:
+                pending.append((uid, s))
+                uid += 1
+        elif roll < 7 and pending:
+            k = int(rng.integers(0, len(pending)))
+            ops.append(("bind", t, k, int(rng.integers(0, N_NODES))))
+            bound.append(pending.pop(k))
+        elif roll < 8 and batch_positions:
+            k = int(rng.integers(0, len(batch_positions)))
+            ops.append(("complete", t, batch_positions[k]))
+            bound.pop(batch_positions[k])
+        elif roll < 9 and bound:
+            k = int(rng.integers(0, len(bound)))
+            ops.append(("fail", t, k, bool(rng.integers(0, 2))))
+            pending.append(bound.pop(k))
+            pending.sort()
+        else:
+            # Materialize a shell mid-sequence (API-boundary probe); the
+            # index is resolved against live rows at replay time.
+            ops.append(("materialize", t, int(rng.integers(0, 1 << 16))))
+    return ops
+
+
+def _mk_nodes(cluster):
+    for i in range(N_NODES):
+        node = Node(allocatable=Resources(100_000, gi(400.0)),
+                    node_id=f"store-n{i}")
+        node.mark_ready(0.0)
+        cluster.add_node(node)
+
+
+def _replay_store(ops):
+    """Replay through the PodStore fast path (no Pod objects unless an op
+    forces a boundary crossing)."""
+    reset_id_counters()
+    cluster = Cluster(use_arrays=True)
+    store = PodStore(cluster.arrays)
+    cluster.pod_store = store
+    _mk_nodes(cluster)
+    pending = []        # rows, uid order
+    bound = []          # rows, bind order
+    for op in ops:
+        kind = op[0]
+        if kind == "submit":
+            _, t, spec_idxs = op
+            rows, _uids = store.ingest(
+                [Arrival(t, SPECS[s]) for s in spec_idxs])
+            pending.extend(rows)
+        elif kind == "bind":
+            _, t, k, node_idx = op
+            row = pending.pop(k)
+            node = cluster.nodes[f"store-n{node_idx}"]
+            cluster.bind_wave_store([(row, node._slot)], t)
+            bound.append(row)
+        elif kind == "complete":
+            _, t, k = op
+            row = bound.pop(k)
+            cluster.complete_wave_store([row], t)
+        elif kind == "fail":
+            _, t, k, failed = op
+            row = bound.pop(k)
+            # Eviction is an object API: the shell materializes here.
+            cluster.unbind(store.pod_at(row), t, failed=failed)
+            pending.append(row)
+            pending.sort(key=lambda r: store.uid[r])
+        elif kind == "materialize":
+            _, _t, pick = op
+            if store.n_rows:
+                store.pod_at(pick % store.n_rows)
+        cluster.check_invariants(deep=True)
+        store.verify_against(cluster)
+    # Final views: materialize everything (the API boundary the satellite
+    # is about) and snapshot the attribute surface.
+    views = {}
+    for row in range(store.n_rows):
+        pod = store.pod_at(row)
+        views[pod.uid] = ([getattr(pod, a) for a in POD_ATTRS], pod.spec)
+    store.verify_against(cluster)
+    return views
+
+
+def _replay_object(ops):
+    """The seed-semantics reference: real Pods from day one."""
+    reset_id_counters()
+    cluster = Cluster(use_arrays=False)
+    _mk_nodes(cluster)
+    pods = []
+    pending = []
+    bound = []
+    for op in ops:
+        kind = op[0]
+        if kind == "submit":
+            _, t, spec_idxs = op
+            for s in spec_idxs:
+                pod = Pod(spec=SPECS[s], submit_time=t)
+                pods.append(pod)
+                pending.append(pod)
+        elif kind == "bind":
+            _, t, k, node_idx = op
+            pod = pending.pop(k)
+            cluster.bind(pod, cluster.nodes[f"store-n{node_idx}"], t)
+            bound.append(pod)
+        elif kind == "complete":
+            _, t, k = op
+            cluster.complete(bound.pop(k), t)
+        elif kind == "fail":
+            _, t, k, failed = op
+            pod = bound.pop(k)
+            cluster.unbind(pod, t, failed=failed)
+            pending.append(pod)
+            pending.sort(key=lambda p: p.uid)
+        # "materialize" is a no-op on the object path
+        cluster.check_invariants(deep=True)
+    return {p.uid: ([getattr(p, a) for a in POD_ATTRS], p.spec)
+            for p in pods}
+
+
+def _assert_views_identical(store_views, object_views):
+    assert store_views.keys() == object_views.keys()
+    for uid, (vals, spec) in object_views.items():
+        got_vals, got_spec = store_views[uid]
+        assert got_spec is spec, f"uid {uid}: shell spec is not the object"
+        for name, want, got in zip(POD_ATTRS, vals, got_vals):
+            assert got == want, f"uid {uid}: {name} {got!r} != {want!r}"
+
+
+class TestPodStoreShellParity:
+    """Satellite: randomized submit/bind/complete/fail interleavings yield
+    identical Pod attribute views from the SoA columns and the seed object
+    path — including shells that materialize mid-sequence."""
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_random_interleavings(self, seed):
+        rng = np.random.default_rng(seed)
+        ops = _script(rng, 120)
+        _assert_views_identical(_replay_store(ops), _replay_object(ops))
+
+    def test_shell_identity_is_stable(self):
+        """Materializing twice returns the same object, and a shell keeps
+        tracking column state mutated through later fast-path commits."""
+        reset_id_counters()
+        cluster = Cluster(use_arrays=True)
+        store = PodStore(cluster.arrays)
+        cluster.pod_store = store
+        _mk_nodes(cluster)
+        rows, _ = store.ingest([Arrival(5.0, SPECS[0])])
+        row = rows[0]
+        pod = store.pod_at(row)
+        assert store.pod_at(row) is pod
+        assert pod.phase.value == "pending"
+        node = cluster.nodes["store-n0"]
+        cluster.bind_wave_store([(row, node._slot)], 7.0)
+        # The shell existed before the fast-path bind: the commit must have
+        # gone through the object transition, not just the columns.
+        assert pod.phase.value == "bound"
+        assert pod.node_id == "store-n0"
+        assert pod.bound_time == 7.0
+        assert pod.pending_intervals == [2.0]
+        cluster.complete_wave_store([row], 100.0)
+        assert pod.phase.value == "succeeded"
+        assert pod.finish_time == 100.0
+        store.verify_against(cluster)
+
+
+if HAVE_HYPOTHESIS:
+    class TestPodStoreShellParityHypothesis:
+        @settings(max_examples=30, deadline=None)
+        @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+               n_ops=st.integers(min_value=5, max_value=150))
+        def test_random_interleavings(self, seed, n_ops):
+            rng = np.random.default_rng(seed)
+            ops = _script(rng, n_ops)
+            _assert_views_identical(_replay_store(ops), _replay_object(ops))
+
+
+def _null_orchestrator():
+    from repro.core.autoscaler import VoidAutoscaler
+    from repro.core.rescheduler import VoidRescheduler
+    from repro.core.scheduler import BestFitBinPackingScheduler
+
+    class _NullProvider:
+        def launch_node(self, now):
+            raise AssertionError("no launches expected")
+
+        def terminate_node(self, node, now):
+            pass
+
+    cluster = Cluster(use_arrays=True)
+    node = Node(allocatable=Resources(1_000_000, gi(4000.0)),
+                node_id="merge-n0")
+    node.mark_ready(0.0)
+    cluster.add_node(node)
+    return Orchestrator(cluster, BestFitBinPackingScheduler(),
+                        VoidRescheduler(max_pod_age_s=0.0),
+                        VoidAutoscaler(_NullProvider()))
+
+
+class TestBulkArrivalMerge:
+    """Satellite: arrival batches merged into the pending columns agree with
+    one-at-a-time heappush ordering, including equal pending_since ties
+    broken by uid."""
+
+    def test_batches_with_ties_match_heappush_order(self):
+        reset_id_counters()
+        orch = _null_orchestrator()
+        store = orch.store
+        reference = []
+        # Batches with duplicate timestamps inside and *across* batches.
+        for batch_times in ([0.0, 0.0, 5.0], [5.0, 5.0], [5.0, 9.0, 9.0]):
+            arrivals = [Arrival(t, SPECS[i % len(SPECS)])
+                        for i, t in enumerate(batch_times)]
+            orch.submit_wave(arrivals)
+        for row in range(store.n_rows):
+            heapq.heappush(reference,
+                           (store.pending_since[row], store.uid[row], row))
+        expected = [heapq.heappop(reference)[2] for _ in range(store.n_rows)]
+        assert orch.pending_rows() == expected
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_randomized_batches_and_evictions(self, seed):
+        """Multiple snapshot windows with interleaved eviction re-pends:
+        every snapshot must equal the heappush reference over the live
+        pending set, with stale entries (bound since) dropped."""
+        rng = np.random.default_rng(seed)
+        reset_id_counters()
+        orch = _null_orchestrator()
+        cluster = orch.cluster
+        store = orch.store
+        node = cluster.nodes["merge-n0"]
+        t = 0.0
+        bound_rows = []
+        for _window in range(6):
+            # 1-3 arrival batches, nondecreasing times, deliberate ties.
+            for _ in range(int(rng.integers(1, 4))):
+                n = int(rng.integers(1, 6))
+                times = sorted(t + float(x)
+                               for x in rng.integers(0, 4, size=n))
+                orch.submit_wave([Arrival(tt, SPECS[int(rng.integers(
+                    0, len(SPECS)))]) for tt in times])
+                t = max([t] + times)
+            snapshot = orch.pending_rows()
+            # Reference: all live pending rows through a heap, keyed
+            # exactly like the seed queue.
+            ref_heap = []
+            for row in range(store.n_rows):
+                if store.phase[row] == POD_PENDING:
+                    heapq.heappush(ref_heap, (store.pending_since[row],
+                                              store.uid[row], row))
+            expected = [heapq.heappop(ref_heap)[2] for _ in range(len(ref_heap))]
+            assert snapshot == expected
+            # Bind a random prefix slice, evict some (re-pends push into the
+            # heap stream with pending_since == t, tying with arrivals).
+            for row in snapshot[:int(rng.integers(0, len(snapshot) + 1))]:
+                cluster.bind_wave_store([(row, node._slot)], t)
+                bound_rows.append(row)
+            while bound_rows and rng.integers(0, 2):
+                row = bound_rows.pop(int(rng.integers(0, len(bound_rows))))
+                cluster.unbind(store.pod_at(row), t)
+            store.verify_against(cluster)
