@@ -1,6 +1,6 @@
 # Developer entry points.  `make check` is the CI gate.
 
-.PHONY: check test bench-sched docs-check
+.PHONY: check test bench-sched sweep-scenarios docs-check
 
 check:
 	bash scripts/ci.sh
@@ -10,6 +10,9 @@ test:
 
 bench-sched:
 	PYTHONPATH=src python benchmarks/bench_sched_throughput.py --out BENCH_sched.json
+
+sweep-scenarios:
+	PYTHONPATH=src python benchmarks/sweep_scenarios.py --out SWEEP_scenarios.json
 
 docs-check:
 	python scripts/docs_check.py

@@ -32,6 +32,11 @@ Usage::
     python benchmarks/bench_sched_throughput.py --scale small    # CI smoke
     python benchmarks/bench_sched_throughput.py --engines array  # skip seed
     python benchmarks/bench_sched_throughput.py --kernels        # + crossover
+    python benchmarks/bench_sched_throughput.py --trace-replay   # + 100k trace
+
+``--trace-replay`` (implied by ``--scale all``) replays a 100k-arrival
+generated scenario (``repro.scenarios``) end-to-end through the columnar
+ingest path — the regression gate for trace-native submission.
 
 Writes ``BENCH_sched.json`` (override with ``--out``); prints
 ``name,us_per_call,derived`` CSV lines like the other benches.
@@ -185,6 +190,54 @@ def bench_scale(scale: str, engines) -> dict:
     return row
 
 
+TRACE_REPLAY_JOBS = 100_000
+TRACE_REPLAY_NODES = 2_000
+TRACE_REPLAY_REPEATS = 3
+
+
+def bench_trace_replay(n_jobs=TRACE_REPLAY_JOBS,
+                       nodes=TRACE_REPLAY_NODES) -> dict:
+    """Columnar trace replay at ingestion scale: a 100k-arrival heavy-tail
+    scenario (``repro.scenarios``) runs end-to-end through
+    ``Timeline`` → ``Orchestrator.submit_trace`` → ``PodStore.ingest_trace``
+    on a static 2k-node cluster — the zero-per-arrival-object path this
+    subsystem adds.  Reported wall time excludes trace generation (recorded
+    separately as ``build_s``) and is the median of
+    ``TRACE_REPLAY_REPEATS`` runs, same rationale as ``full_run``."""
+    from repro.scenarios import HeavyTail
+
+    cfg = HeavyTail(n_jobs=n_jobs, rate_per_s=30.0, cap_s=3600.0)
+    t0 = time.perf_counter()
+    trace = cfg.build(seed=0)
+    build_s = time.perf_counter() - t0
+    runs = []
+    for _ in range(TRACE_REPLAY_REPEATS):
+        reset_id_counters()
+        gc.collect()
+        spec = ExperimentSpec(trace=trace, scheduler="best-fit",
+                              rescheduler="void", autoscaler="void",
+                              static_workers=nodes)
+        sim = build_simulation(spec)
+        t0 = time.perf_counter()
+        result = sim.run()
+        runs.append((time.perf_counter() - t0, result.completed,
+                     sim.n_cycles))
+    runs.sort()
+    wall, completed, cycles = runs[len(runs) // 2]
+    out = {
+        "scenario": trace.name, "n_jobs": n_jobs, "nodes": nodes,
+        "repeats": TRACE_REPLAY_REPEATS,
+        "trace_build_s": round(build_s, 3),
+        "wall_s": round(wall, 3),
+        "cycles": cycles,
+        "completed": completed,
+        "pods_per_s_end_to_end": round(n_jobs / wall, 1),
+    }
+    print(f"bench_sched.trace_replay,{1e6 * wall:.0f},"
+          f"{out['pods_per_s_end_to_end']}")
+    return out
+
+
 def bench_wave_kernels(ns=(2048, 8192, 32768, 65536), reps=2000) -> dict:
     """Per-placement cost (extremum query + one point update) of the two
     wave-selection kernels, across node counts — re-measures the crossover
@@ -227,11 +280,14 @@ def bench_wave_kernels(ns=(2048, 8192, 32768, 65536), reps=2000) -> dict:
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", default="all",
-                    choices=["all"] + list(SCALES))
+                    choices=["all", "none"] + list(SCALES))
     ap.add_argument("--engines", default="array,object",
                     help="comma-separated subset of {array,object}")
     ap.add_argument("--kernels", action="store_true",
                     help="also run the wave-selection kernel crossover bench")
+    ap.add_argument("--trace-replay", action="store_true",
+                    help="also run the 100k-arrival columnar trace-replay "
+                         "bench (always included with --scale all)")
     ap.add_argument("--out", default="BENCH_sched.json")
     args = ap.parse_args(argv)
 
@@ -240,13 +296,20 @@ def main(argv=None) -> dict:
     if bad or not engines:
         ap.error(f"--engines must name a non-empty subset of array,object "
                  f"(got {args.engines!r})")
-    scales = list(SCALES) if args.scale == "all" else [args.scale]
+    if args.scale == "all":
+        scales = list(SCALES)
+    elif args.scale == "none":   # e.g. --trace-replay standalone (CI gate)
+        scales = []
+    else:
+        scales = [args.scale]
     report = {"bench": "sched_throughput",
               "generated_unix_s": int(time.time()),
               "warmup_cycles": WARMUP_CYCLES,
               "scales": {}}
     for scale in scales:
         report["scales"][scale] = bench_scale(scale, engines)
+    if args.trace_replay or args.scale == "all":
+        report["trace_replay"] = bench_trace_replay()
     if args.kernels:
         report["wave_select_kernels"] = bench_wave_kernels()
     with open(args.out, "w") as f:

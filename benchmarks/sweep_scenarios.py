@@ -1,0 +1,147 @@
+"""Scenario sweep harness: scheduler × autoscaler × scenario grid.
+
+Runs every cell of a policy×workload grid through ``run_experiment`` with
+columnar trace replay (``repro.scenarios``) and emits a Fig-3-style,
+machine-readable table: per-cell cost, scheduling duration, pending-time
+stats and Table-5 utilization ratios.  This is how the paper's
+cost-efficiency claims are checked *beyond* its three 50-job workloads —
+the default grid covers six scenario families (diurnal, flash-crowd MMPP,
+heavy-tailed durations, batch→service mix ramp, autoscaler stress,
+multi-tenant composition) at thousands of jobs per trace.
+
+Usage::
+
+    python benchmarks/sweep_scenarios.py                  # full default grid
+    python benchmarks/sweep_scenarios.py --smoke          # CI smoke (seconds)
+    python benchmarks/sweep_scenarios.py \
+        --scenarios diurnal,heavy-tail --schedulers best-fit \
+        --autoscalers binding --jobs 5000
+
+Writes ``SWEEP_scenarios.json`` (override with ``--out``); prints
+``name,us_per_call,derived`` CSV lines like the other benches (one line
+per cell: wall-clock µs, cost).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import ExperimentSpec, reset_id_counters, run_experiment
+from repro.scenarios import build_scenario
+
+DEFAULT_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp",
+                     "scale-stress", "multi-tenant")
+DEFAULT_SCHEDULERS = ("best-fit", "k8s-default", "first-fit", "worst-fit")
+DEFAULT_AUTOSCALERS = ("binding", "non-binding")
+
+SMOKE_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp")
+SMOKE_SCHEDULERS = ("best-fit", "k8s-default")
+SMOKE_JOBS = 300
+DEFAULT_JOBS = 1500
+
+
+def run_cell(trace, scheduler: str, autoscaler: str, rescheduler: str,
+             seed: int) -> dict:
+    # Fresh id counters per cell: every cell's tie-breaks (node ids order
+    # lexicographically) depend only on its own run, so cells are
+    # reproducible in isolation and in any grid order.
+    reset_id_counters()
+    spec = ExperimentSpec(trace=trace, scheduler=scheduler,
+                          autoscaler=autoscaler, rescheduler=rescheduler,
+                          seed=seed)
+    t0 = time.perf_counter()
+    r = run_experiment(spec)
+    wall = time.perf_counter() - t0
+    return {
+        "scenario": r.workload, "scheduler": scheduler,
+        "autoscaler": autoscaler, "rescheduler": rescheduler,
+        "n_jobs": trace.n, "completed": r.completed,
+        "cost": round(r.cost, 3),
+        "duration_s": round(r.duration_s, 1),
+        "median_pending_s": round(r.median_pending_s, 3),
+        "max_pending_s": round(r.max_pending_s, 3),
+        "avg_ram_ratio": round(r.avg_ram_ratio, 4),
+        "avg_cpu_ratio": round(r.avg_cpu_ratio, 4),
+        "avg_pods_per_node": round(r.avg_pods_per_node, 3),
+        "max_nodes": r.max_nodes,
+        "node_seconds": r.node_seconds,
+        "evictions": r.evictions,
+        "scale_outs": r.scale_outs, "scale_ins": r.scale_ins,
+        "wall_s": round(wall, 3),
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    # Defaults resolve after parsing so --smoke can shrink whichever axes
+    # the caller did NOT set explicitly (an explicit axis always wins).
+    ap.add_argument("--scenarios",
+                    help=f"default {','.join(DEFAULT_SCENARIOS)}")
+    ap.add_argument("--schedulers",
+                    help=f"default {','.join(DEFAULT_SCHEDULERS)}")
+    ap.add_argument("--autoscalers",
+                    help=f"default {','.join(DEFAULT_AUTOSCALERS)}")
+    # "void" by default: the rescheduling policies run a shadow-capacity
+    # pass per blocked pod per cycle, which multiplies wall time on
+    # scenarios that intentionally build deep backlogs (flash-crowd,
+    # scale-stress under the rate-limited non-binding autoscaler).  Pass
+    # --rescheduler binding|non-binding for the full paper-style chain.
+    ap.add_argument("--rescheduler", default="void")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help=f"trace length per scenario (default {DEFAULT_JOBS})")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI grid: "
+                         f"{len(SMOKE_SCENARIOS)}x{len(SMOKE_SCHEDULERS)}x2 "
+                         f"at {SMOKE_JOBS} jobs, runs in seconds")
+    ap.add_argument("--out", default="SWEEP_scenarios.json")
+    args = ap.parse_args(argv)
+
+    def axis(value, default):
+        return tuple(s for s in value.split(",") if s) if value else default
+
+    scenarios = axis(args.scenarios,
+                     SMOKE_SCENARIOS if args.smoke else DEFAULT_SCENARIOS)
+    schedulers = axis(args.schedulers,
+                      SMOKE_SCHEDULERS if args.smoke else DEFAULT_SCHEDULERS)
+    autoscalers = axis(args.autoscalers, DEFAULT_AUTOSCALERS)
+    n_jobs = args.jobs or (SMOKE_JOBS if args.smoke else DEFAULT_JOBS)
+
+    cells = []
+    for scenario in scenarios:
+        # One trace per scenario, replayed read-only across every cell —
+        # same jobs, same floats, so cells differ only by policy.
+        trace = build_scenario(scenario, seed=args.seed, n_jobs=n_jobs)
+        for scheduler in schedulers:
+            for autoscaler in autoscalers:
+                cell = run_cell(trace, scheduler, autoscaler,
+                                args.rescheduler, args.seed)
+                cells.append(cell)
+                print(f"sweep.{scenario}.{scheduler}.{autoscaler},"
+                      f"{1e6 * cell['wall_s']:.0f},{cell['cost']}")
+
+    report = {
+        "bench": "sweep_scenarios",
+        "generated_unix_s": int(time.time()),
+        "grid": {"scenarios": list(scenarios),
+                 "schedulers": list(schedulers),
+                 "autoscalers": list(autoscalers),
+                 "rescheduler": args.rescheduler,
+                 "n_jobs": n_jobs, "seed": args.seed},
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    n_done = sum(c["completed"] for c in cells)
+    print(f"# wrote {args.out} ({n_done}/{len(cells)} cells completed)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -64,6 +64,50 @@ else:
           f"(floor {floor:.0f})")
 EOF
 
+echo "== scenario smoke sweep (small scheduler x autoscaler x scenario grid) =="
+# The scenario subsystem's end-to-end gate: a small grid over four generated
+# scenario families must run to completion through trace-native replay.
+python benchmarks/sweep_scenarios.py --smoke --out /tmp/SWEEP_smoke.json
+python - <<'EOF'
+import json
+rep = json.load(open("/tmp/SWEEP_smoke.json"))
+cells = rep["cells"]
+assert len(cells) >= 16, f"smoke grid shrank to {len(cells)} cells"
+bad = [(c["scenario"], c["scheduler"], c["autoscaler"])
+       for c in cells if not c["completed"]]
+assert not bad, f"sweep cells failed to complete: {bad}"
+scenarios = sorted({c["scenario"] for c in cells})
+assert len(scenarios) >= 4, f"too few scenario families: {scenarios}"
+assert all(c["cost"] > 0 for c in cells), "a completed cell priced at $0"
+print(f"scenario sweep OK: {len(cells)} cells over {scenarios}")
+EOF
+
+echo "== trace-replay gate (100k-arrival columnar ingest, array engine) =="
+# Regression gate for the trace-native submission path (Timeline ->
+# submit_trace -> PodStore.ingest_trace): end-to-end pods/s on a 100k-
+# arrival generated scenario vs the committed BENCH_sched.json baseline.
+# Machine-dependent like the other bench gates.
+if [ "${BENCH_REGRESSION_SKIP:-0}" = "1" ]; then
+    echo "trace-replay gate skipped (BENCH_REGRESSION_SKIP=1)"
+else
+python benchmarks/bench_sched_throughput.py --scale none --trace-replay \
+    --out /tmp/BENCH_trace_smoke.json
+python - <<'EOF'
+import json
+import os
+tolerance = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.30"))
+now = json.load(open("/tmp/BENCH_trace_smoke.json"))["trace_replay"]
+assert now["completed"], "100k trace replay failed to complete"
+base = json.load(open("BENCH_sched.json"))["trace_replay"]
+floor = (1.0 - tolerance) * base["pods_per_s_end_to_end"]
+assert now["pods_per_s_end_to_end"] >= floor, (
+    f"trace-replay regression: {now['pods_per_s_end_to_end']} pods/s < "
+    f"{floor:.0f} (committed {base['pods_per_s_end_to_end']} - {tolerance:.0%})")
+print(f"trace-replay gate OK: {now['pods_per_s_end_to_end']} pods/s vs "
+      f"committed {base['pods_per_s_end_to_end']} (floor {floor:.0f})")
+EOF
+fi
+
 echo "== full-run gate (large scale, array engine) =="
 # Cycle throughput alone misses regressions in the event path (arrival
 # ingest, completion commits, telemetry): gate the *end-to-end* 2k-node x

@@ -614,7 +614,7 @@ class Cluster:
 
     # -- invariant (property-tested) ------------------------------------------
     def check_invariants(self, deep: bool = False) -> None:
-        if self.arrays is not None and not deep:
+        if self.arrays is not None:
             # Vectorized fast path: capacity respected on every live node.
             # The orchestrator runs the deep check periodically so mirror
             # drift / pod-linkage bugs still surface on the array engine.
@@ -627,7 +627,18 @@ class Cluster:
                 slot = int(np.argmax(bad))
                 raise AssertionError(
                     f"capacity violated on {arr.node_ids[slot]}")
-            return
+            if not deep:
+                return
+            if self.pod_store is not None:
+                # Array-native deep audit: node accounting re-summed from
+                # the PodStore columns with bincount reductions + shell
+                # lockstep checks (engine.PodStore.audit_columns), then the
+                # mirror cross-verified field-by-field against the object
+                # model.  No shell is materialized; the per-node object
+                # walk below remains for store-less clusters.
+                self.pod_store.audit_columns(self)
+                self.arrays.verify_against(self)
+                return
         store = self.pod_store
         for n in self.nodes.values():
             if n.oversub:

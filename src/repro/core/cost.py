@@ -63,8 +63,25 @@ class CostModel:
         self.records.clear()
 
     # -- queries ---------------------------------------------------------------
+    def _resolve_now(self, now: Optional[float]) -> float:
+        """``now`` may be omitted only once every record is closed.
+
+        Open records bill ``start → now``; pricing them against a default
+        of 0.0 silently yields `max(0, -start)` = 0 node-seconds for every
+        running node — a cost of $0 that *looks* like an answer.  Closed
+        records never read ``now``, so the query is unambiguous without it
+        only after ``close_all``/``on_deprovision`` retired everything."""
+        if now is not None:
+            return now
+        if self.records:
+            raise ValueError(
+                f"now= is required while {len(self.records)} node(s) are "
+                "still billing (open records would price as 0 seconds); "
+                "pass the current simulation time or call close_all first")
+        return 0.0   # unused: only closed records remain
+
     def total_cost(self, now: Optional[float] = None) -> float:
-        now = now if now is not None else 0.0
+        now = self._resolve_now(now)
         total = 0.0
         for rec in self.closed:
             total += rec.seconds(now) * self.price_of(rec.node_type)
@@ -73,6 +90,6 @@ class CostModel:
         return total
 
     def total_node_seconds(self, now: Optional[float] = None) -> int:
-        now = now if now is not None else 0.0
+        now = self._resolve_now(now)
         return (sum(r.seconds(now) for r in self.closed)
                 + sum(r.seconds(now) for r in self.records.values()))

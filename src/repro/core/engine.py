@@ -699,6 +699,49 @@ class PodStore:
             index[u] = row
         return range(first, first + n), uids
 
+    def ingest_trace(self, trace, lo: int, hi: int):
+        """Bulk-ingest rows ``[lo, hi)`` of a columnar trace
+        (``repro.scenarios.trace.TraceStore``); returns
+        ``(rows, uids, times)``.
+
+        The trace-native twin of :meth:`ingest` — identical column writes
+        (uids drawn from the same global counter, request sizes read from
+        the interned spec tables, so the values are bit-identical to the
+        ``Arrival`` path), but no ``Arrival`` or ``Pod`` object exists at
+        any point: the per-row Python work is C-speed list building from
+        the trace's NumPy columns.  ``duration_s`` copies the trace's
+        per-row column — equal to the template's duration for plain traces,
+        row-specific for heavy-tailed scenario families (shells for such
+        rows materialize a ``dataclasses.replace``-d spec, see
+        :meth:`pod_at`)."""
+        from repro.core import pods as _pods_mod
+        n = hi - lo
+        first = self.n_rows
+        sid_of = [self._intern_spec(s) for s in trace.templates]
+        sids = [sid_of[t] for t in trace.template_id[lo:hi].tolist()]
+        times = trace.arrival_time[lo:hi].tolist()
+        uids = list(itertools.islice(_pods_mod._uid, n))
+        spec_cpu, spec_mem = self._spec_cpu, self._spec_mem
+        self.uid.extend(uids)
+        self.spec_id.extend(sids)
+        self.cpu_m.extend([spec_cpu[s] for s in sids])
+        self.mem_mb.extend([spec_mem[s] for s in sids])
+        self.duration_s.extend(trace.duration_s[lo:hi].tolist())
+        self.submit_time.extend(times)
+        self.pending_since.extend(times)
+        self.phase.extend(bytes(n))              # POD_PENDING == 0
+        self.node_slot.extend([-1] * n)
+        self.bound_time.extend([None] * n)
+        self.finish_time.extend([None] * n)
+        self.incarnation.extend([0] * n)
+        spec_flags = self._spec_flags
+        self.flags.extend(bytes(spec_flags[s] for s in sids))
+        self.n_rows = first + n
+        index = self.index
+        for row, u in enumerate(uids, first):
+            index[u] = row
+        return range(first, first + n), uids, times
+
     def adopt(self, pod) -> int:
         """Register an externally-constructed (PENDING) ``Pod`` as a row.
 
@@ -737,12 +780,22 @@ class PodStore:
         the columns on first access."""
         pod = self.shells.get(row)
         if pod is None:
+            import dataclasses
+
             from repro.core.pods import Pod
             code = self.phase[row]
             slot = self.node_slot[row]
             bt = self.bound_time[row]
+            spec = self._spec_by_id[self.spec_id[row]]
+            if self.duration_s[row] != spec.duration_s:
+                # Trace-native ingest with a per-row duration override
+                # (heavy-tailed scenario families): the shell must carry
+                # the row's true duration — an API-boundary object, so the
+                # replace costs nothing on the hot path.
+                spec = dataclasses.replace(
+                    spec, duration_s=self.duration_s[row])
             pod = Pod._restore(
-                spec=self._spec_by_id[self.spec_id[row]],
+                spec=spec,
                 submit_time=self.submit_time[row],
                 uid=self.uid[row],
                 phase=_phase_objects()[code],
@@ -817,6 +870,96 @@ class PodStore:
         """Σ incarnation — the seed's eviction count (columns are synced on
         every eviction, so no shell walk is needed)."""
         return sum(self.incarnation)
+
+    # -- consistency (deep periodic invariant check) ---------------------------
+    def audit_columns(self, cluster) -> None:
+        """Vectorized deep audit: re-derive per-node accounting straight
+        from the pod columns and compare against the mirror.
+
+        Replaces the per-node object walk of
+        ``Cluster.check_invariants(deep=True)`` on the array engine (a
+        ROADMAP "next bottlenecks" item): the re-sum that used to
+        materialize shells and iterate every resident in Python is now
+        three ``bincount`` reductions over the bound rows — O(rows) at C
+        speed, and **zero shells are materialized by the audit itself**.
+        Shells that already exist are cross-checked attribute-for-attribute
+        against their columns (the lockstep contract), which is O(shells),
+        not O(rows).
+
+        Checks:
+
+        * every BOUND row sits on an active mirror slot;
+        * per-slot Σcpu / Σmem / row-count over BOUND rows equal the
+          mirror's ``used_cpu`` / ``used_mem`` / ``pod_count`` (cpu and
+          counts exactly; mem to the seed walk's 1e-6 absolute tolerance —
+          the re-sum's accumulation order differs from the incremental
+          event order);
+        * row ↔ residency linkage, bidirectionally: the BOUND uids grouped
+          per slot equal each node's resident uid *set* (C-speed set
+          equality — catches swapped residency between equal-request pods,
+          which every aggregate above would miss);
+        * materialized shells agree with their columns (phase,
+          pending_since, bound/finish time, incarnation, node linkage).
+        """
+        arr = self.arr
+        m = arr.n_slots
+        n_rows = self.n_rows
+        if n_rows:
+            phase = np.frombuffer(self.phase, np.uint8, n_rows)
+            bound = phase == POD_BOUND
+            slots = np.asarray(self.node_slot, np.int64)[bound]
+            assert slots.size == 0 or (
+                slots.min() >= 0 and arr.active[slots].all()), \
+                "bound pod on a missing/inactive node slot"
+            cpu = np.asarray(self.cpu_m, np.float64)[bound]
+            mem = np.asarray(self.mem_mb, np.float64)[bound]
+            used_cpu = np.bincount(slots, weights=cpu, minlength=m)[:m]
+            used_mem = np.bincount(slots, weights=mem, minlength=m)[:m]
+            counts = np.bincount(slots, minlength=m)[:m]
+            # Row ↔ residency linkage: group bound uids by slot and compare
+            # against the node's resident key set.  (pod_count equality
+            # below pins nodes with residents but no rows, so checking the
+            # slots that *have* rows covers both directions.)
+            if slots.size:
+                uids = np.asarray(self.uid, np.int64)[bound]
+                order = np.argsort(slots, kind="stable")
+                s_sorted, u_sorted = slots[order], uids[order]
+                cuts = np.flatnonzero(np.diff(s_sorted)) + 1
+                slot_nodes = cluster._slot_nodes
+                for slot, group in zip(
+                        s_sorted[np.concatenate(([0], cuts))].tolist(),
+                        np.split(u_sorted, cuts)):
+                    node = slot_nodes[slot]
+                    assert node is not None, f"bound rows on dead slot {slot}"
+                    assert set(group.tolist()) == set(node.pods), \
+                        f"row/residency drift on {node.node_id}"
+        else:
+            used_cpu = used_mem = np.zeros(m)
+            counts = np.zeros(m, np.int64)
+        live = arr.active[:m]
+        # int64 column == float64 bincount sum: exact below 2**53.
+        assert (arr.used_cpu[:m][live] == used_cpu[live]).all(), \
+            "node used_cpu drifted from the pod columns"
+        assert (np.abs(arr.used_mem[:m][live] - used_mem[live]) < 1e-6).all(), \
+            "node used_mem drifted from the pod columns"
+        assert (arr.pod_count[:m][live] == counts[live]).all(), \
+            "node pod_count drifted from the pod columns"
+        # Materialized shells stay in lockstep with their columns.
+        from repro.core.pods import PodPhase
+        rev = {PodPhase.PENDING: POD_PENDING, PodPhase.BOUND: POD_BOUND,
+               PodPhase.SUCCEEDED: POD_SUCCEEDED}
+        node_ids = arr.node_ids
+        for row, pod in self.shells.items():
+            assert rev[pod.phase] == self.phase[row], pod
+            assert self.pending_since[row] == pod.pending_since, pod
+            assert self.bound_time[row] == pod.bound_time, pod
+            assert self.finish_time[row] == pod.finish_time, pod
+            assert self.incarnation[row] == pod.incarnation, pod
+            if pod.phase is PodPhase.BOUND:
+                slot = self.node_slot[row]
+                assert slot >= 0 and node_ids[slot] == pod.node_id, pod
+                node = cluster.nodes.get(pod.node_id)
+                assert node is not None and pod.uid in node.pods, pod
 
     # -- consistency (property tests) ------------------------------------------
     def verify_against(self, cluster) -> None:

@@ -41,6 +41,13 @@ class ExperimentSpec:
     failure_injector: object = None
     straggler_threshold: float = 0.0
     arrivals: Optional[List[Arrival]] = None   # override the workload trace
+    # Columnar workload sources (repro.scenarios): a TraceStore replayed
+    # natively through the array engine's bulk ingest, or a registry
+    # scenario name built with this spec's seed.  `arrivals`, `trace` and
+    # `scenario` are mutually exclusive — see `workload_source`.
+    trace: object = None                       # scenarios.TraceStore
+    scenario: Optional[str] = None             # scenarios.registry name
+    scenario_jobs: Optional[int] = None        # override the family's length
     # "array" (vectorized SoA engine, default) or "object" (seed object-scan
     # engine); None defers to the REPRO_SCHED_ENGINE env var.
     engine: Optional[str] = None
@@ -49,6 +56,46 @@ class ExperimentSpec:
     # nodes — the kernels are decision-identical, so this is purely a
     # performance choice); None defers to the REPRO_WAVE_SELECT env var.
     wave_select: Optional[str] = None
+
+    def workload_source(self):
+        """Resolve this spec's workload to ``(arrivals, trace)`` — exactly
+        one is non-None.
+
+        ``arrivals`` (explicit list), ``trace`` (columnar TraceStore) and
+        ``scenario`` (registry name, built with this spec's seed and
+        ``scenario_jobs``) are mutually exclusive; naming more than one is
+        ambiguous and raises immediately rather than silently preferring
+        one.  With none set, the paper workload named by ``workload`` is
+        generated as the classic arrival list."""
+        sources = [name for name, v in (("arrivals", self.arrivals),
+                                        ("trace", self.trace),
+                                        ("scenario", self.scenario))
+                   if v is not None]
+        if len(sources) > 1:
+            raise ValueError(
+                f"ExperimentSpec got multiple workload sources "
+                f"({' + '.join(sources)}); set at most one of "
+                f"arrivals / trace / scenario")
+        if self.scenario_jobs is not None and self.scenario is None:
+            raise ValueError("scenario_jobs is only meaningful together "
+                             "with scenario=<registry name>")
+        if self.arrivals is not None:
+            return self.arrivals, None
+        if self.trace is not None:
+            return None, self.trace
+        if self.scenario is not None:
+            from repro.scenarios import build_scenario
+            return None, build_scenario(self.scenario, seed=self.seed,
+                                        n_jobs=self.scenario_jobs)
+        return generate_workload(self.workload, seed=self.seed), None
+
+    def workload_label(self) -> str:
+        """The name recorded on the ExperimentResult row."""
+        if self.scenario is not None:
+            return self.scenario
+        if self.trace is not None:
+            return getattr(self.trace, "name", "trace")
+        return self.workload
 
 
 def build_simulation(spec: ExperimentSpec) -> Simulation:
@@ -81,9 +128,8 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
 
     orch = Orchestrator(cluster, scheduler, rescheduler, autoscaler,
                         straggler_threshold=spec.straggler_threshold)
-    arrivals = (spec.arrivals if spec.arrivals is not None
-                else generate_workload(spec.workload, seed=spec.seed))
-    sim = Simulation(orch, cost, arrivals,
+    arrivals, trace = spec.workload_source()
+    sim = Simulation(orch, cost, arrivals, trace=trace,
                      config=SimConfig(cycle_period_s=spec.cycle_period_s),
                      failure_injector=spec.failure_injector)
     provider.attach(sim)
@@ -93,7 +139,7 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
 def run_experiment(spec: ExperimentSpec) -> ExperimentResult:
     sim = build_simulation(spec)
     result = sim.run()
-    result.workload = spec.workload
+    result.workload = spec.workload_label()
     return result
 
 

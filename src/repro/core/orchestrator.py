@@ -291,6 +291,29 @@ class Orchestrator:
         self.n_batch_total += n_batch
         self.n_service_total += n_service
 
+    def submit_trace(self, trace, lo: int, hi: int) -> None:
+        """Trace-native :meth:`submit_wave`: enqueue rows ``[lo, hi)`` of a
+        columnar trace (``repro.scenarios.trace.TraceStore``).
+
+        Store path (array engine): the batch bulk-ingests straight from the
+        trace columns into the PodStore columns
+        (``PodStore.ingest_trace``) — zero per-arrival Python objects, no
+        heap pushes; queue entries append to the sorted arrival stream
+        under the same sortedness argument as :meth:`submit_wave`, and the
+        batch/service counters update from one vector pass over the
+        trace's ``kind`` column.  Object path: falls back to materializing
+        the slice as ``Arrival`` objects (the seed engine is object-speed
+        anyway)."""
+        if self.store is None:
+            self.submit_wave(trace.arrivals_slice(lo, hi))
+            return
+        rows, uids, times = self.store.ingest_trace(trace, lo, hi)
+        self._arrival_entries.extend(zip(times, uids, rows))
+        n_batch, n_service = trace.count_kinds(lo, hi)
+        self.n_pending += hi - lo
+        self.n_batch_total += n_batch
+        self.n_service_total += n_service
+
     def pending_pods(self) -> List[Pod]:
         """Currently-pending pods, FIFO by (pending_since, uid).
 

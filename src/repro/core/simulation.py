@@ -73,9 +73,22 @@ class Timeline:
     later keep their relative push order via ``seq``.
     """
 
-    def __init__(self, arrivals: List[Arrival], horizon: float = _INF):
-        self._arrivals = arrivals
-        self._times = [a.time for a in arrivals]   # bisect-able key column
+    def __init__(self, arrivals: Optional[List[Arrival]] = None,
+                 horizon: float = _INF, trace=None):
+        if trace is not None:
+            # Trace-native mode: the key column is the TraceStore's
+            # arrival_time column itself (bisect works on the ndarray) and
+            # ARRIVAL payloads are ``(lo, hi)`` row ranges — no Arrival
+            # objects exist at any point.
+            self._arrivals = None
+            self._trace = trace
+            self._times = trace.arrival_time
+            self._n = trace.n
+        else:
+            self._arrivals = arrivals or []
+            self._trace = None
+            self._times = [a.time for a in self._arrivals]   # bisect keys
+            self._n = len(self._arrivals)
         self._ai = 0
         self._horizon = horizon
         self._heap: List[Tuple[float, int, int, object]] = []
@@ -85,12 +98,14 @@ class Timeline:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     def __bool__(self) -> bool:
-        return bool(self._heap) or self._ai < len(self._arrivals)
+        return bool(self._heap) or self._ai < self._n
 
     def pop(self) -> Tuple[float, int, object]:
-        """Earliest event; ARRIVAL runs come out as one batch."""
+        """Earliest event; ARRIVAL runs come out as one batch.  Batch
+        payloads are ``Arrival`` slices (list mode) or ``(lo, hi)`` row
+        ranges (trace mode)."""
         ai = self._ai
-        t_arr = self._times[ai] if ai < len(self._arrivals) else _INF
+        t_arr = float(self._times[ai]) if ai < self._n else _INF
         heap = self._heap
         if heap:
             head = heap[0]
@@ -106,9 +121,13 @@ class Timeline:
             # Out-of-horizon arrival: surface it alone, like the seed heap
             # popping the first over-limit event (the consumer stops on it).
             self._ai = ai + 1
+            if self._arrivals is None:
+                return t_arr, ARRIVAL, (ai, ai + 1)
             return t_arr, ARRIVAL, self._arrivals[ai:ai + 1]
         j = bisect_right(self._times, min(limit, self._horizon), ai)
         self._ai = j
+        if self._arrivals is None:
+            return t_arr, ARRIVAL, (ai, j)
         return t_arr, ARRIVAL, self._arrivals[ai:j]
 
 
@@ -127,12 +146,24 @@ class Simulation:
     """Drives one experiment: workload trace × policy combo × cluster."""
 
     def __init__(self, orchestrator: Orchestrator, cost: CostModel,
-                 arrivals: List[Arrival], config: Optional[SimConfig] = None,
-                 failure_injector=None):
+                 arrivals: Optional[List[Arrival]] = None,
+                 config: Optional[SimConfig] = None,
+                 failure_injector=None, trace=None):
         self.orch = orchestrator
         self.cluster = orchestrator.cluster
         self.cost = cost
-        self.arrivals = sorted(arrivals, key=lambda a: a.time)
+        if trace is not None and arrivals:
+            raise ValueError("pass either arrivals or trace, not both")
+        if trace is not None and orchestrator.store is None:
+            # The object engine has no columnar ingest: materialize the
+            # classic arrival list once (an API boundary; the seed engine
+            # is object-speed anyway).
+            arrivals, trace = trace.to_arrivals(), None
+        self.trace = trace   # columnar workload (scenarios.TraceStore)
+        self.arrivals = sorted(arrivals or [], key=lambda a: a.time)
+        # Total jobs in the workload, whichever form it arrived in (the
+        # exit condition and stuck detection compare against it).
+        self.n_arrivals = trace.n if trace is not None else len(self.arrivals)
         self.config = config or SimConfig()
         self.metrics = MetricsCollector()
         self.failure_injector = failure_injector
@@ -150,7 +181,7 @@ class Simulation:
     # -- event plumbing -----------------------------------------------------------
     def push(self, t: float, kind: int, payload=None) -> None:
         if self.timeline is None:   # pre-run priming (failure injectors)
-            self.timeline = Timeline(self.arrivals)
+            self.timeline = Timeline(self.arrivals, trace=self.trace)
         self.timeline.push(t, kind, payload)
 
     # -- public: used by SimProvider ----------------------------------------------
@@ -160,7 +191,7 @@ class Simulation:
     # -- main loop ------------------------------------------------------------------
     def run(self) -> ExperimentResult:
         if self.timeline is None:
-            self.timeline = Timeline(self.arrivals)
+            self.timeline = Timeline(self.arrivals, trace=self.trace)
         tl = self.timeline
         tl._horizon = self.config.max_sim_time_s   # config may change pre-run
         tl.push(0.0, CYCLE)
@@ -196,13 +227,22 @@ class Simulation:
         return self._result(completed, end)
 
     # -- handlers --------------------------------------------------------------------
-    def _on_arrivals(self, batch: List[Arrival]) -> None:
+    def _on_arrivals(self, batch) -> None:
         """Submit one ARRIVAL batch.  Each pod's submit_time/pending_since
         is its own arrival instant, exactly as under per-event handling;
         ``now`` jumps straight to the batch's last arrival because nothing
         can observe the intermediate instants — no other event is due
         before then (Timeline contract) and submission never reads the
-        clock."""
+        clock.  Trace mode: the batch is a ``(lo, hi)`` row range and
+        submission is the columnar bulk ingest (zero Arrival objects)."""
+        if type(batch) is tuple:
+            lo, hi = batch
+            times = self.trace.arrival_time
+            if self.first_submit is None:
+                self.first_submit = float(times[lo])
+            self.now = float(times[hi - 1])
+            self.orch.submit_trace(self.trace, lo, hi)
+            return
         if self.first_submit is None:
             self.first_submit = batch[0].time
         self.now = batch[-1].time
@@ -228,7 +268,7 @@ class Simulation:
         """A static (void-autoscaled) cluster with pending pods, nothing
         running that could free space, and no provisioning in flight can
         never make progress — bail instead of simulating to max_sim_time."""
-        if len(self.orch.pods) != len(self.arrivals):
+        if len(self.orch.pods) != self.n_arrivals:
             return False
         if stats.placed or stats.rescheduled or stats.scale_out_requests == 0:
             return False
@@ -385,7 +425,7 @@ class Simulation:
         """All jobs placed & executed: every batch SUCCEEDED and every
         service BOUND (a cluster that never fits its services never
         completed the workload — this matters for the Fig. 4 baseline)."""
-        if len(self.orch.pods) != len(self.arrivals) or not self.orch.pods:
+        if len(self.orch.pods) != self.n_arrivals or not self.orch.pods:
             return False
         if not self.orch.batch_all_done():
             return False

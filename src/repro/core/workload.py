@@ -59,6 +59,21 @@ SLOW_MEAN_S = 60.0
 MIN_JOBS_PER_PERIOD = 10
 
 
+def mix_templates(name: str):
+    """One Table-2 mix as ``(templates, probabilities)``.
+
+    The sampling distribution behind the workload: scenario generators
+    (``repro.scenarios.generators``) draw template ids from it instead of
+    materializing the finite multiset, which generalizes the paper's 50-job
+    mixes to traces of any length."""
+    if name not in WORKLOAD_MIXES:
+        raise KeyError(f"unknown workload {name!r}; one of {list(WORKLOAD_MIXES)}")
+    mix = WORKLOAD_MIXES[name]
+    templates = [JOB_TYPES[t] for t in mix]
+    total = float(sum(mix.values()))
+    return templates, [c / total for c in mix.values()]
+
+
 @dataclasses.dataclass(frozen=True)
 class Arrival:
     time: float

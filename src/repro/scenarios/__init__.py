@@ -1,0 +1,26 @@
+"""Scenario subsystem: columnar workload traces, generators, replay, sweeps.
+
+* :mod:`repro.scenarios.trace` — :class:`TraceStore`, the SoA trace that
+  replays straight into the array engine's ``PodStore`` with zero
+  per-arrival Python objects;
+* :mod:`repro.scenarios.generators` — parameterized scenario families
+  (diurnal, flash-crowd MMPP, heavy-tail durations, mix ramps,
+  autoscaler stress, multi-tenant composition);
+* :mod:`repro.scenarios.adapter` — Borg/Alibaba-style CSV ingestion with
+  resource rescaling onto a target node template;
+* :mod:`repro.scenarios.registry` — name → builder lookup behind
+  ``ExperimentSpec(scenario=...)`` and ``benchmarks/sweep_scenarios.py``.
+"""
+from repro.scenarios.adapter import CsvTraceSpec, load_csv_trace
+from repro.scenarios.generators import (AutoscalerStress, Diurnal, FlashCrowd,
+                                        HeavyTail, MixRamp, MultiTenant)
+from repro.scenarios.registry import build_scenario, names, register
+from repro.scenarios.trace import KIND_BATCH, KIND_SERVICE, TraceStore
+
+__all__ = [
+    "TraceStore", "KIND_BATCH", "KIND_SERVICE",
+    "Diurnal", "FlashCrowd", "HeavyTail", "MixRamp", "AutoscalerStress",
+    "MultiTenant",
+    "CsvTraceSpec", "load_csv_trace",
+    "build_scenario", "names", "register",
+]

@@ -131,3 +131,22 @@ def test_cost_rounding_up_per_second():
     cost.on_provision(node, 0.0)
     cost.on_deprovision(node, 10.2)     # partial second rounds up -> 11s
     assert cost.total_cost(10.2) == pytest.approx(11 * 0.011)
+
+
+def test_cost_queries_require_now_while_billing_open():
+    """Regression: total_cost()/total_node_seconds() with no `now` used to
+    price open records against now=0.0 — silently reporting $0 for every
+    running node.  With records open the queries must demand an explicit
+    time; once everything is closed, `now` is genuinely unused."""
+    cost = CostModel(price_per_s=0.011)
+    node = Node(allocatable=Resources(940, gi(3.5)))
+    cost.on_provision(node, 5.0)
+    with pytest.raises(ValueError, match="still billing"):
+        cost.total_cost()
+    with pytest.raises(ValueError, match="still billing"):
+        cost.total_node_seconds()
+    assert cost.total_cost(105.0) == pytest.approx(100 * 0.011)
+    cost.close_all(105.0)
+    # All records closed: the no-arg queries are unambiguous again.
+    assert cost.total_cost() == pytest.approx(100 * 0.011)
+    assert cost.total_node_seconds() == 100

@@ -1,0 +1,289 @@
+"""Scenario subsystem (repro.scenarios): TraceStore semantics, generator
+families, the external-CSV adapter, the registry, and — the acceptance
+property — trace replay being bind-sequence-identical to the classic
+``List[Arrival]`` path on the paper's three workloads.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ExperimentSpec, PodKind, PodSpec, Resources,
+                        build_simulation, gi, reset_id_counters,
+                        run_experiment)
+from repro.core.workload import JOB_TYPES, generate_workload
+from repro.scenarios import (AutoscalerStress, CsvTraceSpec, Diurnal,
+                             FlashCrowd, HeavyTail, MixRamp, MultiTenant,
+                             TraceStore, build_scenario, load_csv_trace,
+                             names, register)
+
+FAMILIES = [Diurnal, FlashCrowd, HeavyTail, MixRamp, AutoscalerStress,
+            MultiTenant]
+
+
+def _bind_log_run(spec: ExperimentSpec):
+    """Run one experiment with a bind spy; returns (log, result)."""
+    reset_id_counters()
+    sim = build_simulation(spec)
+    log = []
+    inner = sim.cluster.on_bind
+
+    def spy(pod):
+        log.append((pod.uid, pod.incarnation, pod.node_id, pod.bound_time))
+        inner(pod)
+
+    sim.cluster.on_bind = spy
+    result = sim.run()
+    return log, result
+
+
+class TestTraceStore:
+    def test_from_arrivals_preserves_spec_identity_and_order(self):
+        arrivals = generate_workload("mixed", seed=1)
+        tr = TraceStore.from_arrivals(arrivals)
+        assert len(tr) == len(arrivals)
+        assert np.all(np.diff(tr.arrival_time) >= 0)
+        for a, t, tid in zip(arrivals, tr.arrival_time.tolist(),
+                             tr.template_id.tolist()):
+            assert t == a.time
+            assert tr.templates[tid] is a.spec   # identity, not equality
+
+    def test_to_arrivals_roundtrip(self):
+        arrivals = generate_workload("bursty", seed=2)
+        back = TraceStore.from_arrivals(arrivals).to_arrivals()
+        assert [(a.time, id(a.spec)) for a in arrivals] == \
+               [(a.time, id(a.spec)) for a in back]
+
+    def test_unsorted_input_stable_sorted(self):
+        s = JOB_TYPES["batch_small"]
+        s2 = JOB_TYPES["batch_med"]
+        tr = TraceStore([s, s2], [0, 1, 0, 1], [5.0, 1.0, 1.0, 0.5])
+        assert tr.arrival_time.tolist() == [0.5, 1.0, 1.0, 5.0]
+        # stable: the two t=1.0 rows keep construction order (tid 1 then 0)
+        assert tr.template_id.tolist() == [1, 1, 0, 0]
+
+    def test_slice_and_time_window(self):
+        tr = build_scenario("diurnal", seed=0, n_jobs=200)
+        mid = tr.slice(50, 150)
+        assert len(mid) == 100
+        assert mid.arrival_time[0] == tr.arrival_time[50]
+        # real copies: mutating the parent never corrupts a slice
+        old = float(mid.arrival_time[0])
+        tr.arrival_time[50] = -1.0
+        assert mid.arrival_time[0] == old
+        tr.arrival_time[50] = old
+        t0, t1 = float(tr.arrival_time[20]), float(tr.arrival_time[120])
+        win = tr.time_window(t0, t1)
+        assert np.all((win.arrival_time >= t0) & (win.arrival_time < t1))
+
+    def test_merge_is_time_sorted_and_complete(self):
+        a = build_scenario("diurnal", seed=0, n_jobs=100)
+        b = build_scenario("heavy-tail", seed=1, n_jobs=120)
+        m = TraceStore.merge([a, b])
+        assert len(m) == 220
+        assert np.all(np.diff(m.arrival_time) >= 0)
+        assert m.count_kinds()[0] == a.count_kinds()[0] + b.count_kinds()[0]
+
+    @pytest.mark.parametrize("suffix", [".json", ".npz"])
+    def test_save_load_bit_exact(self, tmp_path, suffix):
+        tr = build_scenario("heavy-tail", seed=4, n_jobs=150)
+        path = str(tmp_path / f"trace{suffix}")
+        tr.save(path)
+        back = TraceStore.load(path)
+        assert back.name == tr.name
+        assert np.array_equal(back.arrival_time, tr.arrival_time)
+        assert np.array_equal(back.template_id, tr.template_id)
+        assert np.array_equal(back.duration_s, tr.duration_s)  # per-row tails
+        assert [dataclasses.asdict(s) for s in back.templates] == \
+               [dataclasses.asdict(s) for s in tr.templates]
+
+    def test_validation(self):
+        s = JOB_TYPES["batch_small"]
+        with pytest.raises(ValueError):
+            TraceStore([s], [0, 1], [0.0, 1.0])       # tid out of range
+        with pytest.raises(ValueError):
+            TraceStore([s], [0], [0.0, 1.0])          # ragged columns
+        with pytest.raises(ValueError):
+            TraceStore([s], [0], [0.0], duration_s=[1.0, 2.0])
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_deterministic_and_sorted(self, family):
+        cfg = family()
+        kw = {} if family is MultiTenant else {"n_jobs": 200}
+        cfg = dataclasses.replace(cfg, **kw)
+        a, b = cfg.build(seed=7), cfg.build(seed=7)
+        assert np.array_equal(a.arrival_time, b.arrival_time)
+        assert np.array_equal(a.template_id, b.template_id)
+        assert np.array_equal(a.duration_s, b.duration_s)
+        assert np.all(np.diff(a.arrival_time) >= 0)
+        c = cfg.build(seed=8)
+        assert not np.array_equal(a.arrival_time, c.arrival_time)
+
+    def test_heavy_tail_overrides_durations(self):
+        tr = HeavyTail(n_jobs=300, sigma=1.5).build(seed=0)
+        t_dur = np.asarray([s.duration_s for s in tr.templates])
+        assert (tr.duration_s != t_dur[tr.template_id]).any()
+        assert tr.duration_s.max() <= HeavyTail.cap_s
+        assert tr.duration_s.min() >= 1.0
+        assert (tr.kind == 0).all()   # batch-only family
+
+    def test_pareto_dist_and_bad_dist(self):
+        tr = HeavyTail(n_jobs=100, dist="pareto").build(seed=0)
+        assert (tr.duration_s >= HeavyTail.median_s).all()
+        with pytest.raises(ValueError):
+            HeavyTail(dist="weibull").build()
+
+    def test_mix_ramp_service_share_ramps(self):
+        tr = MixRamp(n_jobs=2000, service_frac_start=0.0,
+                     service_frac_end=0.8).build(seed=0)
+        first, last = tr.kind[:500], tr.kind[-500:]
+        assert (first == 1).mean() < (last == 1).mean()
+
+    def test_flash_crowd_is_burstier_than_poisson(self):
+        """Burst regimes must show up as gap-CV well above the
+        exponential's 1.0."""
+        tr = FlashCrowd(n_jobs=2000).build(seed=0)
+        gaps = np.diff(tr.arrival_time)
+        cv = gaps.std() / gaps.mean()
+        assert cv > 1.3, cv
+
+    def test_multi_tenant_merges_defaults(self):
+        tr = MultiTenant().build(seed=0)
+        assert len(tr) == 2000
+        assert np.all(np.diff(tr.arrival_time) >= 0)
+        assert tr.count_kinds()[1] > 0    # services present via diurnal mix
+
+    def test_multi_tenant_n_jobs_scales_default_trio(self):
+        assert len(MultiTenant(n_jobs=1000).build(seed=0)) == 1000
+        # registry path threads the override through too
+        assert len(build_scenario("multi-tenant", seed=0, n_jobs=600)) == 600
+        with pytest.raises(ValueError, match="explicit tenant"):
+            MultiTenant(tenants=(Diurnal(n_jobs=10),), n_jobs=50).build()
+
+
+class TestRegistry:
+    def test_builtins_present(self):
+        got = names()
+        for n in ("paper-bursty", "paper-slow", "paper-mixed", "diurnal",
+                  "flash-crowd", "heavy-tail", "mix-ramp", "scale-stress",
+                  "multi-tenant"):
+            assert n in got
+
+    def test_build_with_job_override(self):
+        assert len(build_scenario("diurnal", seed=0, n_jobs=123)) == 123
+        # paper workloads are Table-2-fixed at 50 jobs; n_jobs is ignored
+        assert len(build_scenario("paper-mixed", seed=0, n_jobs=123)) == 50
+
+    def test_unknown_and_duplicate(self):
+        with pytest.raises(KeyError):
+            build_scenario("no-such-scenario")
+        with pytest.raises(KeyError):
+            register("diurnal", lambda seed, n: None)
+
+
+class TestReplayParity:
+    """Acceptance property: TraceStore replay of the paper's workloads is
+    bind-sequence-identical to the ``List[Arrival]`` path."""
+
+    @pytest.mark.parametrize("workload", ["slow", "bursty", "mixed"])
+    def test_paper_workload_bind_sequences_identical(self, workload):
+        def spec(**kw):
+            return ExperimentSpec(workload=workload, seed=0,
+                                  rescheduler="binding",
+                                  autoscaler="binding", **kw)
+
+        log_arrivals, r_arr = _bind_log_run(spec())
+        trace = TraceStore.from_arrivals(generate_workload(workload, seed=0))
+        log_trace, r_tr = _bind_log_run(spec(trace=trace))
+        assert log_arrivals, "workload produced no bindings"
+        assert log_trace == log_arrivals
+        assert dataclasses.asdict(r_tr) == dataclasses.asdict(r_arr)
+
+    def test_trace_replay_array_vs_object_engine(self):
+        trace = build_scenario("heavy-tail", seed=5, n_jobs=400)
+        spec = ExperimentSpec(trace=trace, rescheduler="binding",
+                              autoscaler="binding")
+        log_a, r_a = _bind_log_run(spec)
+        log_o, r_o = _bind_log_run(dataclasses.replace(spec, engine="object"))
+        assert log_a and log_a == log_o
+        assert dataclasses.asdict(r_a) == dataclasses.asdict(r_o)
+
+
+class TestExperimentIntegration:
+    def test_scenario_field_end_to_end(self):
+        reset_id_counters()
+        r = run_experiment(ExperimentSpec(scenario="diurnal",
+                                          scenario_jobs=300,
+                                          rescheduler="binding",
+                                          autoscaler="binding"))
+        assert r.completed
+        assert r.workload == "diurnal"
+        assert r.cost > 0
+
+    def test_trace_label_and_deep_audit(self):
+        reset_id_counters()
+        trace = build_scenario("mix-ramp", seed=1, n_jobs=300)
+        spec = ExperimentSpec(trace=trace, autoscaler="binding")
+        sim = build_simulation(spec)
+        result = sim.run()
+        assert result.completed
+        # the trace-native run leaves columns/mirror/objects consistent
+        sim.cluster.check_invariants(deep=True)
+
+    def test_conflicting_sources_rejected(self):
+        arrivals = generate_workload("slow", seed=0)
+        trace = TraceStore.from_arrivals(arrivals)
+        with pytest.raises(ValueError, match="arrivals \\+ trace"):
+            build_simulation(ExperimentSpec(arrivals=arrivals, trace=trace))
+        with pytest.raises(ValueError, match="trace \\+ scenario"):
+            build_simulation(ExperimentSpec(trace=trace, scenario="diurnal"))
+        with pytest.raises(ValueError, match="scenario_jobs"):
+            build_simulation(ExperimentSpec(scenario_jobs=100))
+
+    def test_object_engine_fallback_materializes_once(self):
+        trace = build_scenario("paper-slow", seed=0)
+        reset_id_counters()
+        sim = build_simulation(ExperimentSpec(trace=trace, engine="object"))
+        assert sim.trace is None           # converted to the arrival list
+        assert sim.n_arrivals == len(trace)
+        assert sim.run().completed
+
+
+class TestCsvAdapter:
+    def _write_csv(self, tmp_path, rows, header=False):
+        path = tmp_path / "tasks.csv"
+        lines = (["arrival,cpu,mem,duration"] if header else [])
+        lines += [",".join(str(v) for v in r) for r in rows]
+        path.write_text("\n".join(lines) + "\n")
+        return str(path)
+
+    def test_fractional_rescale_and_quantization(self, tmp_path):
+        from repro.cloud.adapter import M2_SMALL
+        rows = [(0.0, 0.5, 0.25, 300.0),
+                (10.0, 0.5, 0.25, 60.0),
+                (20.0, 0.125, 0.03, 600.0)]
+        path = self._write_csv(tmp_path, rows, header=True)
+        tr = load_csv_trace(path, spec=CsvTraceSpec(skip_header=1))
+        assert len(tr) == 3
+        assert len(tr.templates) == 2        # two distinct quantized shapes
+        alloc = M2_SMALL.allocatable
+        assert tr.cpu_m[0] == round(0.5 * alloc.cpu_m / 50) * 50
+        assert tr.duration_s.tolist() == [300.0, 60.0, 600.0]
+        assert (tr.kind == 0).all()
+
+    def test_csv_trace_runs_end_to_end(self, tmp_path):
+        rng = np.random.default_rng(0)
+        rows = [(float(t), float(c), float(m), float(d))
+                for t, c, m, d in zip(
+                    np.cumsum(rng.exponential(5.0, 60)),
+                    rng.uniform(0.05, 0.4, 60),
+                    rng.uniform(0.05, 0.4, 60),
+                    rng.uniform(30.0, 300.0, 60))]
+        path = self._write_csv(tmp_path, rows)
+        tr = load_csv_trace(path, name="borg-slice")
+        reset_id_counters()
+        r = run_experiment(ExperimentSpec(trace=tr, autoscaler="binding"))
+        assert r.completed
+        assert r.workload == "borg-slice"
