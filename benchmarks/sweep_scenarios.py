@@ -73,6 +73,9 @@ def run_cell(trace, scheduler: str, autoscaler: str, rescheduler: str,
         "node_seconds": r.node_seconds,
         "evictions": r.evictions,
         "scale_outs": r.scale_outs, "scale_ins": r.scale_ins,
+        "failures_injected": r.failures_injected,
+        "preemption_notices": r.preemption_notices,
+        "lost_work_s": round(r.lost_work_s, 3),
         "wall_s": round(wall, 3),
     }
 

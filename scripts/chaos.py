@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Chaos harness CLI: resilience sweep + chaos-parity smoke.
+
+Default mode runs every chaos scenario (``repro.scenarios.chaos``) through
+`run_chaos_cell` and writes a Fig-3-style resilience table — recovery
+times, lost work, eviction counts and the cost delta against the same
+trace without disruptions::
+
+    python scripts/chaos.py                       # full resilience table
+    python scripts/chaos.py --scenarios spot-spike --seed 7
+    python scripts/chaos.py --smoke               # the CI gate
+
+``--smoke`` is the seeded CI gate.  Per scenario it
+
+1. runs the **unspied** array engine (column-native bulk eviction path)
+   with `PodStore.audit_columns` after every disruption event;
+2. captures the spied event log on both engines and asserts they are
+   bit-identical;
+3. asserts the array trace matches the committed golden chaos fixture
+   (``tests/data/golden_chaos_trace.json``, regenerate with
+   ``PYTHONPATH=src python tests/test_chaos_trace.py --regen``);
+
+then writes the resilience table for the smoke grid.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core import reset_id_counters
+from repro.core.experiment import build_simulation
+from repro.scenarios.chaos import (CHAOS_SCENARIOS, GOLDEN_JOBS,
+                                   capture_chaos_trace, chaos_spec,
+                                   run_chaos_cell)
+
+GOLDEN_FIXTURE = os.path.join(REPO, "tests", "data",
+                              "golden_chaos_trace.json")
+
+
+def run_fast_path_audited(name: str, seed: int, n_jobs) -> dict:
+    """Unspied array run — the column-native bulk-eviction fast path —
+    with a full column audit after every disruption event."""
+    reset_id_counters()
+    sim = build_simulation(chaos_spec(name, seed=seed, n_jobs=n_jobs,
+                                      engine="array"))
+    audits = [0]
+
+    def on_disruption(s, kind):
+        s.cluster.pod_store.audit_columns(s.cluster)
+        audits[0] += 1
+
+    sim.on_disruption = on_disruption
+    result = sim.run()
+    assert result.completed, f"{name}: fast-path chaos run did not complete"
+    assert audits[0] > 0, f"{name}: no disruption events fired"
+    return {"audits": audits[0], "evictions": result.evictions,
+            "failures_injected": result.failures_injected}
+
+
+def smoke(seed: int, out: str) -> None:
+    with open(GOLDEN_FIXTURE) as f:
+        golden = json.load(f)
+    cells = []
+    for name in CHAOS_SCENARIOS:
+        fast = run_fast_path_audited(name, seed, GOLDEN_JOBS)
+        print(f"chaos.{name}: fast-path OK "
+              f"({fast['audits']} audits, {fast['evictions']} evictions)")
+
+        arr = capture_chaos_trace(name, "array", seed=seed,
+                                  n_jobs=GOLDEN_JOBS)
+        obj = capture_chaos_trace(name, "object", seed=seed,
+                                  n_jobs=GOLDEN_JOBS)
+        assert arr == obj, f"{name}: engines disagree under disruption"
+        print(f"chaos.{name}: engine parity OK "
+              f"({len(arr['binds'])} binds bit-identical)")
+
+        if seed == 0:
+            assert name in golden, f"{name} missing from golden chaos fixture"
+            for key in golden[name]:
+                assert arr[key] == golden[name][key], (
+                    f"{name}: golden chaos drift in {key!r} — if intentional, "
+                    f"regenerate with `PYTHONPATH=src python "
+                    f"tests/test_chaos_trace.py --regen`")
+            print(f"chaos.{name}: golden fixture OK")
+        else:
+            print(f"chaos.{name}: golden fixture skipped (seed={seed} != 0)")
+
+        cells.append(run_chaos_cell(name, seed=seed, n_jobs=GOLDEN_JOBS))
+    write_table(cells, out)
+    print(f"chaos smoke OK: {len(cells)} scenarios")
+
+
+def write_table(cells, out: str) -> None:
+    report = {"bench": "chaos_resilience",
+              "generated_unix_s": int(time.time()), "cells": cells}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    for c in cells:
+        print(f"chaos.{c['scenario']},{1e6 * c['wall_s']:.0f},"
+              f"{c['cost_delta']}")
+    print(f"# wrote {out}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios",
+                    help=f"default {','.join(CHAOS_SCENARIOS)}")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="trace length override (default: family default)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="array")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fast-path audits + engine parity + "
+                         "golden chaos fixture, at the fixture's job count")
+    ap.add_argument("--out", default="CHAOS_resilience.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        smoke(args.seed, args.out)
+        return
+
+    scenarios = (tuple(s for s in args.scenarios.split(",") if s)
+                 if args.scenarios else tuple(CHAOS_SCENARIOS))
+    cells = [run_chaos_cell(name, seed=args.seed, n_jobs=args.jobs,
+                            engine=args.engine)
+             for name in scenarios]
+    write_table(cells, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,13 @@ assert all(c["cost"] > 0 for c in cells), "a completed cell priced at $0"
 print(f"scenario sweep OK: {len(cells)} cells over {scenarios}")
 EOF
 
+echo "== chaos smoke (seeded disruption schedules, parity + column audits) =="
+# The disruption subsystem's end-to-end gate: per chaos scenario, the
+# unspied array fast path runs with PodStore.audit_columns after every
+# disruption event, both engines must produce bit-identical event logs,
+# and the array trace must match the committed golden chaos fixture.
+python scripts/chaos.py --smoke --out /tmp/CHAOS_smoke.json
+
 echo "== trace-replay gate (100k-arrival columnar ingest, array engine) =="
 # Regression gate for the trace-native submission path (Timeline ->
 # submit_trace -> PodStore.ingest_trace): end-to-end pods/s on a 100k-

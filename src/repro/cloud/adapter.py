@@ -54,10 +54,14 @@ TPU_V5E_HOST = NodeTemplate(
 class CloudAdapter(NodeProvider):
     """NodeProvider + billing wiring, shared by all adapters."""
 
-    def __init__(self, template: NodeTemplate, cost: CostModel):
+    def __init__(self, template: NodeTemplate, cost: CostModel,
+                 straggler_injector: Optional[object] = None):
         self.template = template
         self.cost = cost
         self.launched = 0
+        # repro.core.failures.StragglerInjector (or None): applied to every
+        # launched node so a deterministic fraction boots slow.
+        self.straggler_injector = straggler_injector
 
     @abc.abstractmethod
     def _schedule_ready(self, node: Node, ready_at: float) -> None:
@@ -76,6 +80,8 @@ class CloudAdapter(NodeProvider):
         node = Node(allocatable=self.template.allocatable,
                     node_type=self.template.name, autoscaled=True,
                     provision_time=now)
+        if self.straggler_injector is not None:
+            self.straggler_injector.maybe_slow(node)
         self.cost.on_provision(node, now)
         self.launched += 1
         self._schedule_ready(node, now + self.template.provisioning_delay_s)
@@ -88,8 +94,9 @@ class CloudAdapter(NodeProvider):
 class SimCloudProvider(CloudAdapter):
     """Provisioning-delay model for the discrete-event simulation."""
 
-    def __init__(self, template: NodeTemplate, cost: CostModel):
-        super().__init__(template, cost)
+    def __init__(self, template: NodeTemplate, cost: CostModel,
+                 straggler_injector: Optional[object] = None):
+        super().__init__(template, cost, straggler_injector)
         self._sim = None
 
     def attach(self, sim) -> None:

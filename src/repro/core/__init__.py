@@ -6,9 +6,12 @@ from repro.core.autoscaler import (AUTOSCALERS, Autoscaler, BindingAutoscaler,
                                    VoidAutoscaler)
 from repro.core.cluster import Cluster, Node, NodeState
 from repro.core.cost import CostModel
+from repro.core.disruption import (CrashLoopInjector, DisruptionInjector,
+                                   SpotReclaimInjector, ZoneOutageInjector)
 from repro.core.experiment import (ExperimentSpec, build_simulation,
                                    run_all_combos, run_experiment,
                                    run_k8s_baseline)
+from repro.core.failures import FailureInjector, StragglerInjector
 from repro.core.metrics import ExperimentResult, MetricsCollector
 from repro.core.orchestrator import Orchestrator
 from repro.core.pods import Pod, PodKind, PodPhase, PodSpec
@@ -43,7 +46,9 @@ def reset_id_counters() -> None:
 __all__ = [
     "AUTOSCALERS", "Autoscaler", "BindingAutoscaler", "NodeProvider",
     "SimpleAutoscaler", "VoidAutoscaler", "Cluster", "Node", "NodeState",
-    "CostModel", "ExperimentSpec", "build_simulation", "run_all_combos",
+    "CostModel", "CrashLoopInjector", "DisruptionInjector",
+    "SpotReclaimInjector", "ZoneOutageInjector", "FailureInjector",
+    "StragglerInjector", "ExperimentSpec", "build_simulation", "run_all_combos",
     "run_experiment", "run_k8s_baseline", "ExperimentResult",
     "MetricsCollector", "Orchestrator", "Pod", "PodKind", "PodPhase",
     "PodSpec", "RESCHEDULERS", "BindingRescheduler", "NonBindingRescheduler",

@@ -61,6 +61,18 @@ class Autoscaler(abc.ABC):
     def notify_node_ready(self, node: Node) -> None:
         """Provider callback once a node joins the cluster."""
 
+    def notify_node_lost(self, node: Node) -> None:
+        """``node`` died (failure/reclaim), possibly while still
+        PROVISIONING: drop any provisioning association so its pods can
+        trigger replacement capacity instead of staying stranded.
+        Default: stateless autoscalers have nothing to clean up."""
+
+    def notify_preemption_notice(self, cluster: Cluster, node: Node,
+                                 now: float) -> None:
+        """``node`` received a spot reclaim notice and will be killed when
+        the notice window closes (``Simulation._on_node_notice``).
+        Default: do nothing — react after the kill like any failure."""
+
     # -- shared Alg. 6 body ----------------------------------------------------
     @staticmethod
     def _step1_candidates(cluster: Cluster) -> List[Node]:
@@ -190,6 +202,7 @@ class BindingAutoscaler(Autoscaler):
         super().__init__(provider)
         self._tracked: Dict[str, _ProvisioningTracker] = {}
         self._pod_to_node: Dict[int, str] = {}
+        self._noticed: set = set()   # node ids already given a replacement
 
     def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
         if pod.uid in self._pod_to_node:
@@ -215,6 +228,42 @@ class BindingAutoscaler(Autoscaler):
         for uid in tracker.assigned:
             self._pod_to_node.pop(uid, None)
         # The scheduler (not the autoscaler) places pods on the new node.
+
+    def notify_node_lost(self, node: Node) -> None:
+        """Release the association state of a dead node.  Without this, a
+        node failing while PROVISIONING leaks its tracker and every pod
+        assigned to it stays permanently stranded (``scale_out``'s
+        "already associated" early-return never launches a replacement)."""
+        self._noticed.discard(node.node_id)
+        tracker = self._tracked.pop(node.node_id, None)
+        if tracker is None:
+            return
+        for uid in tracker.assigned:
+            self._pod_to_node.pop(uid, None)
+
+    def notify_preemption_notice(self, cluster: Cluster, node: Node,
+                                 now: float) -> None:
+        """Launch replacement capacity *during* the notice window instead
+        of after the kill: the replacement boots while the doomed node
+        drains, so evictees re-bind one provisioning delay sooner.  The
+        evictees associate with the booting replacement through the
+        normal ``scale_out`` path once the kill re-pends them; an empty
+        replacement (the workload drained during the window) is reaped by
+        scale-in."""
+        if node.node_id in self._noticed:
+            return   # one replacement per reclaimed node
+        self._noticed.add(node.node_id)
+        if not node.pods:
+            return   # nothing to re-home; later arrivals scale out normally
+        replacement = self._launch_replacement(node, now)
+        cluster.add_node(replacement)
+        self._tracked[replacement.node_id] = _ProvisioningTracker(
+            node=replacement, assigned={})
+
+    def _launch_replacement(self, node: Node, now: float) -> Node:
+        """Like-for-like replacement; the heterogeneous subclass launches
+        the reclaimed node's own instance type."""
+        return self.provider.launch_node(now)
 
     def scale_in(self, cluster: Cluster, now: float) -> List[str]:
         return self._scale_in_impl(cluster, now)

@@ -157,6 +157,9 @@ class Node:
     speed_factor: float = 1.0           # <1.0 models a straggler node
     failed: bool = False
     oversub: bool = False               # request-sum may exceed allocatable
+    # Availability-zone label for correlated failures (assigned by
+    # disruption.ZoneOutageInjector; "" == unlabelled, never targeted).
+    zone: str = ""
 
     def __post_init__(self):
         if not self.node_id:
@@ -466,6 +469,104 @@ class Cluster:
             self.pod_store.sync_unbind(pod)
         if self.on_unbind is not None:
             self.on_unbind(pod)
+
+    def fail_node_store(self, node: Node, now: float,
+                        on_row=None) -> List[int]:
+        """Bulk-evict every resident of a failing node straight through the
+        SoA pod columns — the shell-less fast path of
+        ``Simulation._on_node_fail``.
+
+        Semantically identical to calling :meth:`unbind` (``failed=True``)
+        per resident in residency (insertion) order.  Residents that carry
+        a shell — and checkpointable residents whose eviction would bank
+        durable progress, which ``Pod._restore``'s progress-is-zero
+        invariant requires to materialize — take the full object
+        transition; everything else re-pends as pure column writes: node
+        accounting decrements in the identical scalar order, the pending
+        interval the bind opened recorded in
+        ``PodStore.closed_intervals``, and lost work accumulated in the
+        ``lost_work_s`` column with the identical float ops ``Pod.evict``
+        applies (a shell-less row has ``progress_s == 0`` by
+        construction, so ``0.0 + ran`` is bit-exact).  The mirror syncs
+        once after the loop.  ``on_row`` is the orchestrator's row-level
+        ``on_unbind`` equivalent for column-evicted rows; shelled
+        residents still go through ``self.on_unbind``.  The caller
+        guarantees no external ``on_unbind`` observer is attached
+        (``Simulation._on_node_fail`` detects one and falls back to the
+        per-pod object loop so observers see real pods, in order).
+
+        Returns the evicted uids in residency order (the disruption log's
+        victim list)."""
+        store = self.pod_store
+        shells = store.shells
+        index = store.index
+        flag_col = store.flags
+        bt_col = store.bound_time
+        ps_col = store.pending_since
+        lost_col = store.lost_work_s
+        cpu_col = store.cpu_m
+        mem_col = store.mem_mb
+        spec_of = store._spec_by_id
+        sid_col = store.spec_id
+        phase_col = store.phase
+        slot_col = store.node_slot
+        inc_col = store.incarnation
+        closed = store.closed_intervals
+        F_BATCH = _engine.POD_F_BATCH
+        F_MOVE = _engine.POD_F_MOVEABLE
+        F_CKPT = _engine.POD_F_CHECKPOINTABLE
+        on_unbind = self.on_unbind
+        victims = list(dict.keys(node.pods))
+        for uid in victims:
+            row = index[uid]
+            pod = shells.get(row)
+            f = flag_col[row]
+            if pod is None and f & F_CKPT:
+                iv = spec_of[sid_col[row]].checkpoint_interval_s or 1.0
+                total = 0.0 + (now - bt_col[row])
+                if (total // iv) * iv > 0.0:
+                    # Eviction would bank durable progress — materialize so
+                    # the shell carries it (Pod._restore invariant).
+                    pod = store.pod_at(row)
+            if pod is not None:
+                del node.pods[uid]
+                node._account_remove(pod)
+                pod.evict(now, failed=True)
+                store.sync_unbind(pod)
+                if on_unbind is not None:
+                    on_unbind(pod)
+                continue
+            dict.__delitem__(node.pods, uid)
+            # Same -= order as Node._account_remove, on the same scalars.
+            node._used_cpu_m -= cpu_col[row]
+            node._used_mem_mb -= mem_col[row]
+            if f & F_MOVE:
+                node._moveable_count -= 1
+            if f & F_BATCH:
+                node._batch_count -= 1
+            bt = bt_col[row]
+            if f & F_BATCH:
+                ran = now - bt
+                if f & F_CKPT:
+                    # Salvage is provably zero (guarded above): the whole
+                    # run since bind is lost, via Pod.evict's exact ops.
+                    iv = spec_of[sid_col[row]].checkpoint_interval_s or 1.0
+                    total = 0.0 + ran
+                    lost_col[row] += total - (total // iv) * iv
+                else:
+                    lost_col[row] += 0.0 + ran
+            # Pod.evict column semantics: close the interval the bind
+            # opened, re-pend as a fresh incarnation.
+            closed.setdefault(row, []).append(bt - ps_col[row])
+            phase_col[row] = _engine.POD_PENDING
+            slot_col[row] = -1
+            bt_col[row] = None
+            ps_col[row] = now
+            inc_col[row] += 1
+            if on_row is not None:
+                on_row(row)
+        node._notify_usage()
+        return victims
 
     def complete(self, pod: Pod, now: float) -> None:
         """A batch pod ran to completion: release capacity, mark SUCCEEDED."""

@@ -46,12 +46,23 @@ class CostModel:
 
     # -- events ---------------------------------------------------------------
     def on_provision(self, node: Node, now: float) -> None:
-        assert node.node_id not in self.records, node.node_id
+        open_rec = self.records.get(node.node_id)
+        if open_rec is not None:
+            raise ValueError(
+                f"node {node.node_id} is already billing (open record since "
+                f"t={open_rec.start}): double provision — deprovision it "
+                f"before provisioning again")
         self.records[node.node_id] = BillingRecord(
             node_id=node.node_id, node_type=node.node_type, start=now)
 
     def on_deprovision(self, node: Node, now: float) -> None:
-        rec = self.records.pop(node.node_id)
+        rec = self.records.pop(node.node_id, None)
+        if rec is None:
+            raise ValueError(
+                f"node {node.node_id} has no open billing record: double "
+                f"deprovision (a failed/reclaimed node is already retired "
+                f"by the NODE_FAIL handler — don't also terminate it) or "
+                f"a node this CostModel never provisioned")
         rec.end = now
         self.closed.append(rec)
 

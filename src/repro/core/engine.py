@@ -618,6 +618,12 @@ class PodStore:
         self.finish_time = []              # float | None
         self.incarnation = []              # int
         self.flags = bytearray()           # POD_F_* bits, from the spec
+        self.lost_work_s = []              # float (Σ executed-but-not-durable)
+        # Pending intervals closed by column-native bulk evictions
+        # (Cluster.fail_node_store) for rows that never had a shell; a
+        # later materialization transfers them onto the Pod and drops the
+        # entry.  row -> [interval, ...]
+        self.closed_intervals = {}
         # -- interned spec table ----------------------------------------------
         # Keyed by id(spec), not value: shells must carry the *identical*
         # spec object the seed path would have stored (``pod.spec is
@@ -693,6 +699,7 @@ class PodStore:
         self.incarnation.extend([0] * n)
         spec_flags = self._spec_flags
         self.flags.extend(bytes(spec_flags[s] for s in sids))
+        self.lost_work_s.extend([0.0] * n)
         self.n_rows = first + n
         index = self.index
         for row, u in enumerate(uids, first):
@@ -736,6 +743,7 @@ class PodStore:
         self.incarnation.extend([0] * n)
         spec_flags = self._spec_flags
         self.flags.extend(bytes(spec_flags[s] for s in sids))
+        self.lost_work_s.extend([0.0] * n)
         self.n_rows = first + n
         index = self.index
         for row, u in enumerate(uids, first):
@@ -771,6 +779,7 @@ class PodStore:
         self.finish_time.append(pod.finish_time)
         self.incarnation.append(pod.incarnation)
         self.flags.append(self._spec_flags[sid])
+        self.lost_work_s.append(pod.lost_work_s)
         self.shells[row] = pod
         return row
 
@@ -794,6 +803,15 @@ class PodStore:
                 # replace costs nothing on the hot path.
                 spec = dataclasses.replace(
                     spec, duration_s=self.duration_s[row])
+            # Intervals closed while the row was shell-less: bulk evictions
+            # recorded them in closed_intervals (chronological), and an open
+            # binding closes with the same `bound_time - pending_since`
+            # float op Pod.bind applies — so the shell's list is exactly
+            # what the seed object would carry.
+            closed = self.closed_intervals.pop(row, None)
+            intervals = list(closed) if closed is not None else []
+            if bt is not None:
+                intervals.append(bt - self.pending_since[row])
             pod = Pod._restore(
                 spec=spec,
                 submit_time=self.submit_time[row],
@@ -804,11 +822,8 @@ class PodStore:
                 bound_time=bt,
                 finish_time=self.finish_time[row],
                 incarnation=self.incarnation[row],
-                # A store-resident pod is never evicted without materializing
-                # first, so it has at most the one interval its bind closed:
-                # the same `now - pending_since` float op Pod.bind applies.
-                pending_intervals=([bt - self.pending_since[row]]
-                                   if bt is not None else []),
+                pending_intervals=intervals,
+                lost_work_s=self.lost_work_s[row],
             )
             self.shells[row] = pod
         return pod
@@ -834,6 +849,7 @@ class PodStore:
         self.bound_time[row] = None
         self.pending_since[row] = pod.pending_since
         self.incarnation[row] = pod.incarnation
+        self.lost_work_s[row] = pod.lost_work_s
 
     def sync_complete(self, pod) -> None:
         row = self.index.get(pod.uid)
@@ -856,11 +872,15 @@ class PodStore:
         shells = self.shells
         ps = self.pending_since
         bt = self.bound_time
+        closed = self.closed_intervals
         for row in range(self.n_rows):
             pod = shells.get(row)
             if pod is not None:
                 out.extend(pod.pending_intervals)
             else:
+                ci = closed.get(row)
+                if ci is not None:
+                    out.extend(ci)
                 b = bt[row]
                 if b is not None:
                     out.append(b - ps[row])
@@ -870,6 +890,13 @@ class PodStore:
         """Σ incarnation — the seed's eviction count (columns are synced on
         every eviction, so no shell walk is needed)."""
         return sum(self.incarnation)
+
+    def total_lost_work_s(self) -> float:
+        """Σ lost_work_s over every row — bulk evictions write the column
+        directly, object-path evictions sync it, so no shell walk is
+        needed and the left-fold order (row == uid == submission order)
+        matches the object engine's ``sum`` over ``orch.pods``."""
+        return sum(self.lost_work_s, 0.0)
 
     # -- consistency (deep periodic invariant check) ---------------------------
     def audit_columns(self, cluster) -> None:
@@ -955,6 +982,9 @@ class PodStore:
             assert self.bound_time[row] == pod.bound_time, pod
             assert self.finish_time[row] == pod.finish_time, pod
             assert self.incarnation[row] == pod.incarnation, pod
+            assert self.lost_work_s[row] == pod.lost_work_s, pod
+            assert row not in self.closed_intervals, \
+                f"closed_intervals survived materialization for row {row}"
             if pod.phase is PodPhase.BOUND:
                 slot = self.node_slot[row]
                 assert slot >= 0 and node_ids[slot] == pod.node_id, pod
@@ -979,6 +1009,7 @@ class PodStore:
                 assert self.bound_time[row] == pod.bound_time, pod
                 assert self.finish_time[row] == pod.finish_time, pod
                 assert self.incarnation[row] == pod.incarnation, pod
+                assert self.lost_work_s[row] == pod.lost_work_s, pod
                 if pod.phase == PodPhase.BOUND:
                     slot = self.node_slot[row]
                     assert slot >= 0

@@ -40,6 +40,11 @@ class ExperimentSpec:
     cycle_period_s: float = 10.0
     failure_injector: object = None
     straggler_threshold: float = 0.0
+    # repro.core.failures.StragglerInjector — wired into the provider's
+    # launch path so a deterministic fraction of autoscaled nodes boots
+    # slow; pair with straggler_threshold > 0 to exercise the eviction
+    # policy that moves checkpointable batch work off them.
+    straggler_injector: object = None
     arrivals: Optional[List[Arrival]] = None   # override the workload trace
     # Columnar workload sources (repro.scenarios): a TraceStore replayed
     # natively through the array engine's bulk ingest, or a registry
@@ -104,7 +109,8 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
     from repro.cloud.adapter import M2_SMALL, SimCloudProvider
 
     cost = CostModel(price_per_s=PRICE_PER_S)
-    provider = SimCloudProvider(spec.template or M2_SMALL, cost)
+    provider = SimCloudProvider(spec.template or M2_SMALL, cost,
+                                straggler_injector=spec.straggler_injector)
     use_arrays = None if spec.engine is None else (spec.engine != "object")
     cluster = Cluster(use_arrays=use_arrays, wave_select=spec.wave_select)
 

@@ -9,7 +9,13 @@ The paper assumes reliable VMs; a 1000+-node fleet cannot.  This module adds:
   This is exactly the paper's machinery reused as a *recovery* mechanism.
 * `StragglerInjector` — marks a fraction of nodes slow (speed_factor < 1);
   the orchestrator's straggler policy evicts checkpointable batch pods from
-  slow nodes so they finish elsewhere.
+  slow nodes so they finish elsewhere.  Wire it into the launch path via
+  ``ExperimentSpec.straggler_injector``.
+
+Spot reclaims (notice-before-kill), correlated zone outages and pod
+crash-loops live in `repro.core.disruption`; they speak this module's
+``prime``/``arm_node`` injector protocol and compose with `FailureInjector`
+through `disruption.DisruptionInjector`.
 """
 from __future__ import annotations
 

@@ -40,6 +40,9 @@ class InstanceCatalog:
     def price_table(self) -> Dict[str, float]:
         return {t.name: t.price_per_s for t in self.types}
 
+    def type_by_name(self, name: str) -> Optional[InstanceType]:
+        return next((t for t in self.types if t.name == name), None)
+
     def cheapest_fitting(self, req: Resources) -> Optional[InstanceType]:
         feasible = [t for t in self.types if req.fits_in(t.allocatable)]
         if not feasible:
@@ -120,3 +123,10 @@ class HeterogeneousBindingAutoscaler(BindingAutoscaler):
         self._tracked[node.node_id] = _ProvisioningTracker(
             node=node, assigned={pod.uid: pod.requests})
         self._pod_to_node[pod.uid] = node.node_id
+
+    def _launch_replacement(self, node: Node, now: float) -> Node:
+        """Replace a reclaimed spot node with its own instance type (the
+        workload that fit there fits its twin); unknown types fall back to
+        the provider's default (largest) template."""
+        return self.provider.launch_node(
+            now, self.catalog.type_by_name(node.node_type))

@@ -101,6 +101,10 @@ class ExperimentResult:
     scale_outs: int = 0
     scale_ins: int = 0
     failures_injected: int = 0
+    # Disruption telemetry (repro.core.disruption): spot reclaim notices
+    # delivered, and Σ executed-but-not-durable seconds across evictions.
+    preemption_notices: int = 0
+    lost_work_s: float = 0.0
 
     def combo(self) -> str:
         abbrev = {"void": "VR", "non-binding": "NBR", "binding": "BR"}

@@ -201,6 +201,21 @@ class Orchestrator:
         elif pod.is_service:
             self.n_service_bound -= 1
 
+    def _on_row_unbound(self, row: int) -> None:
+        """Store-path ``_on_pod_unbound`` for one column-evicted shell-less
+        row (``Cluster.fail_node_store``): same bookkeeping, no shell.
+        The caller already re-pended the row, so ``pending_since[row]`` is
+        the eviction instant — the same key ``_push_pending`` would use."""
+        store = self.store
+        self.n_pending += 1
+        heapq.heappush(self._row_heap,
+                       (store.pending_since[row], store.uid[row], row))
+        f = store.flags[row]
+        if f & _engine.POD_F_BATCH:
+            self._bound_batch.pop(store.uid[row], None)
+        elif f & _engine.POD_F_SERVICE:
+            self.n_service_bound -= 1
+
     def _on_row_completed(self, row: int) -> None:
         """Store-path ``_on_pod_completed``: same bookkeeping, no shell."""
         self._bound_batch.pop(self.store.uid[row], None)
@@ -209,6 +224,21 @@ class Orchestrator:
     def _on_pod_completed(self, pod: Pod) -> None:
         self._bound_batch.pop(pod.uid, None)
         self.n_batch_done += 1
+
+    def bound_batch_uids(self) -> list:
+        """Uids of currently-BOUND batch pods, in uid (submission) order —
+        the crash-loop injector's candidate set.  O(1) membership state,
+        no shell materialization."""
+        return sorted(self._bound_batch)
+
+    def bound_batch_pod(self, uid: int) -> Pod:
+        """The BOUND batch pod for ``uid``, materializing (and caching) its
+        shell on the store path — same idiom as ``_mitigate_stragglers``."""
+        pod = self._bound_batch[uid]
+        if pod is None:
+            pod = self.store.pod_at(self.store.index[uid])
+            self._bound_batch[uid] = pod
+        return pod
 
     def drain_newly_bound_batch(self) -> list:
         """Batch pods bound (or re-bound) since the last drain, in bind

@@ -74,7 +74,8 @@ class Pod:
 
     __slots__ = ("spec", "submit_time", "uid", "phase", "node_id",
                  "pending_since", "bound_time", "finish_time", "incarnation",
-                 "progress_s", "checkpointed_s", "pending_intervals",
+                 "progress_s", "checkpointed_s", "lost_work_s",
+                 "pending_intervals",
                  "requests", "is_batch", "is_service", "moveable")
 
     def __init__(self, spec: PodSpec, submit_time: float):
@@ -89,6 +90,7 @@ class Pod:
         self.incarnation = 0
         self.progress_s = 0.0       # batch: completed work (checkpoint restore)
         self.checkpointed_s = 0.0   # batch: durable progress at last checkpoint
+        self.lost_work_s = 0.0      # batch: Σ executed-but-not-durable work
         self.pending_intervals: list = []
         self.requests: Resources = spec.requests
         self.is_batch: bool = spec.kind == PodKind.BATCH
@@ -100,7 +102,7 @@ class Pod:
                  phase: "PodPhase", node_id: Optional[str],
                  pending_since: float, bound_time: Optional[float],
                  finish_time: Optional[float], incarnation: int,
-                 pending_intervals: list) -> "Pod":
+                 pending_intervals: list, lost_work_s: float = 0.0) -> "Pod":
         """Materialize a pod *shell* from SoA column state (PodStore).
 
         Unlike ``__init__`` this does **not** draw from the global uid
@@ -108,8 +110,10 @@ class Pod:
         attribute values are handed in verbatim from the columns, so the
         shell is indistinguishable from the object the seed path would have
         produced (property-tested by ``tests/test_engine_parity.py``).
-        Store-resident pods are never evicted without being materialized
-        first, so ``progress_s`` / ``checkpointed_s`` are always zero here.
+        A store-resident pod is only evicted column-natively when it banks
+        no durable progress (``Cluster.fail_node_store`` materializes it
+        otherwise), so ``progress_s`` / ``checkpointed_s`` are always zero
+        here — but ``lost_work_s`` may carry prior bulk-eviction losses.
         """
         pod = object.__new__(cls)
         pod.spec = spec
@@ -123,6 +127,7 @@ class Pod:
         pod.incarnation = incarnation
         pod.progress_s = 0.0
         pod.checkpointed_s = 0.0
+        pod.lost_work_s = lost_work_s
         pod.pending_intervals = pending_intervals
         pod.requests = spec.requests
         pod.is_batch = spec.kind == PodKind.BATCH
@@ -163,8 +168,11 @@ class Pod:
                 iv = self.spec.checkpoint_interval_s or 1.0
                 total = self.progress_s + ran
                 self.checkpointed_s = (total // iv) * iv
+                # Work past the last durable checkpoint is redone on restore.
+                self.lost_work_s += total - self.checkpointed_s
                 self.progress_s = self.checkpointed_s
             elif failed:
+                self.lost_work_s += self.progress_s + ran
                 self.progress_s = 0.0     # restart from scratch
             # moveable batch pods do not exist (guarded in PodSpec)
         self.phase = PodPhase.FAILED if failed else PodPhase.EVICTED

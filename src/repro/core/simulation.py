@@ -21,7 +21,17 @@ Event kinds:
 * ``POD_DONE``    — batch pods ran to completion (bucketed, see above);
 * ``NODE_READY``  — a provisioning VM joined the cluster (boot delay model);
 * ``SAMPLE``      — 20 s Table-5 utilization sampling;
-* ``NODE_FAIL``   — fleet extension: a node dies (failure injection).
+* ``NODE_FAIL``   — fleet extension: a node dies (failure injection);
+* ``NODE_NOTICE`` — disruption: spot reclaim notice — the node is drained
+  and killed after the notice window (``repro.core.disruption``);
+* ``ZONE_OUTAGE`` — disruption: a correlated zone failure event (the
+  payload injector picks the zone and kills its nodes);
+* ``POD_CRASH``   — disruption: a crash-loop event (the payload injector
+  picks a running batch pod within its restart budget).
+
+Disruption events (kind >= ``NODE_FAIL``) append to ``disruption_log`` and,
+when ``on_disruption`` is set, invoke it after the handler — the chaos
+harness hooks ``PodStore.audit_columns`` there.
 
 Ordering is identical to the seed heap: the seed pushed every arrival
 before any other event, so at equal timestamps arrivals always won the
@@ -51,7 +61,8 @@ from repro.core.orchestrator import Orchestrator
 from repro.core.pods import Pod, PodPhase
 from repro.core.workload import Arrival
 
-ARRIVAL, CYCLE, POD_DONE, NODE_READY, SAMPLE, NODE_FAIL = range(6)
+(ARRIVAL, CYCLE, POD_DONE, NODE_READY, SAMPLE,
+ NODE_FAIL, NODE_NOTICE, ZONE_OUTAGE, POD_CRASH) = range(9)
 
 _INF = float("inf")
 
@@ -174,6 +185,16 @@ class Simulation:
         self.cycle_placed: List[int] = []      # per-cycle placements (bench)
         self.n_cycles = 0
         self.failures_injected = 0
+        self.preemption_notices = 0
+        # Chronological ledger of disruption events:
+        # (time, kind-str, subject-id, payload-list) — "node_fail" carries
+        # the evicted pod uids, "reclaim_notice" the resident count,
+        # "zone_outage" the victim node ids, "pod_crash" the crashed uid.
+        self.disruption_log: List[tuple] = []
+        # Optional observer called as on_disruption(sim, kind) after every
+        # disruption event (kind >= NODE_FAIL); the chaos harness audits
+        # the pod columns here.
+        self.on_disruption = None
         self._stuck = False
         self.first_submit: Optional[float] = None
         self.last_batch_done: Optional[float] = None
@@ -218,6 +239,14 @@ class Simulation:
                 self._on_sample()
             elif kind == NODE_FAIL:
                 self._on_node_fail(payload)
+            elif kind == NODE_NOTICE:
+                self._on_node_notice(payload)
+            elif kind == ZONE_OUTAGE:
+                payload.on_outage(self)
+            elif kind == POD_CRASH:
+                payload.on_crash_event(self)
+            if kind >= NODE_FAIL and self.on_disruption is not None:
+                self.on_disruption(self, kind)
             if self._done():
                 completed = True
                 break
@@ -412,13 +441,54 @@ class Simulation:
         if node.state == NodeState.TERMINATED:
             return
         self.failures_injected += 1
-        for pod in list(node.pods.values()):
-            self.cluster.unbind(pod, self.now, failed=True)
+        cluster = self.cluster
+        if (cluster.pod_store is not None
+                and cluster.on_unbind == self.orch._on_pod_unbound):
+            # Shell-less fast path: the whole node evicts as bulk column
+            # writes (no per-pod materialization).  An external on_unbind
+            # observer is an API boundary — the object loop below
+            # materializes shells so the observer sees real pods, in order.
+            victims = cluster.fail_node_store(
+                node, self.now, on_row=self.orch._on_row_unbound)
+        else:
+            victims = []
+            for pod in list(node.pods.values()):
+                victims.append(pod.uid)
+                cluster.unbind(pod, self.now, failed=True)
+        # Drop any provisioning association so evictees can trigger
+        # replacement capacity (the BindingAutoscaler leak fix).
+        self.orch.autoscaler.notify_node_lost(node)
         if node.state == NodeState.PROVISIONING:
             node.state = NodeState.READY   # force through the state machine
             node.ready_time = self.now
         self.cost.on_deprovision(node, self.now)
-        self.cluster.remove_node(node, self.now)
+        cluster.remove_node(node, self.now)
+        self.disruption_log.append(
+            (self.now, "node_fail", node.node_id, victims))
+
+    def fail_node(self, node: Node) -> None:
+        """Public entry point for disruption injectors: kill ``node`` at the
+        current instant through the normal NODE_FAIL plumbing."""
+        self._on_node_fail(node)
+
+    def _on_node_notice(self, payload) -> None:
+        """Spot reclaim notice (``disruption.SpotReclaimInjector``): the
+        node will be killed ``kill_delay_s`` from now.  Drain it (taint —
+        no new pods land during the window), tell the autoscaler so
+        replacement capacity can launch *before* the kill, and schedule
+        the kill itself through the normal NODE_FAIL plumbing."""
+        node, kill_delay_s = payload
+        if node.node_id not in self.cluster.nodes:
+            return
+        if node.state == NodeState.TERMINATED:
+            return
+        self.preemption_notices += 1
+        self.disruption_log.append(
+            (self.now, "reclaim_notice", node.node_id, [len(node.pods)]))
+        node.taint()
+        self.orch.autoscaler.notify_preemption_notice(
+            self.cluster, node, self.now)
+        self.push(self.now + kill_delay_s, NODE_FAIL, node)
 
     # -- termination / results ----------------------------------------------------
     def _done(self) -> bool:
@@ -440,10 +510,12 @@ class Simulation:
             self.metrics.record_pending_intervals(
                 store.pending_intervals_all())
             evictions = store.total_incarnations()
+            lost_work = store.total_lost_work_s()
         else:
             for pod in self.orch.pods:
                 self.metrics.record_pending_intervals(pod.pending_intervals)
             evictions = sum(p.incarnation for p in self.orch.pods)
+            lost_work = sum((p.lost_work_s for p in self.orch.pods), 0.0)
         start = self.first_submit or 0.0
         return ExperimentResult(
             workload="", scheduler=self.orch.scheduler.name,
@@ -463,4 +535,6 @@ class Simulation:
             scale_outs=self.orch.total_scale_outs,
             scale_ins=self.orch.total_scale_ins,
             failures_injected=self.failures_injected,
+            preemption_notices=self.preemption_notices,
+            lost_work_s=lost_work,
         )

@@ -9,9 +9,15 @@
 * :mod:`repro.scenarios.adapter` — Borg/Alibaba-style CSV ingestion with
   resource rescaling onto a target node template;
 * :mod:`repro.scenarios.registry` — name → builder lookup behind
-  ``ExperimentSpec(scenario=...)`` and ``benchmarks/sweep_scenarios.py``.
+  ``ExperimentSpec(scenario=...)`` and ``benchmarks/sweep_scenarios.py``;
+* :mod:`repro.scenarios.chaos` — disruption-bearing scenario families
+  (spot-spike, zone-outage, capacity-crunch) and the chaos-parity
+  harness behind ``scripts/chaos.py`` and the golden chaos fixture.
 """
 from repro.scenarios.adapter import CsvTraceSpec, load_csv_trace
+from repro.scenarios.chaos import (CHAOS_SCENARIOS, CapacityCrunch, SpotSpike,
+                                   ZoneOutage, capture_chaos_trace,
+                                   chaos_spec, run_chaos_cell)
 from repro.scenarios.generators import (AutoscalerStress, Diurnal, FlashCrowd,
                                         HeavyTail, MixRamp, MultiTenant)
 from repro.scenarios.registry import build_scenario, names, register
@@ -21,6 +27,8 @@ __all__ = [
     "TraceStore", "KIND_BATCH", "KIND_SERVICE",
     "Diurnal", "FlashCrowd", "HeavyTail", "MixRamp", "AutoscalerStress",
     "MultiTenant",
+    "CHAOS_SCENARIOS", "SpotSpike", "ZoneOutage", "CapacityCrunch",
+    "chaos_spec", "capture_chaos_trace", "run_chaos_cell",
     "CsvTraceSpec", "load_csv_trace",
     "build_scenario", "names", "register",
 ]

@@ -82,3 +82,12 @@ register("heavy-tail", _family_builder(_g.HeavyTail()))
 register("mix-ramp", _family_builder(_g.MixRamp()))
 register("scale-stress", _family_builder(_g.AutoscalerStress()))
 register("multi-tenant", _family_builder(_g.MultiTenant()))
+
+# Chaos families (repro.scenarios.chaos).  Registered builders produce only
+# the workload trace — the disruption schedule rides on
+# ExperimentSpec.failure_injector, wired by chaos.chaos_spec (a scenario
+# name alone can't carry the stateful injector stack).
+from repro.scenarios import chaos as _chaos   # noqa: E402  (needs register)
+
+for _name, _cfg in _chaos.CHAOS_SCENARIOS.items():
+    register(_name, _family_builder(_cfg))

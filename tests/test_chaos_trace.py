@@ -1,0 +1,91 @@
+"""Golden chaos traces: committed fixtures of seeded disrupted runs.
+
+The ordinary golden trace (tests/test_golden_trace.py) pins the healthy
+path; this fixture pins the *disruption* path — spot reclaims with
+notice-before-kill, a correlated zone outage, and crash-loops — for all
+three chaos scenarios on both engines.  An identical disruption schedule
+must yield a bit-identical bind/evict/fail event sequence whichever
+engine replays it, and `PodStore.audit_columns` (array) /
+``check_invariants(deep=True)`` (object) must pass after every
+disruption event.
+
+To regenerate after an *intentional* semantic change::
+
+    PYTHONPATH=src python tests/test_chaos_trace.py --regen
+
+and explain the behaviour shift in the commit.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+if __name__ == "__main__":          # --regen entry point (see module docstring)
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.scenarios.chaos import (CHAOS_SCENARIOS, GOLDEN_JOBS,
+                                   capture_chaos_trace)
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "data", "golden_chaos_trace.json")
+
+SCENARIOS = tuple(CHAOS_SCENARIOS)
+
+
+@pytest.mark.parametrize("engine", ["array", "object"])
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_chaos_trace_matches_golden_fixture(scenario, engine):
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    trace = capture_chaos_trace(scenario, engine, seed=0, n_jobs=GOLDEN_JOBS)
+    for key in golden[scenario]:
+        assert trace[key] == golden[scenario][key], (
+            f"golden chaos drift in {key!r} ({scenario}, {engine} engine) — "
+            f"if intentional, regenerate with `PYTHONPATH=src python "
+            f"tests/test_chaos_trace.py --regen` and explain the semantic "
+            f"change in the commit")
+    assert trace == golden[scenario]
+
+
+def test_chaos_fixture_is_nontrivial():
+    """Each pinned scenario must keep exercising its disruption machinery."""
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    assert set(golden) == set(SCENARIOS)
+    for name, trace in golden.items():
+        assert trace["result"]["completed"] is True, name
+        assert trace["evictions"], f"{name} lost its disruption evictions"
+        assert trace["disruption_log"], f"{name} fired no disruptions"
+        assert trace["audits"] > 0, f"{name} never audited the columns"
+        assert trace["result"]["failures_injected"] > 0, name
+    kinds = {name: {e[1] for e in trace["disruption_log"]}
+             for name, trace in golden.items()}
+    assert "reclaim_notice" in kinds["spot-spike"]
+    assert golden["spot-spike"]["result"]["preemption_notices"] > 0
+    assert golden["spot-spike"]["result"]["lost_work_s"] > 0
+    assert "zone_outage" in kinds["zone-outage"]
+    assert "pod_crash" in kinds["capacity-crunch"]
+    assert "reclaim_notice" in kinds["capacity-crunch"]
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        print(__doc__)
+        sys.exit(2)
+    golden = {}
+    for name in SCENARIOS:
+        arr = capture_chaos_trace(name, "array", seed=0, n_jobs=GOLDEN_JOBS)
+        obj = capture_chaos_trace(name, "object", seed=0, n_jobs=GOLDEN_JOBS)
+        assert arr == obj, f"{name}: engines disagree; fix parity first"
+        golden[name] = arr
+        print(f"{name}: {len(arr['binds'])} binds, "
+              f"{len(arr['evictions'])} evictions, "
+              f"{len(arr['disruption_log'])} disruption events, "
+              f"{arr['audits']} audits")
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    print(f"wrote {FIXTURE}")

@@ -1,0 +1,289 @@
+"""Disruption machinery: spot reclaims, zone outages, crash-loops, the
+BindingAutoscaler stranded-pod leak fix, provisioning-race recovery, and
+billing double-provision/deprovision errors."""
+import dataclasses
+
+import pytest
+
+from repro.cloud.adapter import M2_SMALL
+from repro.core import (Arrival, Cluster, CostModel, CrashLoopInjector,
+                        ExperimentSpec, Node, NodeState, Resources,
+                        SpotReclaimInjector, StragglerInjector,
+                        reset_id_counters, run_experiment)
+from repro.core.autoscaler import BindingAutoscaler, NodeProvider
+from repro.core.experiment import build_simulation
+from repro.core.heterogeneous import (NECTAR_CATALOG,
+                                      HeterogeneousBindingAutoscaler,
+                                      HeterogeneousProvider)
+from repro.core.pods import Pod
+from repro.core.scheduler import BestFitBinPackingScheduler
+from repro.core.simulation import ZONE_OUTAGE
+from repro.core.workload import JOB_TYPES, make_fleet_job_types
+
+
+class _StubProvider(NodeProvider):
+    """Launches PROVISIONING nodes without a simulation attached."""
+
+    def __init__(self):
+        self.launched = 0
+
+    def launch_node(self, now: float) -> Node:
+        self.launched += 1
+        return Node(allocatable=M2_SMALL.allocatable,
+                    node_type=M2_SMALL.name, autoscaled=True,
+                    provision_time=now)
+
+    def terminate_node(self, node: Node, now: float) -> None:
+        pass
+
+
+class TestBindingAutoscalerLeak:
+    def test_node_lost_while_provisioning_releases_pods(self):
+        """The stranded-pod leak: a node dying while PROVISIONING used to
+        leave its tracker and pod associations behind, so the associated
+        pods could never trigger another launch."""
+        provider = _StubProvider()
+        bas = BindingAutoscaler(provider)
+        cluster = Cluster()
+        pod = Pod(spec=JOB_TYPES["batch_small"], submit_time=0.0)
+
+        bas.scale_out(cluster, pod, 0.0)
+        assert provider.launched == 1
+        node = next(iter(bas._tracked.values())).node
+        assert node.state == NodeState.PROVISIONING
+
+        # Still associated: re-requesting must not launch again.
+        bas.scale_out(cluster, pod, 5.0)
+        assert provider.launched == 1
+
+        bas.notify_node_lost(node)
+        assert not bas._tracked and not bas._pod_to_node
+
+        # Association released: the pod can now get replacement capacity.
+        bas.scale_out(cluster, pod, 10.0)
+        assert provider.launched == 2
+
+    def test_notify_node_lost_unknown_node_is_noop(self):
+        bas = BindingAutoscaler(_StubProvider())
+        node = Node(allocatable=M2_SMALL.allocatable, autoscaled=True)
+        bas.notify_node_lost(node)   # never tracked: must not raise
+
+
+@dataclasses.dataclass
+class _ProvisioningKiller:
+    """Test injector: poll every ``period_s`` and fail any node still in
+    PROVISIONING — the race the leak fix exists for — until ``max_kills``
+    nodes have died.  Speaks the ZONE_OUTAGE payload protocol
+    (``on_outage``); polling stops once the budget is spent so the
+    timeline can drain."""
+
+    period_s: float = 20.0
+    max_kills: int = 3
+    killed: int = 0
+
+    def prime(self, sim) -> None:
+        sim.push(self.period_s, ZONE_OUTAGE, self)
+
+    def arm_node(self, sim, node) -> None:
+        pass
+
+    def on_outage(self, sim) -> None:
+        for node in list(sim.cluster.nodes.values()):
+            if (self.killed < self.max_kills
+                    and node.state == NodeState.PROVISIONING):
+                self.killed += 1
+                sim.fail_node(node)
+        if self.killed < self.max_kills:
+            sim.push(sim.now + self.period_s, ZONE_OUTAGE, self)
+
+
+class TestProvisioningRaces:
+    @pytest.mark.parametrize("engine", ["array", "object"])
+    def test_fail_during_provisioning_recovers(self, engine):
+        """Nodes killed mid-boot must not strand their associated pods:
+        the workload still completes because notify_node_lost releases
+        the associations and the next cycle launches replacements."""
+        reset_id_counters()
+        killer = _ProvisioningKiller()
+        spec = ExperimentSpec(workload="slow", rescheduler="non-binding",
+                              autoscaler="binding", seed=0, engine=engine,
+                              failure_injector=killer)
+        r = run_experiment(spec)
+        assert killer.killed > 0, "no provisioning node was ever killed"
+        assert r.completed
+        assert r.failures_injected == killer.killed
+
+    def test_both_engines_agree_under_provisioning_kills(self):
+        results = []
+        for engine in ("array", "object"):
+            reset_id_counters()
+            spec = ExperimentSpec(
+                workload="slow", rescheduler="non-binding",
+                autoscaler="binding", seed=0, engine=engine,
+                failure_injector=_ProvisioningKiller(max_kills=2))
+            results.append(run_experiment(spec).as_dict())
+        assert results[0] == results[1]
+
+
+class TestSpotReclaim:
+    @pytest.mark.parametrize("engine", ["array", "object"])
+    def test_reclaim_mid_wave_recovers(self, engine):
+        reset_id_counters()
+        inj = SpotReclaimInjector(default_mtbr_s=400.0, notice_s=60.0,
+                                  seed=11)
+        spec = ExperimentSpec(workload="slow", rescheduler="non-binding",
+                              autoscaler="binding", seed=0, engine=engine,
+                              failure_injector=inj)
+        r = run_experiment(spec)
+        assert r.completed
+        assert r.preemption_notices > 0
+        assert r.failures_injected > 0
+        assert r.evictions >= r.failures_injected
+
+    def test_engines_bit_identical_under_reclaims(self):
+        results = []
+        for engine in ("array", "object"):
+            reset_id_counters()
+            spec = ExperimentSpec(
+                workload="mixed", rescheduler="non-binding",
+                autoscaler="binding", seed=3, engine=engine,
+                failure_injector=SpotReclaimInjector(
+                    default_mtbr_s=500.0, notice_s=60.0, seed=5))
+            results.append(run_experiment(spec).as_dict())
+        assert results[0] == results[1]
+
+    def test_fast_path_matches_spied_object_path(self):
+        """The unspied array run takes the column-native bulk-eviction
+        fast path; spying on_unbind forces per-pod materialization.  The
+        two must produce the identical ExperimentResult."""
+        def run(spied: bool) -> dict:
+            reset_id_counters()
+            spec = ExperimentSpec(
+                workload="mixed", rescheduler="non-binding",
+                autoscaler="binding", seed=3, engine="array",
+                failure_injector=SpotReclaimInjector(
+                    default_mtbr_s=500.0, notice_s=60.0, seed=5))
+            sim = build_simulation(spec)
+            if spied:
+                inner = sim.cluster.on_unbind
+                def on_unbind(pod):
+                    inner(pod)
+                sim.cluster.on_unbind = on_unbind
+            return sim.run().as_dict()
+
+        assert run(spied=False) == run(spied=True)
+
+    def test_unlisted_type_with_no_default_is_never_reclaimed(self):
+        reset_id_counters()
+        inj = SpotReclaimInjector(reclaim_mtbr_s={"other-type": 100.0},
+                                  default_mtbr_s=None, seed=1)
+        spec = ExperimentSpec(workload="bursty", rescheduler="non-binding",
+                              autoscaler="binding", seed=0,
+                              failure_injector=inj)
+        r = run_experiment(spec)
+        assert r.completed
+        assert r.preemption_notices == 0 and r.failures_injected == 0
+
+
+class TestCrashLoop:
+    def test_restart_budget_and_backoff(self):
+        types = make_fleet_job_types()
+        from repro.cloud.adapter import TPU_V5E_HOST
+        reset_id_counters()
+        inj = CrashLoopInjector(mtbc_s=60.0, seed=2, restart_budget=2,
+                                backoff_base_s=30.0)
+        arrivals = [Arrival(0.0, types["train_large"])]   # one 15 min job
+        spec = ExperimentSpec(workload="fleet", arrivals=arrivals,
+                              template=TPU_V5E_HOST, initial_workers=1,
+                              rescheduler="void", autoscaler="binding",
+                              failure_injector=inj)
+        r = run_experiment(spec)
+        assert r.completed
+        counts = inj.crash_counts()
+        assert counts, "the lone job was never crashed"
+        assert all(c <= inj.restart_budget for c in counts.values())
+        # With mtbc 60 s on a multi-incarnation 900 s job, the budget is
+        # the only thing stopping further crashes: it must be exhausted.
+        assert max(counts.values()) == inj.restart_budget
+        assert r.evictions >= sum(counts.values())
+
+
+class TestStragglerWiring:
+    def test_injector_slows_launched_nodes_end_to_end(self):
+        reset_id_counters()
+        straggler = StragglerInjector(every_k=2, slow_factor=0.5)
+        spec = ExperimentSpec(workload="slow", rescheduler="non-binding",
+                              autoscaler="binding", seed=0,
+                              straggler_injector=straggler,
+                              straggler_threshold=0.8)
+        r = run_experiment(spec)
+        assert r.completed
+        assert straggler._count > 0, "no launched node passed the injector"
+
+    def test_slow_nodes_actually_marked(self):
+        straggler = StragglerInjector(every_k=2, slow_factor=0.5)
+        nodes = [Node(allocatable=Resources(940, 3584), autoscaled=True)
+                 for _ in range(4)]
+        factors = [straggler.maybe_slow(n).speed_factor for n in nodes]
+        assert factors == [1.0, 0.5, 1.0, 0.5]
+
+
+class TestHeterogeneousReplacement:
+    def test_replacement_matches_reclaimed_instance_type(self):
+        class _FakeSim:
+            def schedule_node_ready(self, node, at):
+                pass
+
+        cost = CostModel()
+        provider = HeterogeneousProvider(NECTAR_CATALOG, cost)
+        provider.attach(_FakeSim())
+        bas = HeterogeneousBindingAutoscaler(provider)
+        cluster = Cluster()
+        tiny = NECTAR_CATALOG.type_by_name("m2.tiny")
+        node = provider.make_static_node(tiny, 0.0)
+        cluster.add_node(node)
+        pod = Pod(spec=JOB_TYPES["batch_small"], submit_time=0.0)
+        assert BestFitBinPackingScheduler().schedule(cluster, pod, 0.0)
+
+        bas.notify_preemption_notice(cluster, node, 10.0)
+        assert provider.launched_types == ["m2.tiny"]
+        # One replacement per reclaimed node, ever.
+        bas.notify_preemption_notice(cluster, node, 11.0)
+        assert provider.launched_types == ["m2.tiny"]
+
+    def test_empty_node_gets_no_replacement(self):
+        class _FakeSim:
+            def schedule_node_ready(self, node, at):
+                pass
+
+        provider = HeterogeneousProvider(NECTAR_CATALOG, CostModel())
+        provider.attach(_FakeSim())
+        bas = HeterogeneousBindingAutoscaler(provider)
+        cluster = Cluster()
+        node = provider.make_static_node(NECTAR_CATALOG.types[0], 0.0)
+        cluster.add_node(node)
+        bas.notify_preemption_notice(cluster, node, 5.0)
+        assert provider.launched_types == []
+
+
+class TestCostModelErrors:
+    def _node(self):
+        return Node(allocatable=M2_SMALL.allocatable,
+                    node_type=M2_SMALL.name, autoscaled=True)
+
+    def test_double_provision_raises_value_error(self):
+        cost, node = CostModel(), self._node()
+        cost.on_provision(node, 0.0)
+        with pytest.raises(ValueError, match="double provision"):
+            cost.on_provision(node, 5.0)
+
+    def test_double_deprovision_raises_value_error(self):
+        cost, node = CostModel(), self._node()
+        cost.on_provision(node, 0.0)
+        cost.on_deprovision(node, 5.0)
+        with pytest.raises(ValueError, match="no open billing record"):
+            cost.on_deprovision(node, 6.0)
+
+    def test_unknown_node_deprovision_raises_value_error(self):
+        with pytest.raises(ValueError, match="no open billing record"):
+            CostModel().on_deprovision(self._node(), 1.0)
