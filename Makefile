@@ -1,6 +1,6 @@
 # Developer entry points.  `make check` is the CI gate.
 
-.PHONY: check test bench-sched sweep-scenarios docs-check
+.PHONY: check test bench-sched sweep-scenarios search search-smoke docs-check
 
 check:
 	bash scripts/ci.sh
@@ -13,6 +13,12 @@ bench-sched:
 
 sweep-scenarios:
 	PYTHONPATH=src python benchmarks/sweep_scenarios.py --out SWEEP_scenarios.json
+
+search:
+	PYTHONPATH=src python scripts/search.py --out SEARCH_policy.json
+
+search-smoke:
+	PYTHONPATH=src python scripts/search.py --smoke
 
 docs-check:
 	python scripts/docs_check.py

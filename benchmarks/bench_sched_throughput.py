@@ -277,6 +277,39 @@ def bench_wave_kernels(ns=(2048, 8192, 32768, 65536), reps=2000) -> dict:
     return out
 
 
+def bench_sweep_pool(workers: int = 4, n_jobs: int = 300) -> dict:
+    """Process-pool speedup of the `repro.search` cell runner on a fixed
+    sweep grid (six scenario families × two autoscalers, full rescheduler
+    chain), asserting the pool's rows are bit-identical to the serial
+    ones before reporting the speedup.  Serial wall time is the unit of
+    work; the pool must recover a real fraction of it or the hermetic-
+    cell contract (per-process trace memoization, cheap spawn) regressed.
+    """
+    from repro.search.runner import CellSpec, run_cells
+
+    scenarios = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp",
+                 "scale-stress", "multi-tenant")
+    cells = [CellSpec(scenario=sc, scheduler="best-fit", autoscaler=asc,
+                      rescheduler="non-binding", seed=0, n_jobs=n_jobs)
+             for sc in scenarios for asc in ("binding", "non-binding")]
+    t0 = time.perf_counter()
+    serial = run_cells(cells, workers=1)
+    serial_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pooled = run_cells(cells, workers=workers)
+    pool_s = time.perf_counter() - t0
+    strip = lambda rows: [{k: v for k, v in r.items() if k != "wall_s"}
+                          for r in rows]
+    identical = strip(serial) == strip(pooled)
+    assert identical, "pool rows diverged from serial rows"
+    speedup = serial_s / pool_s if pool_s > 0 else 0.0
+    out = {"cells": len(cells), "n_jobs": n_jobs, "workers": workers,
+           "serial_s": round(serial_s, 3), "pool_s": round(pool_s, 3),
+           "speedup": round(speedup, 2), "identical": identical}
+    print(f"bench_sched.sweep_pool,{1e6 * pool_s:.0f},{speedup:.2f}")
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", default="all",
@@ -288,6 +321,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--trace-replay", action="store_true",
                     help="also run the 100k-arrival columnar trace-replay "
                          "bench (always included with --scale all)")
+    ap.add_argument("--sweep-pool", action="store_true",
+                    help="also measure the search cell runner's process-"
+                         "pool speedup vs serial (always with --scale all)")
+    ap.add_argument("--pool-workers", type=int, default=4)
     ap.add_argument("--out", default="BENCH_sched.json")
     args = ap.parse_args(argv)
 
@@ -310,6 +347,8 @@ def main(argv=None) -> dict:
         report["scales"][scale] = bench_scale(scale, engines)
     if args.trace_replay or args.scale == "all":
         report["trace_replay"] = bench_trace_replay()
+    if args.sweep_pool or args.scale == "all":
+        report["sweep_pool"] = bench_sweep_pool(workers=args.pool_workers)
     if args.kernels:
         report["wave_select_kernels"] = bench_wave_kernels()
     with open(args.out, "w") as f:

@@ -1,18 +1,24 @@
 """Scenario sweep harness: scheduler × autoscaler × scenario grid.
 
-Runs every cell of a policy×workload grid through ``run_experiment`` with
-columnar trace replay (``repro.scenarios``) and emits a Fig-3-style,
-machine-readable table: per-cell cost, scheduling duration, pending-time
-stats and Table-5 utilization ratios.  This is how the paper's
-cost-efficiency claims are checked *beyond* its three 50-job workloads —
-the default grid covers six scenario families (diurnal, flash-crowd MMPP,
-heavy-tailed durations, batch→service mix ramp, autoscaler stress,
-multi-tenant composition) at thousands of jobs per trace.
+Runs every cell of a policy×workload grid through the `repro.search`
+cell runner with columnar trace replay (``repro.scenarios``) and emits a
+Fig-3-style, machine-readable table: per-cell cost, scheduling duration,
+pending-time stats and Table-5 utilization ratios.  This is how the
+paper's cost-efficiency claims are checked *beyond* its three 50-job
+workloads — the default grid covers six scenario families (diurnal,
+flash-crowd MMPP, heavy-tailed durations, batch→service mix ramp,
+autoscaler stress, multi-tenant composition) at thousands of jobs per
+trace.
+
+Cells are hermetic (`repro.search.runner`), so ``--pool N`` fans the
+grid over N worker processes with **bit-identical** results to the
+serial run — same floats, same row order.
 
 Usage::
 
     python benchmarks/sweep_scenarios.py                  # full default grid
     python benchmarks/sweep_scenarios.py --smoke          # CI smoke (seconds)
+    python benchmarks/sweep_scenarios.py --pool 8         # 8 worker processes
     python benchmarks/sweep_scenarios.py \
         --scenarios diurnal,heavy-tail --schedulers best-fit \
         --autoscalers binding --jobs 5000
@@ -32,8 +38,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core import ExperimentSpec, reset_id_counters, run_experiment
-from repro.scenarios import build_scenario
+from repro.search.runner import CellSpec, run_cells
 
 DEFAULT_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp",
                      "scale-stress", "multi-tenant")
@@ -46,37 +51,30 @@ SMOKE_JOBS = 300
 DEFAULT_JOBS = 1500
 
 
-def run_cell(trace, scheduler: str, autoscaler: str, rescheduler: str,
-             seed: int) -> dict:
-    # Fresh id counters per cell: every cell's tie-breaks (node ids order
-    # lexicographically) depend only on its own run, so cells are
-    # reproducible in isolation and in any grid order.
-    reset_id_counters()
-    spec = ExperimentSpec(trace=trace, scheduler=scheduler,
-                          autoscaler=autoscaler, rescheduler=rescheduler,
-                          seed=seed)
-    t0 = time.perf_counter()
-    r = run_experiment(spec)
-    wall = time.perf_counter() - t0
+def format_row(row: dict) -> dict:
+    """One report row, rounded for the committed artifact (the raw
+    runner row keeps full precision for bit-parity tests)."""
+    cell = row["cell"]
     return {
-        "scenario": r.workload, "scheduler": scheduler,
-        "autoscaler": autoscaler, "rescheduler": rescheduler,
-        "n_jobs": trace.n, "completed": r.completed,
-        "cost": round(r.cost, 3),
-        "duration_s": round(r.duration_s, 1),
-        "median_pending_s": round(r.median_pending_s, 3),
-        "max_pending_s": round(r.max_pending_s, 3),
-        "avg_ram_ratio": round(r.avg_ram_ratio, 4),
-        "avg_cpu_ratio": round(r.avg_cpu_ratio, 4),
-        "avg_pods_per_node": round(r.avg_pods_per_node, 3),
-        "max_nodes": r.max_nodes,
-        "node_seconds": r.node_seconds,
-        "evictions": r.evictions,
-        "scale_outs": r.scale_outs, "scale_ins": r.scale_ins,
-        "failures_injected": r.failures_injected,
-        "preemption_notices": r.preemption_notices,
-        "lost_work_s": round(r.lost_work_s, 3),
-        "wall_s": round(wall, 3),
+        "scenario": cell["scenario"], "scheduler": cell["scheduler"],
+        "autoscaler": cell["autoscaler"], "rescheduler": cell["rescheduler"],
+        "n_jobs": row["n_jobs"], "completed": row["completed"],
+        "cost": round(row["cost"], 3),
+        "duration_s": round(row["duration_s"], 1),
+        "mean_pending_s": round(row["mean_pending_s"], 3),
+        "median_pending_s": round(row["median_pending_s"], 3),
+        "max_pending_s": round(row["max_pending_s"], 3),
+        "avg_ram_ratio": round(row["avg_ram_ratio"], 4),
+        "avg_cpu_ratio": round(row["avg_cpu_ratio"], 4),
+        "avg_pods_per_node": round(row["avg_pods_per_node"], 3),
+        "max_nodes": row["max_nodes"],
+        "node_seconds": row["node_seconds"],
+        "evictions": row["evictions"],
+        "scale_outs": row["scale_outs"], "scale_ins": row["scale_ins"],
+        "failures_injected": row["failures_injected"],
+        "preemption_notices": row["preemption_notices"],
+        "lost_work_s": round(row["lost_work_s"], 3),
+        "wall_s": round(row["wall_s"], 3),
     }
 
 
@@ -90,15 +88,17 @@ def main(argv=None) -> dict:
                     help=f"default {','.join(DEFAULT_SCHEDULERS)}")
     ap.add_argument("--autoscalers",
                     help=f"default {','.join(DEFAULT_AUTOSCALERS)}")
-    # "void" by default: the rescheduling policies run a shadow-capacity
-    # pass per blocked pod per cycle, which multiplies wall time on
-    # scenarios that intentionally build deep backlogs (flash-crowd,
-    # scale-stress under the rate-limited non-binding autoscaler).  Pass
-    # --rescheduler binding|non-binding for the full paper-style chain.
-    ap.add_argument("--rescheduler", default="void")
+    # "non-binding" reproduces the paper's full Alg. 3/4 chain by default;
+    # the shadow-capacity cache (repro.core.rescheduler) keeps backlog-heavy
+    # cells (flash-crowd, scale-stress) tractable.  Pass --rescheduler void
+    # to sweep scheduling/autoscaling alone.
+    ap.add_argument("--rescheduler", default="non-binding")
     ap.add_argument("--jobs", type=int, default=None,
                     help=f"trace length per scenario (default {DEFAULT_JOBS})")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pool", type=int, default=0, metavar="N",
+                    help="run cells on N worker processes (bit-identical "
+                         "to serial; 0/1 = in-process)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI grid: "
                          f"{len(SMOKE_SCENARIOS)}x{len(SMOKE_SCHEDULERS)}x2 "
@@ -116,18 +116,21 @@ def main(argv=None) -> dict:
     autoscalers = axis(args.autoscalers, DEFAULT_AUTOSCALERS)
     n_jobs = args.jobs or (SMOKE_JOBS if args.smoke else DEFAULT_JOBS)
 
+    # One trace per (scenario, seed, n_jobs) key, memoized per process by
+    # the runner — same jobs, same floats, cells differ only by policy.
+    specs = [CellSpec(scenario=scenario, scheduler=scheduler,
+                      autoscaler=autoscaler, rescheduler=args.rescheduler,
+                      seed=args.seed, n_jobs=n_jobs)
+             for scenario in scenarios
+             for scheduler in schedulers
+             for autoscaler in autoscalers]
+    rows = run_cells(specs, workers=args.pool)
     cells = []
-    for scenario in scenarios:
-        # One trace per scenario, replayed read-only across every cell —
-        # same jobs, same floats, so cells differ only by policy.
-        trace = build_scenario(scenario, seed=args.seed, n_jobs=n_jobs)
-        for scheduler in schedulers:
-            for autoscaler in autoscalers:
-                cell = run_cell(trace, scheduler, autoscaler,
-                                args.rescheduler, args.seed)
-                cells.append(cell)
-                print(f"sweep.{scenario}.{scheduler}.{autoscaler},"
-                      f"{1e6 * cell['wall_s']:.0f},{cell['cost']}")
+    for spec, row in zip(specs, rows):
+        cell = format_row(row)
+        cells.append(cell)
+        print(f"sweep.{spec.scenario}.{spec.scheduler}.{spec.autoscaler},"
+              f"{1e6 * cell['wall_s']:.0f},{cell['cost']}")
 
     report = {
         "bench": "sweep_scenarios",
@@ -136,7 +139,8 @@ def main(argv=None) -> dict:
                  "schedulers": list(schedulers),
                  "autoscalers": list(autoscalers),
                  "rescheduler": args.rescheduler,
-                 "n_jobs": n_jobs, "seed": args.seed},
+                 "n_jobs": n_jobs, "seed": args.seed,
+                 "pool": args.pool},
         "cells": cells,
     }
     with open(args.out, "w") as f:

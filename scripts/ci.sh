@@ -82,6 +82,41 @@ assert all(c["cost"] > 0 for c in cells), "a completed cell priced at $0"
 print(f"scenario sweep OK: {len(cells)} cells over {scenarios}")
 EOF
 
+echo "== policy-search smoke (seeded micro-search, serial vs pool bit-identity) =="
+# The search subsystem's end-to-end gate: a 2-gen x 6-individual NSGA-II
+# micro-search must produce a non-empty Pareto front, and a 2-worker
+# process pool must reproduce the serial run bit-for-bit (the script
+# asserts both and exits non-zero on drift).
+python scripts/search.py --smoke --out /tmp/SEARCH_smoke.json
+
+echo "== sweep-pool gate (search cell runner process-pool overhead) =="
+# The cell runner's perf gate: pool speedup on the fixed 12-cell sweep
+# grid must stay within BENCH_REGRESSION_TOLERANCE (default 30%) of the
+# committed BENCH_sched.json entry.  On the 1-core container class this
+# guards pool *overhead* (committed speedup ~1.0); on wider hosts it
+# guards real parallel speedup.  Machine-dependent like the other bench
+# gates.
+if [ "${BENCH_REGRESSION_SKIP:-0}" = "1" ]; then
+    echo "sweep-pool gate skipped (BENCH_REGRESSION_SKIP=1)"
+else
+python benchmarks/bench_sched_throughput.py --scale none --sweep-pool \
+    --out /tmp/BENCH_pool_smoke.json
+python - <<'EOF'
+import json
+import os
+tolerance = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.30"))
+now = json.load(open("/tmp/BENCH_pool_smoke.json"))["sweep_pool"]
+assert now["identical"], "pool rows diverged from serial rows"
+base = json.load(open("BENCH_sched.json"))["sweep_pool"]
+floor = (1.0 - tolerance) * base["speedup"]
+assert now["speedup"] >= floor, (
+    f"sweep-pool regression: speedup {now['speedup']} < {floor:.2f} "
+    f"(committed {base['speedup']} - {tolerance:.0%})")
+print(f"sweep-pool gate OK: speedup {now['speedup']} vs committed "
+      f"{base['speedup']} (floor {floor:.2f}), rows bit-identical")
+EOF
+fi
+
 echo "== chaos smoke (seeded disruption schedules, parity + column audits) =="
 # The disruption subsystem's end-to-end gate: per chaos scenario, the
 # unspied array fast path runs with PodStore.audit_columns after every

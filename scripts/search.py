@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Policy search CLI: NSGA-II over the paper's policy knobs.
+
+Default mode runs the seeded multi-objective search (`repro.search`)
+over six scenario families, evaluates the paper's Table-4 default chain
+on the same traces, and writes the Pareto-front artifact with the
+"beats the paper's defaults by X% on scenario Y" comparison::
+
+    python scripts/search.py                      # committed-artifact run
+    python scripts/search.py --generations 4 --pop 12 --workers 8
+    python scripts/search.py --scenarios diurnal,heavy-tail --jobs 300
+    python scripts/search.py --chaos --objectives cost,mean_pending_s,lost_work_s
+    python scripts/search.py --smoke              # the CI gate
+
+The default settings reproduce the committed ``SEARCH_policy.json``
+bit-for-bit (seeded rng + hermetic cells; ``--workers`` changes only
+wall-clock time, never results).
+
+``--smoke`` is the seeded CI gate: a 2-generation × 6-individual
+micro-search on two scenario families, run serially *and* on a
+2-worker pool, asserting
+
+1. the Pareto front is non-empty and every front config was actually
+   simulated on every scenario;
+2. the parallel run's front is **bit-identical** to the serial one
+   (same vectors, same objective floats, same history).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.search import (baseline_rows, build_report, default_space,
+                          run_search, summarize)
+from repro.search.nsga2 import DEFAULT_OBJECTIVES, OBJECTIVES
+
+DEFAULT_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp",
+                     "scale-stress", "multi-tenant")
+SMOKE_SCENARIOS = ("diurnal", "heavy-tail")
+
+
+def run_smoke(out: str) -> dict:
+    space = default_space()
+    settings = dict(generations=2, pop_size=6, seed=7, n_jobs=40)
+    t0 = time.perf_counter()
+    serial = run_search(space, SMOKE_SCENARIOS, workers=1, **settings)
+    parallel = run_search(space, SMOKE_SCENARIOS, workers=2, **settings)
+    wall = time.perf_counter() - t0
+
+    assert serial.front, "smoke search produced an empty Pareto front"
+    for ind in serial.front:
+        assert set(ind.per_scenario) == set(SMOKE_SCENARIOS), (
+            f"front config missing scenario evaluations: {ind.config}")
+    assert [i.vector for i in serial.front] == \
+           [i.vector for i in parallel.front], "pool front drifted (vectors)"
+    assert [i.objectives for i in serial.front] == \
+           [i.objectives for i in parallel.front], (
+               "pool front drifted (objectives not bit-identical)")
+    assert serial.history == parallel.history, "pool history drifted"
+
+    base = baseline_rows(SMOKE_SCENARIOS, seed=settings["seed"],
+                         n_jobs=settings["n_jobs"])
+    report = build_report(serial, base)
+    report["smoke"] = {"wall_s": round(wall, 2), "serial_vs_pool": "identical"}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"search smoke OK: front={len(serial.front)} "
+          f"evals={serial.evaluations}, serial == 2-worker pool "
+          f"(bit-identical), {wall:.1f}s")
+    return report
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios",
+                    help=f"default {','.join(DEFAULT_SCENARIOS)}")
+    ap.add_argument("--generations", type=int, default=6)
+    ap.add_argument("--pop", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--jobs", type=int, default=120,
+                    help="trace length per scenario family")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool size (results are identical for "
+                         "any value; >1 only helps on multi-core hosts)")
+    ap.add_argument("--engine", default=None,
+                    help="force array|object (default: engine env/default)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="evaluate on the chaos scenario families with "
+                         "their seeded disruption schedules")
+    ap.add_argument("--objectives", default=",".join(DEFAULT_OBJECTIVES),
+                    help=f"comma-separated subset of {sorted(OBJECTIVES)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seeded CI micro-search + serial-vs-pool "
+                         "bit-identity check, runs in seconds")
+    ap.add_argument("--out", default=None,
+                    help="default SEARCH_policy.json "
+                         "(/tmp/SEARCH_smoke.json with --smoke)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return run_smoke(args.out or "/tmp/SEARCH_smoke.json")
+
+    if args.scenarios:
+        scenarios = tuple(s for s in args.scenarios.split(",") if s)
+    elif args.chaos:
+        from repro.scenarios.chaos import CHAOS_SCENARIOS
+        scenarios = tuple(sorted(CHAOS_SCENARIOS))
+    else:
+        scenarios = DEFAULT_SCENARIOS
+    objectives = tuple(s for s in args.objectives.split(",") if s)
+
+    t0 = time.perf_counter()
+    result = run_search(default_space(), scenarios,
+                        generations=args.generations, pop_size=args.pop,
+                        seed=args.seed, workers=args.workers,
+                        n_jobs=args.jobs, engine=args.engine,
+                        objectives=objectives, chaos=args.chaos,
+                        log=print)
+    base = baseline_rows(scenarios, seed=args.seed, n_jobs=args.jobs,
+                         engine=args.engine, chaos=args.chaos,
+                         workers=args.workers)
+    report = build_report(result, base)
+    report["settings"] = {
+        "generations": args.generations, "pop_size": args.pop,
+        "n_jobs": args.jobs, "engine": args.engine, "chaos": args.chaos,
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    out = args.out or "SEARCH_policy.json"
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    for line in summarize(report):
+        print(line)
+    print(f"# wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,23 @@ M2_SMALL = NodeTemplate(
     provisioning_delay_s=50.0,
 )
 
+# Nectar siblings (same family as repro.core.heterogeneous.NECTAR_CATALOG):
+# the policy search's node-template axis — half-size and double-size workers
+# at their catalog prices, so the cost objective responds to the mix choice.
+M2_TINY = NodeTemplate(
+    name="m2.tiny",
+    allocatable=Resources(cpu_m=460, mem_mb=gi(1.5)),
+    provisioning_delay_s=50.0,
+    price_per_s=0.0055,
+)
+
+M2_MEDIUM = NodeTemplate(
+    name="m2.medium",
+    allocatable=Resources(cpu_m=1900, mem_mb=gi(5.5)),
+    provisioning_delay_s=50.0,
+    price_per_s=0.022,
+)
+
 # Fleet adaptation: one TPU v5e host = 4 chips x 16 GB HBM; chip milli-shares
 # are the compressible axis, HBM the non-compressible one (DESIGN.md §2).
 TPU_V5E_HOST = NodeTemplate(
@@ -49,6 +66,12 @@ TPU_V5E_HOST = NodeTemplate(
     allocatable=Resources(cpu_m=4000, mem_mb=4 * 16 * 1024),
     provisioning_delay_s=120.0,
 )
+
+# Name -> template registry: `ExperimentSpec.template_name` (a picklable
+# string — sweep/search cells cross process boundaries) resolves here.
+NODE_TEMPLATES = {
+    t.name: t for t in (M2_TINY, M2_SMALL, M2_MEDIUM, TPU_V5E_HOST)
+}
 
 
 class CloudAdapter(NodeProvider):

@@ -28,7 +28,7 @@ import numpy as np
 from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node, NodeState
 from repro.core.pods import Pod
-from repro.core.rescheduler import _ShadowCapacity
+from repro.core.rescheduler import _ShadowBase, _ShadowCapacity
 from repro.core.resources import Resources
 
 
@@ -47,8 +47,20 @@ class NodeProvider(abc.ABC):
 class Autoscaler(abc.ABC):
     name = "autoscaler"
 
-    def __init__(self, provider: NodeProvider):
+    def __init__(self, provider: NodeProvider,
+                 scale_in_util_ceiling: Optional[float] = None):
         self.provider = provider
+        # Policy-search knob (the "lower threshold" of threshold-based
+        # cluster autoscalers): run Alg. 6 consolidation only while mean
+        # RAM utilization is at or below this ceiling — a busy cluster
+        # skips the drain/taint pass entirely.  None (default) preserves
+        # the paper's unconditional scale-in.
+        self.scale_in_util_ceiling = scale_in_util_ceiling
+        # Version-invalidated shadow snapshot shared by the Alg. 6
+        # placeability checks (same cache the reschedulers use): step 2/3
+        # candidates that don't consolidate reuse one base instead of
+        # re-snapshotting the free vectors per candidate.
+        self._shadow_base = _ShadowBase()
 
     @abc.abstractmethod
     def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
@@ -104,7 +116,19 @@ class Autoscaler(abc.ABC):
                 if node.autoscaled and node.state == NodeState.READY
                 and node.pods]
 
+    def _utilization(self, cluster: Cluster) -> float:
+        """Mean RAM req/cap ratio over READY|TAINTED nodes — the Table-5
+        quantity the threshold knobs gate on (0.0 on an empty cluster).
+        ``utilization_totals`` is incremental on the array engine and its
+        fsum reduction is flush-order independent, so reading it here does
+        not disturb the 20 s sampler."""
+        n_nodes, ram_sum, _cpu, _ppn = cluster.utilization_totals()
+        return ram_sum / n_nodes if n_nodes else 0.0
+
     def _scale_in_impl(self, cluster: Cluster, now: float) -> List[str]:
+        if (self.scale_in_util_ceiling is not None
+                and self._utilization(cluster) > self.scale_in_util_ceiling):
+            return []
         touched: List[str] = []
 
         # 1. Shut down empty dynamically-created nodes (READY or TAINTED).
@@ -131,14 +155,18 @@ class Autoscaler(abc.ABC):
                     touched.append(node.node_id)
         return touched
 
-    @staticmethod
-    def _all_placeable(cluster: Cluster, exclude: Node, pods: List[Pod]) -> bool:
+    def _all_placeable(self, cluster: Cluster, exclude: Node,
+                       pods: List[Pod]) -> bool:
         """True iff *all* of `pods` fit on other nodes (shadow accounting)."""
-        shadow = _ShadowCapacity(cluster, exclude=exclude)
-        ordered = sorted(pods, key=lambda p: (p.requests.mem_mb, p.uid),
-                         reverse=True)
-        return all(shadow.place_best_fit(p.requests) is not None
-                   for p in ordered)
+        base = self._shadow_base if cluster.arrays is not None else None
+        shadow = _ShadowCapacity(cluster, exclude=exclude, base=base)
+        try:
+            ordered = sorted(pods, key=lambda p: (p.requests.mem_mb, p.uid),
+                             reverse=True)
+            return all(shadow.place_best_fit(p.requests) is not None
+                       for p in ordered)
+        finally:
+            shadow.rollback()
 
 
 class VoidAutoscaler(Autoscaler):
@@ -158,14 +186,26 @@ class SimpleAutoscaler(Autoscaler):
 
     name = "non-binding"
 
-    def __init__(self, provider: NodeProvider, provisioning_interval_s: float = 60.0):
-        super().__init__(provider)
+    def __init__(self, provider: NodeProvider,
+                 provisioning_interval_s: float = 60.0,
+                 scale_out_bypass_util: Optional[float] = None,
+                 scale_in_util_ceiling: Optional[float] = None):
+        super().__init__(provider, scale_in_util_ceiling=scale_in_util_ceiling)
         self.provisioning_interval_s = provisioning_interval_s
+        # Policy-search knob (the "upper threshold"): when mean RAM
+        # utilization reaches this level the Alg. 5 rate limit is bypassed
+        # — a saturated cluster may launch every cycle instead of once per
+        # provisioning interval.  None (default) keeps the paper's
+        # unconditional rate limit.
+        self.scale_out_bypass_util = scale_out_bypass_util
         self._last_launch: Optional[float] = None
 
     def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
-        if (self._last_launch is None
-                or now - self._last_launch >= self.provisioning_interval_s):
+        rate_ok = (self._last_launch is None
+                   or now - self._last_launch >= self.provisioning_interval_s)
+        if not rate_ok and self.scale_out_bypass_util is not None:
+            rate_ok = self._utilization(cluster) >= self.scale_out_bypass_util
+        if rate_ok:
             node = self.provider.launch_node(now)
             cluster.add_node(node)
             self._last_launch = now
@@ -198,8 +238,9 @@ class BindingAutoscaler(Autoscaler):
 
     name = "binding"
 
-    def __init__(self, provider: NodeProvider):
-        super().__init__(provider)
+    def __init__(self, provider: NodeProvider,
+                 scale_in_util_ceiling: Optional[float] = None):
+        super().__init__(provider, scale_in_util_ceiling=scale_in_util_ceiling)
         self._tracked: Dict[str, _ProvisioningTracker] = {}
         self._pod_to_node: Dict[int, str] = {}
         self._noticed: set = set()   # node ids already given a replacement

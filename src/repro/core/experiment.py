@@ -35,9 +35,25 @@ class ExperimentSpec:
     initial_workers: int = 1
     static_workers: Optional[int] = None   # forces a fixed-size cluster
     template: object = None                # NodeTemplate; None -> M2_SMALL
+    # Picklable twin of `template`: a `repro.cloud.adapter.NODE_TEMPLATES`
+    # name — the policy search's node-template axis crosses process
+    # boundaries as a string.  Mutually exclusive with `template`.
+    template_name: Optional[str] = None
     max_pod_age_s: float = MAX_POD_AGE_S
     provisioning_interval_s: float = PROVISIONING_INTERVAL_S
     cycle_period_s: float = 10.0
+    # Policy-search knobs (repro.search).  All default to the paper's
+    # hard-coded behavior:
+    # * scheduler_weights — (w_pack, w_lr, w_bal) for scheduler="weighted"
+    #   (raises with any other scheduler: silently inert weights would make
+    #   searched configs unreproducible);
+    # * scale_out_bypass_util — NBAS Alg. 5 rate-limit bypass above this
+    #   mean RAM utilization (non-binding autoscaler only, None = never);
+    # * scale_in_util_ceiling — run Alg. 6 consolidation only at or below
+    #   this mean RAM utilization (None = always).
+    scheduler_weights: Optional[tuple] = None
+    scale_out_bypass_util: Optional[float] = None
+    scale_in_util_ceiling: Optional[float] = None
     failure_injector: object = None
     straggler_threshold: float = 0.0
     # repro.core.failures.StragglerInjector — wired into the provider's
@@ -106,10 +122,26 @@ class ExperimentSpec:
 def build_simulation(spec: ExperimentSpec) -> Simulation:
     # Imported here (not at module level) to avoid a package import cycle:
     # repro.cloud.adapter needs repro.core.autoscaler's NodeProvider.
-    from repro.cloud.adapter import M2_SMALL, SimCloudProvider
+    from repro.cloud.adapter import M2_SMALL, NODE_TEMPLATES, SimCloudProvider
+
+    if spec.template is not None and spec.template_name is not None:
+        raise ValueError("ExperimentSpec got both template and template_name;"
+                         " set at most one")
+    if spec.template_name is not None:
+        try:
+            template = NODE_TEMPLATES[spec.template_name]
+        except KeyError:
+            raise KeyError(
+                f"unknown template_name {spec.template_name!r}; known: "
+                f"{sorted(NODE_TEMPLATES)}") from None
+    else:
+        template = spec.template or M2_SMALL
 
     cost = CostModel(price_per_s=PRICE_PER_S)
-    provider = SimCloudProvider(spec.template or M2_SMALL, cost,
+    # Non-default templates bill at their own catalog price; M2_SMALL's
+    # entry equals PRICE_PER_S, so this is value-neutral for the default.
+    cost.price_table.setdefault(template.name, template.price_per_s)
+    provider = SimCloudProvider(template, cost,
                                 straggler_injector=spec.straggler_injector)
     use_arrays = None if spec.engine is None else (spec.engine != "object")
     cluster = Cluster(use_arrays=use_arrays, wave_select=spec.wave_select)
@@ -119,16 +151,26 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
     for _ in range(n_static):
         cluster.add_node(provider.make_static_node(0.0))
 
-    scheduler = SCHEDULERS[spec.scheduler]()
+    if spec.scheduler_weights is not None and spec.scheduler != "weighted":
+        raise ValueError(
+            f"scheduler_weights is only meaningful with scheduler='weighted'"
+            f" (got scheduler={spec.scheduler!r})")
+    if spec.scheduler == "weighted" and spec.scheduler_weights is not None:
+        scheduler = SCHEDULERS["weighted"](*spec.scheduler_weights)
+    else:
+        scheduler = SCHEDULERS[spec.scheduler]()
     rescheduler = RESCHEDULERS[spec.rescheduler](
         max_pod_age_s=spec.max_pod_age_s)
     if spec.autoscaler == "void":
         autoscaler = VoidAutoscaler(provider)
     elif spec.autoscaler == "non-binding":
         autoscaler = SimpleAutoscaler(
-            provider, provisioning_interval_s=spec.provisioning_interval_s)
+            provider, provisioning_interval_s=spec.provisioning_interval_s,
+            scale_out_bypass_util=spec.scale_out_bypass_util,
+            scale_in_util_ceiling=spec.scale_in_util_ceiling)
     elif spec.autoscaler == "binding":
-        autoscaler = BindingAutoscaler(provider)
+        autoscaler = BindingAutoscaler(
+            provider, scale_in_util_ceiling=spec.scale_in_util_ceiling)
     else:
         raise KeyError(spec.autoscaler)
 

@@ -60,6 +60,13 @@ class MetricsCollector:
     def median_pending_s(self) -> float:
         return statistics.median(self.pending_intervals) if self.pending_intervals else 0.0
 
+    def mean_pending_s(self) -> float:
+        """Mean per-pod pending interval — the policy-search objective
+        (repro.search): unlike the median it is sensitive to the long tail
+        a bad autoscaling policy produces."""
+        return (statistics.fmean(self.pending_intervals)
+                if self.pending_intervals else 0.0)
+
     def max_pending_s(self) -> float:
         return max(self.pending_intervals) if self.pending_intervals else 0.0
 
@@ -91,6 +98,7 @@ class ExperimentResult:
     cost: float
     duration_s: float
     median_pending_s: float
+    mean_pending_s: float
     max_pending_s: float
     avg_ram_ratio: float
     avg_cpu_ratio: float

@@ -59,6 +59,43 @@ class ReschedulePlan:
     relocations: Dict[int, Tuple[Pod, str]]   # uid -> (pod, target node id)
 
 
+class _ShadowBase:
+    """Version-keyed base snapshot shared by a cycle's shadow passes.
+
+    Rebuilding ``_ShadowCapacity`` costs O(n_slots) per candidate node per
+    blocked pod, and a deeply-backlogged cycle replays the identical failing
+    plan for hundreds of blocked pods against an *unchanged* cluster — the
+    ROADMAP bottleneck that forced the sweep onto the void rescheduler.
+    This cache keeps one base copy of the free vectors + READY mask, keyed
+    on the mirror's monotone ``version`` counter (any bind/unbind/
+    membership/state change bumps it), and serves shadows that *undo their
+    own writes* (verbatim old-value restore, so the base stays bit-exact)
+    instead of re-snapshotting.  ``failed_keys`` additionally latches
+    request sizes whose plan construction failed at this version: plan
+    construction is a pure function of (cluster state, pod.requests), so an
+    identical request can only fail identically until the version moves.
+    """
+
+    __slots__ = ("arr", "version", "free_cpu", "free_mem", "ready_mask",
+                 "failed_keys")
+
+    def __init__(self):
+        self.arr = None
+        self.version = -1
+
+    def refresh(self, arr) -> None:
+        if arr is self.arr and arr.version == self.version:
+            return
+        self.arr = arr
+        self.version = arr.version
+        # Same `alloc - used` float op free_views() applies — bit-identical
+        # to an uncached per-pod snapshot at this version.
+        self.free_cpu, self.free_mem = arr.free_views()
+        self.ready_mask = arr.live("active") & (
+            arr.live("state") == _engine.STATE_READY)
+        self.failed_keys = set()
+
+
 class _ShadowCapacity:
     """Hypothetical free-capacity tracker for multi-pod relocation planning.
 
@@ -67,12 +104,31 @@ class _ShadowCapacity:
     subtraction.  Dict mode (seed engine): per-node ``Resources`` map.  Both
     modes pick min (free_mem, node_id) and subtract with the same float ops,
     so plans are identical.
+
+    With a ``base`` (`_ShadowBase`), the shadow borrows the cached vectors
+    instead of snapshotting, records every write in an undo log, and
+    ``rollback()`` restores the stored old values verbatim — exact, unlike
+    add-the-delta-back, which is not an IEEE-754 inverse.  Callers that
+    pass ``base`` must call ``rollback()`` when done (try/finally).
     """
 
-    def __init__(self, cluster: Cluster, exclude: Node):
+    def __init__(self, cluster: Cluster, exclude: Node,
+                 base: Optional[_ShadowBase] = None):
         self._arr = cluster.arrays
+        self._undo = None
+        self._excluded = None
         if self._arr is not None:
             arr = self._arr
+            if base is not None:
+                base.refresh(arr)
+                self.free_cpu, self.free_mem = base.free_cpu, base.free_mem
+                self.mask = base.ready_mask
+                self._undo = []
+                if exclude._slot is not None and exclude._arrays is arr:
+                    slot = exclude._slot
+                    self._excluded = (slot, bool(self.mask[slot]))
+                    self.mask[slot] = False
+                return
             self.free_cpu, self.free_mem = arr.free_views()
             self.mask = arr.live("active") & (
                 arr.live("state") == _engine.STATE_READY)
@@ -94,6 +150,9 @@ class _ShadowCapacity:
                 return None
             best = self.free_mem[fits].min()
             slot = self._arr.first_by_id(fits & (self.free_mem == best))
+            if self._undo is not None:
+                self._undo.append((slot, self.free_cpu[slot],
+                                   self.free_mem[slot]))
             self.free_cpu[slot] -= req.cpu_m
             self.free_mem[slot] -= req.mem_mb
             return self._arr.node_ids[slot]
@@ -105,6 +164,18 @@ class _ShadowCapacity:
         self.free[nid] = self.free[nid] - req
         return nid
 
+    def rollback(self) -> None:
+        """Restore a base-backed shadow's writes (no-op otherwise)."""
+        if self._undo is not None:
+            for slot, cpu, mem in reversed(self._undo):
+                self.free_cpu[slot] = cpu
+                self.free_mem[slot] = mem
+            self._undo = []
+        if self._excluded is not None:
+            slot, was = self._excluded
+            self.mask[slot] = was
+            self._excluded = None
+
 
 class Rescheduler(abc.ABC):
     """Interface used by the orchestrator when a pod is unschedulable."""
@@ -114,6 +185,10 @@ class Rescheduler(abc.ABC):
     def __init__(self, max_pod_age_s: float = 60.0, sort_ascending: bool = False):
         self.max_pod_age_s = max_pod_age_s
         self.sort_ascending = sort_ascending
+        # Array-engine plan-construction cache, version-invalidated (see
+        # _ShadowBase): shared across every blocked pod of a cycle as long
+        # as nothing mutates the cluster in between.
+        self._shadow_base = _ShadowBase()
 
     @abc.abstractmethod
     def reschedule(self, cluster: Cluster, pod: Pod, now: float) -> RescheduleOutcome:
@@ -144,26 +219,51 @@ class Rescheduler(abc.ABC):
         return nodes
 
     def _build_plan(self, cluster: Cluster, pod: Pod) -> Optional[ReschedulePlan]:
+        # Plan construction is deterministic in (cluster state, pod.requests):
+        # on the array engine, latch request sizes that failed at the current
+        # mirror version so the deeply-backlogged case — many blocked pods of
+        # the same shape against an unchanged cluster — pays for one scan
+        # instead of one per pod.  The object path stays verbatim seed
+        # behavior (it is the parity reference; both paths build identical
+        # plans regardless).
+        arr = cluster.arrays
+        base = None
+        if arr is not None:
+            base = self._shadow_base
+            base.refresh(arr)
+            key = (pod.requests.cpu_m, pod.requests.mem_mb)
+            if key in base.failed_keys:
+                return None
+        plan = self._build_plan_uncached(cluster, pod, base)
+        if plan is None and base is not None:
+            base.failed_keys.add(key)
+        return plan
+
+    def _build_plan_uncached(self, cluster: Cluster, pod: Pod,
+                             base: Optional[_ShadowBase]) -> Optional[ReschedulePlan]:
         for node in self._candidate_nodes(cluster, pod):
             moveables = node.moveable_pods()
             if not moveables:
                 continue
             # Evict the largest movers first: fewest evictions to close the gap.
             moveables.sort(key=lambda p: (p.requests.mem_mb, p.uid), reverse=True)
-            shadow = _ShadowCapacity(cluster, exclude=node)
-            relocations: Dict[int, Tuple[Pod, str]] = {}
-            freed = 0.0
-            needed = pod.requests.mem_mb - node.free.mem_mb
-            for mover in moveables:
-                if freed >= needed - 1e-9:
-                    break
-                target = shadow.place_best_fit(mover.requests)
-                if target is None:
-                    continue
-                relocations[mover.uid] = (mover, target)
-                freed += mover.requests.mem_mb
-            if freed >= needed - 1e-9 and relocations:
-                return ReschedulePlan(victim=node, relocations=relocations)
+            shadow = _ShadowCapacity(cluster, exclude=node, base=base)
+            try:
+                relocations: Dict[int, Tuple[Pod, str]] = {}
+                freed = 0.0
+                needed = pod.requests.mem_mb - node.free.mem_mb
+                for mover in moveables:
+                    if freed >= needed - 1e-9:
+                        break
+                    target = shadow.place_best_fit(mover.requests)
+                    if target is None:
+                        continue
+                    relocations[mover.uid] = (mover, target)
+                    freed += mover.requests.mem_mb
+                if freed >= needed - 1e-9 and relocations:
+                    return ReschedulePlan(victim=node, relocations=relocations)
+            finally:
+                shadow.rollback()
         return None
 
     def _gated(self, pod: Pod, now: float) -> bool:

@@ -585,6 +585,93 @@ class KubernetesDefaultScheduler(Scheduler):
                            placer.alloc_cpu[r], placer.alloc_mem[r], req)
 
 
+def _weighted_scores(free_cpu, free_mem, alloc_cpu, alloc_mem, req,
+                     w_pack, w_lr, w_bal):
+    """Parameterized scoring: packing + LeastRequested + Balanced, weighted.
+
+    The policy-search scoring surface (repro.search): ``w_pack`` pulls
+    toward bin packing (fullest-after-placement node wins — best-fit's
+    regime), ``w_lr`` toward spreading (least-requested — k8s-default's
+    regime) and ``w_bal`` toward cpu/mem balance.  Shared by both engines
+    exactly like ``_k8s_scores``: scalars on the object path, vectors on
+    the array path, same IEEE-754 double ops either way, so scores are
+    bit-identical across engines.
+    """
+    cpu_frac = (free_cpu - req.cpu_m) / np.maximum(alloc_cpu, 1)
+    mem_frac = (free_mem - req.mem_mb) / np.maximum(alloc_mem, 1e-9)
+    # Packing keys on memory alone — best-fit's non-compressible axis
+    # (§6.1) — so it is not an affine shadow of LeastRequested (which
+    # averages both axes): the three weights span genuinely different
+    # orderings.
+    pack = 10.0 * (1.0 - mem_frac)
+    least_requested = 10.0 * (cpu_frac + mem_frac) / 2.0
+    balanced = 10.0 * (1.0 - np.abs(cpu_frac - mem_frac))
+    return w_pack * pack + w_lr * least_requested + w_bal * balanced
+
+
+class WeightedScoringScheduler(Scheduler):
+    """Tunable-weight scheduler — the policy-search scoring knob.
+
+    A continuous family that contains both ends of the paper's Fig.-4
+    comparison: ``(1, 0, 0)`` is ordering-equivalent to best-fit bin
+    packing on a homogeneous fleet (max packing == min free memory after
+    placement) and ``(0, 1, 1)`` is ordering-equivalent to the k8s-default
+    LeastRequested+Balanced blend (same sum, scaled by 2).
+    ``repro.search`` optimizes the three weights against the
+    cost/pending/utilization front.
+    """
+
+    name = "weighted"
+    wave_mode = "max"
+
+    def __init__(self, w_pack: float = 1.0, w_lr: float = 0.0,
+                 w_bal: float = 0.0):
+        total = w_pack + w_lr + w_bal
+        if not (total > 0.0):     # also rejects NaN
+            raise ValueError(
+                f"weighted scheduler needs w_pack + w_lr + w_bal > 0, got "
+                f"({w_pack}, {w_lr}, {w_bal})")
+        if min(w_pack, w_lr, w_bal) < 0.0:
+            raise ValueError(f"weights must be non-negative, got "
+                             f"({w_pack}, {w_lr}, {w_bal})")
+        self.weights = (float(w_pack), float(w_lr), float(w_bal))
+
+    def _scores(self, free_cpu, free_mem, alloc_cpu, alloc_mem, req):
+        w_pack, w_lr, w_bal = self.weights
+        return _weighted_scores(free_cpu, free_mem, alloc_cpu, alloc_mem,
+                                req, w_pack, w_lr, w_bal)
+
+    def select(self, nodes: List[Node], pod: Pod) -> Optional[Node]:
+        if not nodes:
+            return None
+
+        def score(n: Node) -> float:
+            free = n.free
+            cap = n.allocatable
+            return float(self._scores(free.cpu_m, free.mem_mb,
+                                      cap.cpu_m, cap.mem_mb, pod.requests))
+
+        scored = [(score(n), n) for n in nodes]
+        best = max(s for s, _ in scored)
+        return _lowest_id([n for s, n in scored if s == best])
+
+    def select_slot(self, arr, mask, free_cpu, free_mem, pod) -> int:
+        scores = self._scores(free_cpu, free_mem, arr.live("alloc_cpu"),
+                              arr.live("alloc_mem"), pod.requests)
+        best = scores[mask].max()
+        return arr.first_by_id(mask & (scores == best))
+
+    def wave_scores(self, placer, req, sl=slice(None)):
+        return self._scores(placer.free_cpu[sl], placer.free_mem[sl],
+                            placer.alloc_cpu[sl], placer.alloc_mem[sl], req)
+
+    def wave_score_at(self, placer, req, r: int):
+        # NumPy scalar ops are the same IEEE-754 doubles as the elementwise
+        # vector computation — bit-identical to a length-1 slice.
+        return self._scores(placer.free_cpu[r], placer.free_mem[r],
+                            placer.alloc_cpu[r], placer.alloc_mem[r], req)
+
+
 class FirstFitScheduler(Scheduler):
     """Ablation baseline: first feasible node in id order (classic FF)."""
 
@@ -623,5 +710,6 @@ class WorstFitScheduler(Scheduler):
 SCHEDULERS = {
     cls.name: cls
     for cls in (BestFitBinPackingScheduler, KubernetesDefaultScheduler,
-                FirstFitScheduler, WorstFitScheduler)
+                FirstFitScheduler, WorstFitScheduler,
+                WeightedScoringScheduler)
 }

@@ -525,6 +525,7 @@ class Simulation:
             cost=self.cost.total_cost(end),
             duration_s=end - start,
             median_pending_s=self.metrics.median_pending_s(),
+            mean_pending_s=self.metrics.mean_pending_s(),
             max_pending_s=self.metrics.max_pending_s(),
             avg_ram_ratio=self.metrics.avg_ram_ratio(),
             avg_cpu_ratio=self.metrics.avg_cpu_ratio(),

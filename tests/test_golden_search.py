@@ -1,0 +1,106 @@
+"""Golden search: a committed fixture of one seeded micro-search.
+
+A 2-generation × 6-individual NSGA-II run over two scenario families is
+pinned — Pareto-front vectors, decoded configs, aggregate objectives,
+per-scenario metrics, and the per-generation history — and must
+reproduce bit-for-bit on **both** engines (the search only sees
+`ExperimentResult` metrics, which the engine-parity suite holds
+identical, so one fixture pins the array and the object path at once).
+
+Any drift here means either the search internals changed (tournament
+order, crossover/mutation draws, selection tie-breaks) or a policy's
+simulated behavior moved.  To regenerate after an *intentional* change::
+
+    PYTHONPATH=src python tests/test_golden_search.py --regen
+
+and explain the behaviour shift in the commit.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+if __name__ == "__main__":          # --regen entry point (see module docstring)
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.search import default_space, run_search
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "data", "golden_search.json")
+
+SCENARIOS = ("diurnal", "heavy-tail")
+SETTINGS = dict(generations=2, pop_size=6, seed=7, n_jobs=40)
+
+# Per-scenario metrics pinned per front member (raw floats: the fixture
+# is a bit-exactness gate, not an approximate regression band).
+_ROW_KEYS = ("completed", "infeasible", "cost", "mean_pending_s",
+             "avg_ram_ratio", "evictions", "scale_outs", "scale_ins",
+             "max_nodes")
+
+
+def capture_search(engine):
+    """One pinned micro-search, JSON-round-trip normalized so ``==``
+    against the loaded fixture compares like with like."""
+    res = run_search(default_space(), SCENARIOS, workers=1, engine=engine,
+                     **SETTINGS)
+    doc = {
+        "scenarios": list(SCENARIOS),
+        "settings": {k: v for k, v in SETTINGS.items()},
+        "evaluations": res.evaluations,
+        "history": res.history,
+        "front": [{
+            "vector": list(ind.vector),
+            "config": ind.config,
+            "objectives": list(ind.objectives),
+            "per_scenario": {
+                sc: {k: row[k] for k in _ROW_KEYS}
+                for sc, row in ind.per_scenario.items()},
+        } for ind in res.front],
+    }
+    return json.loads(json.dumps(doc))
+
+
+@pytest.mark.parametrize("engine", ["array", "object"])
+def test_search_matches_golden_fixture(engine):
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    doc = capture_search(engine)
+    for key in golden:
+        assert doc[key] == golden[key], (
+            f"golden search drift in {key!r} ({engine} engine) — if "
+            f"intentional, regenerate with `PYTHONPATH=src python "
+            f"tests/test_golden_search.py --regen` and explain the "
+            f"semantic change in the commit")
+    assert doc == golden
+
+
+def test_golden_search_fixture_is_nontrivial():
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    assert golden["front"], "empty Pareto front pinned"
+    # The search must have simulated more configs than the seed population
+    # (otherwise generations did nothing) and kept a multi-point front.
+    assert golden["evaluations"] > SETTINGS["pop_size"]
+    assert len(golden["history"]) == SETTINGS["generations"]
+    for member in golden["front"]:
+        assert set(member["per_scenario"]) == set(SCENARIOS)
+    # At least one pinned config completes everywhere — the front is not
+    # all penalty configs.
+    assert any(all(row["completed"] for row in m["per_scenario"].values())
+               for m in golden["front"])
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        print(__doc__)
+        sys.exit(2)
+    arr = capture_search("array")
+    obj = capture_search("object")
+    assert arr == obj, "engines disagree; fix parity before pinning"
+    with open(FIXTURE, "w") as f:
+        json.dump(arr, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {FIXTURE}: front={len(arr['front'])}, "
+          f"evaluations={arr['evaluations']}")

@@ -36,18 +36,34 @@ if __name__ == "__main__":          # --regen entry point (see module docstring)
 from repro.core import ExperimentSpec, reset_id_counters
 from repro.core.experiment import build_simulation
 
-FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "data", "golden_trace.json")
+_DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+FIXTURE = os.path.join(_DATA, "golden_trace.json")
 
 SPEC = dict(workload="mixed", seed=3, scheduler="best-fit",
             rescheduler="non-binding", autoscaler="non-binding",
             initial_workers=1)
 
+# Second pinned case: the *binding* rescheduler (Alg. 3).  This drives
+# the plan-construction path the non-binding case never touches —
+# `_build_plan`'s shadow-capacity walk and its per-cycle cache — so
+# semantic drift there can't hide behind the NBR-NBAS fixture.  The
+# non-binding autoscaler keeps scale-in events in the log (BAS never
+# terminates a node on this workload).
+BINDING_SPEC = dict(workload="mixed", seed=3, scheduler="best-fit",
+                    rescheduler="binding", autoscaler="non-binding",
+                    initial_workers=1)
 
-def capture_trace(engine):
-    """Run the golden workload on `engine` and capture the full event log."""
+CASES = {
+    "nbr-nbas": (SPEC, FIXTURE),
+    "br-nbas": (BINDING_SPEC, os.path.join(_DATA,
+                                           "golden_trace_binding.json")),
+}
+
+
+def capture_trace(engine, spec=SPEC):
+    """Run one golden workload on `engine` and capture the full event log."""
     reset_id_counters()
-    sim = build_simulation(ExperimentSpec(engine=engine, **SPEC))
+    sim = build_simulation(ExperimentSpec(engine=engine, **spec))
     binds, evictions, completions = [], [], []
     cluster = sim.cluster
     inner_bind = cluster.on_bind
@@ -71,7 +87,7 @@ def capture_trace(engine):
     cluster.on_complete = on_complete
     result = sim.run()
     trace = {
-        "spec": SPEC,
+        "spec": spec,
         "binds": binds,
         "evictions": evictions,
         "completions": completions,
@@ -88,23 +104,27 @@ def capture_trace(engine):
 
 
 @pytest.mark.parametrize("engine", ["array", "object"])
-def test_trace_matches_golden_fixture(engine):
-    with open(FIXTURE) as f:
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_trace_matches_golden_fixture(case, engine):
+    spec, fixture = CASES[case]
+    with open(fixture) as f:
         golden = json.load(f)
-    trace = capture_trace(engine)
+    trace = capture_trace(engine, spec)
     for key in golden:
         assert trace[key] == golden[key], (
-            f"golden-trace drift in {key!r} on the {engine} engine — if this "
-            f"change is intentional, regenerate with "
+            f"golden-trace drift in {key!r} ({case}, {engine} engine) — if "
+            f"this change is intentional, regenerate with "
             f"`PYTHONPATH=src python tests/test_golden_trace.py --regen` "
             f"and explain the semantic change in the commit")
     assert trace == golden
 
 
-def test_fixture_is_nontrivial():
-    """The fixture must keep exercising the interesting machinery: binds,
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_fixture_is_nontrivial(case):
+    """Each fixture must keep exercising the interesting machinery: binds,
     evictions (rescheduler), scale events (autoscaler) and samples."""
-    with open(FIXTURE) as f:
+    _, fixture = CASES[case]
+    with open(fixture) as f:
         golden = json.load(f)
     assert len(golden["binds"]) >= 50
     assert golden["evictions"], "fixture lost its rescheduler activity"
@@ -117,14 +137,16 @@ if __name__ == "__main__":
     if "--regen" not in sys.argv:
         print(__doc__)
         sys.exit(2)
-    trace = capture_trace("array")
-    obj = capture_trace("object")
-    assert trace == obj, "engines disagree; fix parity before regenerating"
-    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
-    with open(FIXTURE, "w") as f:
-        json.dump(trace, f, indent=1)
-        f.write("\n")
-    print(f"wrote {FIXTURE}: {len(trace['binds'])} binds, "
-          f"{len(trace['evictions'])} evictions, "
-          f"{len(trace['completions'])} completions, "
-          f"{len(trace['samples'])} samples")
+    os.makedirs(_DATA, exist_ok=True)
+    for case, (spec, fixture) in sorted(CASES.items()):
+        trace = capture_trace("array", spec)
+        obj = capture_trace("object", spec)
+        assert trace == obj, (
+            f"engines disagree on {case}; fix parity before regenerating")
+        with open(fixture, "w") as f:
+            json.dump(trace, f, indent=1)
+            f.write("\n")
+        print(f"wrote {fixture} ({case}): {len(trace['binds'])} binds, "
+              f"{len(trace['evictions'])} evictions, "
+              f"{len(trace['completions'])} completions, "
+              f"{len(trace['samples'])} samples")

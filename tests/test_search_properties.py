@@ -1,0 +1,222 @@
+"""Property tests for the NSGA-II internals (repro.search).
+
+Each invariant runs under a numpy-seeded driver that always executes;
+when `hypothesis` is installed (optional dev dependency, same pattern as
+tests/test_pod_store.py), a wrapper widens the search over random
+objective sets and vectors.
+
+Invariants pinned here:
+
+* `fast_non_dominated_sort` partitions indices exactly (every index in
+  exactly one front), front 0 is the non-dominated set, no member of a
+  later front dominates a member of an earlier one, and every member of
+  front k>0 is dominated by someone in front k-1;
+* `crowding_distance` gives every objective's boundary points ``+inf``
+  and non-negative finite interior distances;
+* `mutate` / `sbx_crossover` keep vectors inside the space bounds with
+  integral choice genes (after canonicalization);
+* `ParamSpace.encode`/`decode` are **exact** inverses (``==``, not
+  approx) on sampled configs, and sampling/validation agree.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.search import (PAPER_DEFAULT_CONFIG, crowding_distance,
+                          default_space, dominates, fast_non_dominated_sort,
+                          mutate, sbx_crossover)
+from repro.search.paramspace import ChoiceParam, FloatParam, ParamSpace
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _random_objectives(rng, n, m, dup_prob=0.3):
+    """Random minimization objectives with deliberate duplicates/ties —
+    the degenerate cases sorting and crowding must stay exact on."""
+    objs = [tuple(float(x) for x in rng.integers(0, 6, size=m))
+            for _ in range(n)]
+    for i in range(1, n):
+        if rng.random() < dup_prob:
+            objs[i] = objs[int(rng.integers(i))]
+    return objs
+
+
+def check_front_partition(objs):
+    fronts = fast_non_dominated_sort(objs)
+    flat = [i for front in fronts for i in front]
+    assert sorted(flat) == list(range(len(objs))), "not a partition"
+    assert all(front for front in fronts), "empty front emitted"
+    # Front 0 is exactly the non-dominated set.
+    for i in fronts[0]:
+        assert not any(dominates(objs[j], objs[i]) for j in range(len(objs)))
+    rank = {i: r for r, front in enumerate(fronts) for i in front}
+    for i, a in enumerate(objs):
+        for j, b in enumerate(objs):
+            if dominates(a, b):
+                assert rank[i] < rank[j], (
+                    f"{i} dominates {j} but ranks {rank[i]} >= {rank[j]}")
+    # Every member of front k>0 is dominated by someone one front up.
+    for r in range(1, len(fronts)):
+        for j in fronts[r]:
+            assert any(dominates(objs[i], objs[j]) for i in fronts[r - 1])
+    return fronts
+
+
+def check_crowding(objs, front):
+    dist = crowding_distance(objs, front)
+    assert len(dist) == len(front)
+    assert all(d >= 0.0 for d in dist)
+    if len(front) <= 2:
+        assert all(math.isinf(d) for d in dist)
+        return
+    m = len(objs[front[0]])
+    for k in range(m):
+        vals = [objs[i][k] for i in front]
+        # Whoever holds an objective's min/max must be +inf.
+        assert math.isinf(dist[vals.index(min(vals))])
+        assert math.isinf(dist[max(range(len(vals)),
+                                   key=lambda i: (vals[i], i))])
+
+
+def test_front_partition_and_crowding_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = int(rng.integers(1, 25))
+        m = int(rng.integers(1, 4))
+        objs = _random_objectives(rng, n, m)
+        fronts = check_front_partition(objs)
+        for front in fronts:
+            check_crowding(objs, front)
+
+
+def test_single_and_identical_points():
+    assert fast_non_dominated_sort([(1.0, 2.0)]) == [[0]]
+    # All-identical points: nobody dominates anybody -> one front.
+    objs = [(3.0, 3.0)] * 5
+    assert fast_non_dominated_sort(objs) == [[0, 1, 2, 3, 4]]
+    # Zero-span objectives: index tie-breaks pick the boundary holders,
+    # interior duplicates are maximally crowded (distance 0).
+    dist = crowding_distance(objs, [0, 1, 2, 3, 4])
+    assert sum(math.isinf(d) for d in dist) == 2
+    assert all(d == 0.0 for d in dist if not math.isinf(d))
+
+
+def test_crowding_extremes_are_inf_on_known_front():
+    objs = [(0.0, 3.0), (1.0, 2.0), (2.0, 1.0), (3.0, 0.0)]
+    dist = crowding_distance(objs, [0, 1, 2, 3])
+    assert math.isinf(dist[0]) and math.isinf(dist[3])
+    assert all(0.0 < d < math.inf for d in dist[1:3])
+    # Interior gaps are symmetric here: both middle points see the same
+    # normalized neighbor span on both objectives.
+    assert dist[1] == dist[2]
+
+
+def _check_vector_valid(space, vec):
+    assert len(vec) == len(space)
+    for v, (lo, hi), p in zip(vec, space.bounds(), space.params):
+        assert lo <= v <= hi, f"{p.name}: {v} outside [{lo}, {hi}]"
+        if isinstance(p, ChoiceParam):
+            assert v == float(int(v)), f"{p.name}: non-integral choice gene"
+    space.validate(space.decode(vec))   # decodes to an in-range config
+
+
+def test_mutation_and_crossover_stay_in_bounds_seeded():
+    space = default_space()
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        v1 = space.encode(space.sample(rng))
+        v2 = space.encode(space.sample(rng))
+        c1, c2 = sbx_crossover(rng, v1, v2, space)
+        for child in (c1, c2):
+            m = mutate(rng, child, space, prob=0.8)
+            canon = space.encode(space.decode(m))
+            _check_vector_valid(space, canon)
+
+
+def test_encode_decode_exact_round_trip_seeded():
+    space = default_space()
+    rng = np.random.default_rng(2)
+    for _ in range(200):
+        cfg = space.sample(rng)
+        vec = space.encode(cfg)
+        assert space.decode(vec) == cfg          # exact, not approximate
+        assert space.encode(space.decode(vec)) == vec
+    vec = space.encode(PAPER_DEFAULT_CONFIG)
+    assert space.decode(vec) == PAPER_DEFAULT_CONFIG
+
+
+def test_sampling_is_seed_deterministic():
+    space = default_space()
+    a = [space.sample(np.random.default_rng(7)) for _ in range(3)]
+    b = [space.sample(np.random.default_rng(7)) for _ in range(3)]
+    assert a == b
+
+
+def test_validation_rejects_bad_configs():
+    space = default_space()
+    cfg = dict(PAPER_DEFAULT_CONFIG)
+    cfg["w_pack"] = 1.5
+    with pytest.raises(ValueError):
+        space.validate(cfg)
+    cfg = dict(PAPER_DEFAULT_CONFIG)
+    cfg["rescheduler"] = "mystery"
+    with pytest.raises(ValueError):
+        space.validate(cfg)
+    cfg = dict(PAPER_DEFAULT_CONFIG)
+    del cfg["w_bal"]
+    with pytest.raises(ValueError):
+        space.validate(cfg)
+    with pytest.raises(ValueError):
+        space.validate({**PAPER_DEFAULT_CONFIG, "extra_knob": 1.0})
+    with pytest.raises(TypeError):
+        space.validate({**PAPER_DEFAULT_CONFIG, "w_pack": 1})  # int, not float
+    with pytest.raises(ValueError):
+        ParamSpace((FloatParam("x", 0.0, 1.0), FloatParam("x", 0.0, 2.0)))
+    with pytest.raises(ValueError):
+        FloatParam("y", 1.0, 1.0)
+    with pytest.raises(ValueError):
+        ChoiceParam("z", ("a", "a"))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestHypothesisWidened:
+    @staticmethod
+    def _objs_strategy():
+        point = st.tuples(*([st.integers(0, 5).map(float)] * 3))
+        return st.lists(point, min_size=1, max_size=20)
+
+    def test_front_partition(self):
+        @given(self._objs_strategy())
+        @settings(max_examples=200, deadline=None)
+        def prop(objs):
+            fronts = check_front_partition(objs)
+            for front in fronts:
+                check_crowding(objs, front)
+        prop()
+
+    def test_mutation_bounds(self):
+        space = default_space()
+
+        @given(st.integers(0, 2**31 - 1))
+        @settings(max_examples=100, deadline=None)
+        def prop(seed):
+            rng = np.random.default_rng(seed)
+            v = mutate(rng, space.encode(space.sample(rng)), space, prob=1.0)
+            _check_vector_valid(space, space.encode(space.decode(v)))
+        prop()
+
+    def test_round_trip(self):
+        space = default_space()
+
+        @given(st.integers(0, 2**31 - 1))
+        @settings(max_examples=100, deadline=None)
+        def prop(seed):
+            cfg = space.sample(np.random.default_rng(seed))
+            assert space.decode(space.encode(cfg)) == cfg
+        prop()
