@@ -82,6 +82,13 @@ SCALES = {
 }
 WARMUP_CYCLES = 5
 FULL_RUN_REPEATS = 3
+# The small scale is the ci.sh regression smoke: like full_run, a single
+# sample wobbles far more (observed ±25% on the 1-core container class)
+# than the effects the -30% gate wants to resolve, so its per-engine
+# measurement is the median of SMALL_SMOKE_REPEATS runs (cheap: ~0.3 s
+# per array run).  The larger scales stay single-shot — their object-
+# engine runs are the expensive part and they are not absolute-gated.
+SMALL_SMOKE_REPEATS = 3
 
 # Committed end-to-end full-run wall times at the large scale: PR 2
 # (BENCH_sched.json @ ba0bc49, the telemetry/timeline reference) and PR 3
@@ -149,11 +156,15 @@ def bench_scale(scale: str, engines) -> dict:
     cfg = SCALES[scale]
     row = {"nodes": cfg["nodes"], "pods": cfg["pods"], "engines": {}}
     cap = cfg["object_cap"]
+    repeats = SMALL_SMOKE_REPEATS if scale == "small" else 1
     for engine in engines:
         # Both engines are measured over the same capped cycle window for the
         # speedup ratio; the array engine also runs to completion when the
         # object run was capped (for the end-to-end number).
-        row["engines"][engine] = run_one(scale, engine, max_cycles=cap)
+        samples = sorted((run_one(scale, engine, max_cycles=cap)
+                          for _ in range(repeats)),
+                         key=lambda r: r["cycle_throughput_pods_per_s"])
+        row["engines"][engine] = samples[len(samples) // 2]
         print(f"bench_sched.{scale}.{engine},"
               f"{1e3 * row['engines'][engine]['mean_cycle_ms']:.1f},"
               f"{row['engines'][engine]['cycle_throughput_pods_per_s']}")
@@ -351,6 +362,21 @@ def main(argv=None) -> dict:
         report["sweep_pool"] = bench_sweep_pool(workers=args.pool_workers)
     if args.kernels:
         report["wave_select_kernels"] = bench_wave_kernels()
+    # Preserve entries other benches merged into the same file (e.g. the
+    # `manyworld` lane-evaluator entry from bench_manyworld.py) and, on a
+    # partial --scale run, the scales this invocation didn't re-measure.
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+        except (OSError, ValueError):
+            prev = {}
+        for key, value in prev.items():
+            if key == "scales":
+                for scale, row in value.items():
+                    report["scales"].setdefault(scale, row)
+            else:
+                report.setdefault(key, value)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"# wrote {args.out}")

@@ -179,3 +179,60 @@ print(f"full-run gate OK: {full['wall_s']}s vs committed {base_wall}s "
       f"(ceiling {ceiling:.3f}s)")
 EOF
 fi
+
+echo "== many-world lane gates (parity smoke + speedup + regression) =="
+# The lane evaluator's end-to-end gates.  All of them need JAX — without
+# it `workers="lanes"` falls back to serial `run_cell` (covered by
+# tier-1), so the perf comparison would be measuring nothing.
+if ! python -c "import jax" >/dev/null 2>&1; then
+    echo "many-world gates skipped (JAX not importable)"
+else
+# Lane-parity smoke: every scheduler in the lane envelope, two seeds —
+# `workers="lanes"` must reproduce the serial rows bit-for-bit (wall_s
+# excepted: a lane reports its share of the batch wall).
+python - <<'EOF'
+from repro.manyworld.lanes import SCHEDULERS
+from repro.search.runner import CellSpec, run_cells
+
+cells = [CellSpec(scenario="heavy-tail", scheduler=sched, autoscaler="void",
+                  rescheduler="void", seed=seed, n_jobs=30,
+                  initial_workers=3)
+         for sched in SCHEDULERS for seed in (0, 1)]
+strip = lambda rows: [{k: v for k, v in r.items() if k != "wall_s"}
+                      for r in rows]
+serial = run_cells(cells, workers=1)
+lanes = run_cells(cells, workers="lanes")
+assert strip(lanes) == strip(serial), "lane rows diverged from serial rows"
+print(f"lane-parity smoke OK: {len(cells)} cells over "
+      f"{len(SCHEDULERS)} schedulers, rows bit-identical")
+EOF
+# Speedup gate (machine-independent: lanes vs serial measured on the
+# same box in the same run; the bench re-asserts row parity internally):
+# the 256-lane warm batch must clear the 5x bar over serial cells.
+python benchmarks/bench_manyworld.py --lanes 256 \
+    --out /tmp/BENCH_manyworld_smoke.json
+python - <<'EOF'
+import json
+import os
+
+cur = json.load(open("/tmp/BENCH_manyworld_smoke.json"))
+cur = cur["manyworld"]["per_lanes"]["256"]
+assert cur["speedup_vs_serial"] >= 5.0, (
+    f"lane-evaluator speedup collapsed: {cur['speedup_vs_serial']}x < 5x")
+print(f"lane-speedup gate OK: {cur['speedup_vs_serial']}x at 256 lanes")
+# Bench-regression gate: warm lanes/s within tolerance of the committed
+# BENCH_sched.json baseline.  Machine-dependent like the other bench
+# gates; skipped with BENCH_REGRESSION_SKIP=1.
+if os.environ.get("BENCH_REGRESSION_SKIP") == "1":
+    print("lane-regression gate skipped (BENCH_REGRESSION_SKIP=1)")
+else:
+    tolerance = float(os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.30"))
+    base = json.load(open("BENCH_sched.json"))["manyworld"]["per_lanes"]["256"]
+    floor = (1.0 - tolerance) * base["lanes_per_s"]
+    assert cur["lanes_per_s"] >= floor, (
+        f"lane-evaluator regression: {cur['lanes_per_s']} lanes/s < "
+        f"{floor:.0f} (committed {base['lanes_per_s']} - {tolerance:.0%})")
+    print(f"lane-regression gate OK: {cur['lanes_per_s']} lanes/s vs "
+          f"committed {base['lanes_per_s']} (floor {floor:.0f})")
+EOF
+fi

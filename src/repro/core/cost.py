@@ -7,12 +7,23 @@ are billed for the whole scheduling duration of the workload.
 
 The fleet adaptation uses the identical model with a per-node-type price table
 (heterogeneous node types are a paper-§8 extension, off by default).
+
+Closed records are mirrored into SoA columns (start / end / node_type) as
+they retire, so the end-of-run queries (`total_cost`, `total_node_seconds`)
+are one vectorized ceil/multiply reduction over the billing history instead
+of a per-record method-call walk — at 2k autoscaled nodes that walk was ~5%
+of full-run wall time.  The float contract is unchanged: per-record seconds
+are ``ceil(max(0, end-start))`` (bit-identical to ``math.ceil`` below 2^53)
+and the cost accumulates left-to-right in record-retirement order, so the
+totals match the scalar loop bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.cluster import Node
 
@@ -40,6 +51,11 @@ class CostModel:
         self.price_table = price_table or {}
         self.records: Dict[str, BillingRecord] = {}
         self.closed: List[BillingRecord] = []
+        # SoA mirror of `closed` (same order): the query path reduces over
+        # these columns instead of walking record objects.
+        self._closed_start: List[float] = []
+        self._closed_end: List[float] = []
+        self._closed_type: List[str] = []
 
     def price_of(self, node_type: str) -> float:
         return self.price_table.get(node_type, self.price_per_s)
@@ -65,13 +81,26 @@ class CostModel:
                 f"a node this CostModel never provisioned")
         rec.end = now
         self.closed.append(rec)
+        self._closed_start.append(rec.start)
+        self._closed_end.append(now)
+        self._closed_type.append(rec.node_type)
 
     def close_all(self, now: float) -> None:
-        """End of experiment: static/running nodes stop billing now."""
-        for rec in list(self.records.values()):
-            rec.end = now
-            self.closed.append(rec)
+        """End of experiment: static/running nodes stop billing now.
+
+        One bulk column append over the open set (insertion order, same as
+        the retired-record order the scalar walk produced) instead of a
+        per-node close loop."""
+        if not self.records:
+            return
+        recs = list(self.records.values())
         self.records.clear()
+        for rec in recs:
+            rec.end = now
+        self.closed.extend(recs)
+        self._closed_start.extend(rec.start for rec in recs)
+        self._closed_end.extend(now for _ in recs)
+        self._closed_type.extend(rec.node_type for rec in recs)
 
     # -- queries ---------------------------------------------------------------
     def _resolve_now(self, now: Optional[float]) -> float:
@@ -91,16 +120,53 @@ class CostModel:
                 "pass the current simulation time or call close_all first")
         return 0.0   # unused: only closed records remain
 
+    def _seconds_column(self, now: float) -> "tuple":
+        """``(seconds, node_types)`` over closed-then-open records.
+
+        ``seconds`` is one vectorized ``ceil(max(0, end-start))`` reduction
+        — bit-identical to ``BillingRecord.seconds`` (float64 ``np.ceil``
+        equals ``math.ceil`` for any billing span below 2^53 seconds)."""
+        if len(self._closed_start) != len(self.closed):   # external mutation
+            self._closed_start = [r.start for r in self.closed]
+            self._closed_end = [now if r.end is None else r.end
+                                for r in self.closed]
+            self._closed_type = [r.node_type for r in self.closed]
+        open_recs = list(self.records.values())
+        starts = np.fromiter(
+            (s for s in self._closed_start), dtype=np.float64,
+            count=len(self._closed_start))
+        ends = np.fromiter(
+            (e for e in self._closed_end), dtype=np.float64,
+            count=len(self._closed_end))
+        if open_recs:
+            starts = np.concatenate(
+                [starts, np.fromiter((r.start for r in open_recs),
+                                     dtype=np.float64, count=len(open_recs))])
+            ends = np.concatenate(
+                [ends, np.full(len(open_recs), now, dtype=np.float64)])
+        seconds = np.ceil(np.maximum(0.0, ends - starts))
+        types = self._closed_type + [r.node_type for r in open_recs]
+        return seconds, types
+
     def total_cost(self, now: Optional[float] = None) -> float:
         now = self._resolve_now(now)
+        seconds, types = self._seconds_column(now)
+        if not types:
+            return 0.0
+        prices = np.fromiter((self.price_of(t) for t in types),
+                             dtype=np.float64, count=len(types))
+        # Left-to-right accumulation in record order: the per-term products
+        # are IEEE-identical to the scalar loop's `seconds * price`, and the
+        # running float sum must visit them in the same order to keep the
+        # golden-fixture cost bits.
         total = 0.0
-        for rec in self.closed:
-            total += rec.seconds(now) * self.price_of(rec.node_type)
-        for rec in self.records.values():
-            total += rec.seconds(now) * self.price_of(rec.node_type)
+        for term in (seconds * prices).tolist():
+            total += term
         return total
 
     def total_node_seconds(self, now: Optional[float] = None) -> int:
         now = self._resolve_now(now)
-        return (sum(r.seconds(now) for r in self.closed)
-                + sum(r.seconds(now) for r in self.records.values()))
+        seconds, _ = self._seconds_column(now)
+        # Exact: every element is a small non-negative integer-valued float,
+        # so the float64 sum is exact far beyond any plausible fleet size.
+        return int(seconds.sum())

@@ -327,6 +327,24 @@ class ClusterArrays:
         return (self._samp_n, math.fsum(self._samp_ram),
                 math.fsum(self._samp_cpu), self._samp_pods)
 
+    # -- many-world export -----------------------------------------------------
+    def lane_snapshot(self) -> dict:
+        """Rank-ordered accounting columns for one many-world lane
+        (`repro.manyworld`): copies of alloc/used/pod_count plus the READY
+        mask over the active slots, permuted into lexicographic node_id
+        order — the same permutation `WavePlacer` ranks by, so index ``r``
+        here is the lane engine's node ``r``.  Fancy indexing copies float
+        bits verbatim; the snapshot stays valid after the mirror moves on."""
+        rank = self._sorted_slots
+        return {
+            "alloc_cpu": self.alloc_cpu[rank],
+            "alloc_mem": self.alloc_mem[rank],
+            "used_cpu": self.used_cpu[rank],
+            "used_mem": self.used_mem[rank],
+            "pod_count": self.pod_count[rank].copy(),
+            "ready": self.state[rank] == STATE_READY,
+        }
+
     # -- tie-breaks ------------------------------------------------------------
     def first_by_id(self, mask: np.ndarray) -> int:
         """Slot of the lexicographically-smallest node_id with mask True,
@@ -624,6 +642,20 @@ class PodStore:
         # later materialization transfers them onto the Pod and drops the
         # entry.  row -> [interval, ...]
         self.closed_intervals = {}
+        # -- completion log ---------------------------------------------------
+        # Append-only finish-time index written by the simulation's
+        # completion scheduler: each cycle appends its newly bound batch
+        # rows sorted by completion timestamp and pushes one POD_DONE event
+        # per distinct timestamp carrying a ``(lo, hi)`` range into these
+        # columns — replacing the per-pod ``(uid, incarnation)`` dict the
+        # event path used to maintain.  ``done_incs`` snapshots each row's
+        # incarnation at schedule time (the staleness check at fire time);
+        # ``done_consumed`` counts fired entries, and the log resets to
+        # empty whenever every scheduled entry has fired (bounding it by
+        # the in-flight completion window, not the trace length).
+        self.done_rows = []                # int (store row)
+        self.done_incs = []                # int (incarnation when scheduled)
+        self.done_consumed = 0
         # -- interned spec table ----------------------------------------------
         # Keyed by id(spec), not value: shells must carry the *identical*
         # spec object the seed path would have stored (``pod.spec is
@@ -638,6 +670,45 @@ class PodStore:
         self._spec_dur = []                # spec id -> duration_s
         # -- materialized shells ----------------------------------------------
         self.shells = {}                   # row -> Pod
+
+    # -- completion log --------------------------------------------------------
+    def log_completions(self, rows, incs) -> tuple:
+        """Append one same-timestamp completion bucket; returns its
+        ``(lo, hi)`` range (the POD_DONE payload)."""
+        lo = len(self.done_rows)
+        self.done_rows.extend(rows)
+        self.done_incs.extend(incs)
+        return lo, len(self.done_rows)
+
+    def consume_completions(self, lo: int, hi: int) -> None:
+        """Mark one fired ``(lo, hi)`` bucket consumed; when every logged
+        entry has fired the log resets, so its footprint tracks the
+        in-flight completion window (POD_DONE events fire in time order,
+        not log order — ranges stay valid because the reset only happens
+        at quiescence)."""
+        self.done_consumed += hi - lo
+        if self.done_consumed == len(self.done_rows):
+            self.done_rows.clear()
+            self.done_incs.clear()
+            self.done_consumed = 0
+
+    # -- many-world export -----------------------------------------------------
+    def lane_columns(self) -> dict:
+        """Pending-row workload columns for one many-world lane
+        (`repro.manyworld.lanes.stack_lanes` input): float64 request /
+        duration / submit columns plus the batch-kind mask over the rows
+        still PENDING, in row (== FIFO submission) order — the order the
+        wave walks them.  Integer cpu_m is exact in float64."""
+        pend = [row for row in range(self.n_rows)
+                if self.phase[row] == POD_PENDING]
+        return {
+            "arrival_t": np.array([self.pending_since[r] for r in pend]),
+            "cpu_m": np.array([float(self.cpu_m[r]) for r in pend]),
+            "mem_mb": np.array([self.mem_mb[r] for r in pend]),
+            "duration_s": np.array([self.duration_s[r] for r in pend]),
+            "is_batch": np.array([not (self.flags[r] & POD_F_SERVICE)
+                                  for r in pend], bool),
+        }
 
     # -- spec interning --------------------------------------------------------
     def _intern_spec(self, spec) -> int:

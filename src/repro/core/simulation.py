@@ -10,9 +10,11 @@ one-entry-per-event heap:
   every arrival due before the next non-arrival event as **one batch**
   (50 k trace entries collapse into a few hundred batch events);
 * the **event heap** — everything else, with POD_DONE *bucketed*: each
-  cycle groups the pods it bound by completion timestamp and pushes one
-  event per distinct timestamp carrying the whole batch (stale entries are
-  invalidated per pod via the incarnation counter).
+  cycle sorts the pods it bound by completion timestamp into the
+  PodStore's append-only completion log and pushes one event per distinct
+  timestamp carrying a ``(lo, hi)`` range into that log (stale entries are
+  filtered at fire time via the phase/incarnation columns — there is no
+  per-pod scheduling dict).
 
 Event kinds:
 
@@ -50,7 +52,7 @@ import heapq
 import itertools
 import time
 from bisect import bisect_right
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core import engine as _engine
 from repro.core.autoscaler import Autoscaler
@@ -180,7 +182,6 @@ class Simulation:
         self.failure_injector = failure_injector
         self.now = 0.0
         self.timeline: Optional[Timeline] = None
-        self._completion_scheduled: Dict[Tuple[int, int], bool] = {}
         self.cycle_wall_s: List[float] = []    # per-cycle latency (bench)
         self.cycle_placed: List[int] = []      # per-cycle placements (bench)
         self.n_cycles = 0
@@ -316,19 +317,29 @@ class Simulation:
         event, so the event heap sees one push per distinct completion time
         per cycle instead of one per pod.
 
-        Drained entries are ``Pod`` objects (object-path binds) or PodStore
-        rows (ints, shell-less fast-path binds) in global bind order; rows
-        whose shell has materialized since the bind rejoin the pod path, so
-        a bucket entry is a row only while the pod is column-only.  Bucket
-        entries keep that shape — ``(pod | row, incarnation)`` — and both
-        shapes compute ``t_done`` with the identical float ops (a shell-less
-        row has ``progress_s == 0`` by construction)."""
-        buckets: Dict[float, list] = {}
-        scheduled = self._completion_scheduled
+        The cycle's entries are stable-sorted by completion time (bind
+        order preserved within a timestamp — the per-pod event order the
+        seed engine produced for equal timestamps).  On the shell-less fast
+        path they append to the PodStore's columnar completion log
+        (:meth:`PodStore.log_completions`) and each bucket's POD_DONE
+        payload is a ``(lo, hi)`` range into it; a cycle that drained any
+        ``Pod`` object (object engine, or a shell materialized since the
+        bind) falls back to list payloads of ``(pod | row, incarnation)``.
+        Both shapes compute ``t_done`` with the identical float ops (a
+        shell-less row has ``progress_s == 0`` by construction).
+
+        There is no cross-cycle scheduling dict: a ``(uid, incarnation)``
+        pair can only be drained twice within *one* cycle (bind → evict →
+        re-bind bumps the incarnation, and the drain list resets every
+        cycle), so a per-call ``seen`` set is the whole dedup story; fire-
+        time staleness is the phase/incarnation check in `_on_pod_done`."""
         node_of = self.cluster.nodes.get
         now = self.now
         store = self.orch.store
         slot_nodes = self.cluster._slot_nodes
+        entries: list = []                 # (t_done, row | pod, incarnation)
+        all_rows = True
+        seen = set()
         for item in self.orch.drain_newly_bound_batch():
             if type(item) is int:
                 row = item
@@ -336,64 +347,75 @@ class Simulation:
                 if pod is None:
                     if store.phase[row] != _engine.POD_BOUND:
                         continue   # bound then evicted before the drain
-                    incarnation = store.incarnation[row]
-                    key = (store.uid[row], incarnation)
-                    if scheduled.get(key):
+                    uid = store.uid[row]
+                    if uid in seen:
                         continue
-                    scheduled[key] = True
+                    seen.add(uid)
                     node = slot_nodes[store.node_slot[row]]
                     speed = node.speed_factor if node else 1.0
                     # progress_s is 0 for a never-evicted, shell-less pod.
                     remaining = store.duration_s[row] - 0.0
-                    t_done = now + remaining / max(speed, 1e-6)
-                    bucket = buckets.get(t_done)
-                    if bucket is None:
-                        buckets[t_done] = [(row, incarnation)]
-                    else:
-                        bucket.append((row, incarnation))
+                    entries.append((now + remaining / max(speed, 1e-6),
+                                    row, store.incarnation[row]))
                     continue
             else:
                 pod = item
             if pod.phase is not PodPhase.BOUND:
                 continue   # bound then evicted again before the drain
-            incarnation = pod.incarnation
-            key = (pod.uid, incarnation)
-            if scheduled.get(key):
+            if pod.uid in seen:
                 continue
-            scheduled[key] = True
+            seen.add(pod.uid)
+            all_rows = False
             node = node_of(pod.node_id)
             speed = node.speed_factor if node else 1.0
             remaining = pod.spec.duration_s - pod.progress_s
-            t_done = now + remaining / max(speed, 1e-6)
-            bucket = buckets.get(t_done)
-            if bucket is None:
-                buckets[t_done] = [(pod, incarnation)]
+            entries.append((now + remaining / max(speed, 1e-6),
+                            pod, pod.incarnation))
+        if not entries:
+            return
+        entries.sort(key=lambda e: e[0])   # stable: bind order within a time
+        i, n = 0, len(entries)
+        while i < n:
+            t_done = entries[i][0]
+            j = i
+            while j < n and entries[j][0] == t_done:
+                j += 1
+            if all_rows and store is not None:
+                payload = store.log_completions(
+                    [e[1] for e in entries[i:j]],
+                    [e[2] for e in entries[i:j]])
             else:
-                bucket.append((pod, incarnation))
-        for t_done, batch in buckets.items():
-            self.push(t_done, POD_DONE, batch)
+                payload = [(e[1], e[2]) for e in entries[i:j]]
+            self.push(t_done, POD_DONE, payload)
+            i = j
 
     def _on_pod_done(self, payload) -> None:
         # One POD_DONE event carries every completion bucketed at this
         # timestamp, in bind order (matching the per-pod event order the
-        # seed engine produced for equal timestamps).  Keys drop out of
-        # _completion_scheduled here — live or stale, this event was that
-        # incarnation's one shot — so the map stays bounded by the number
-        # of in-flight pods instead of growing for the whole run.
+        # seed engine produced for equal timestamps).  The payload is a
+        # ``(lo, hi)`` range into the PodStore completion log (fast path)
+        # or a list of ``(pod | store-row, incarnation)`` (object engine /
+        # mixed-shell cycles); live-vs-stale is decided here, per entry, by
+        # the phase + incarnation columns — this event was that
+        # incarnation's one shot either way.
         #
-        # Entries are (pod | store-row, incarnation).  Rows stay column-only
-        # through the commit (``Cluster.complete_wave_store``) unless an
-        # external ``on_complete`` observer is attached — an API boundary,
-        # which materializes shells and routes through the object-path
+        # Rows stay column-only through the commit
+        # (``Cluster.complete_wave_store``) unless an external
+        # ``on_complete`` observer is attached — an API boundary, which
+        # materializes shells and routes through the object-path
         # ``complete_wave`` so the observer sees real pods, in order.
-        scheduled = self._completion_scheduled
         store = self.orch.store
+        if type(payload) is tuple:
+            lo, hi = payload
+            pairs = zip(store.done_rows[lo:hi], store.done_incs[lo:hi])
+            store.consume_completions(lo, hi)
+        else:
+            pairs = payload
         live: list = []
         rows_present = False
-        for first, incarnation in payload:
+        for first, incarnation in pairs:
             if type(first) is int:
                 row = first
-                scheduled.pop((store.uid[row], incarnation), None)
                 pod = store.shells.get(row)
                 if pod is None:
                     if (store.phase[row] != _engine.POD_BOUND
@@ -404,7 +426,6 @@ class Simulation:
                     continue
             else:
                 pod = first
-                scheduled.pop((pod.uid, incarnation), None)
             if pod.phase is not PodPhase.BOUND or pod.incarnation != incarnation:
                 continue   # stale entry: pod was evicted/failed since
             live.append(pod)

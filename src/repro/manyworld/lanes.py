@@ -1,0 +1,430 @@
+"""Many-world lane engine: thousands of simulations as one JAX program.
+
+One *lane* is one full static-cluster experiment — trace, scheduler,
+fleet size — and a batch of lanes runs as a single jit-compiled program
+over stacked ``(lane, node)`` / ``(lane, pod)`` arrays.  The program is
+the cycle hot path of the serial engine lowered to fixed shapes:
+
+* an outer ``lax.while_loop`` advances the 10 s scheduling cycle for all
+  lanes in lockstep, bailing out as soon as every lane is finished
+  (completed, stuck, or quiescent) or the 48 h horizon is reached;
+* a completion inner loop commits due batch completions **one pod per
+  lane per step** in ``(done_time, bind_seq)`` order — the serial event
+  order — so the per-node ``used_*`` running floats stay bit-identical
+  (summation order matters; a segment-sum would not);
+* a bind inner loop walks the pending snapshot in FIFO (row) order, one
+  pod per lane per step: feasibility mask, scheduler score, first-extremum
+  select (``repro.manyworld.select``; Pallas kernel or jnp backend), then
+  the serial accounting ops ``used += req`` / ``free = alloc - used``.
+
+**Relaxed-semantics envelope.**  Lanes model the void/void static-cluster
+regime only: no autoscaler, no rescheduler, no chaos, homogeneous READY
+fleet billed from t=0, speed factor 1.  Everything else — event ordering,
+tie-breaks, stuck detection, blocked-pod scale-out counting — follows the
+serial engine exactly; ``repro.manyworld.evaluator`` reconstructs full
+``ExperimentResult`` rows host-side from the lane outputs.  See
+ARCHITECTURE.md "Many-world lanes" for the contract and the enumerated
+divergences.
+
+**Float discipline.**  All arithmetic the serial engine does in float64
+is done in float64 (``jax.experimental.enable_x64``).  Integer request
+columns become float64 — exact below 2^53, so comparisons and the k8s
+fraction divides are bit-identical.  XLA's CPU backend contracts
+``a*b + c`` into a fused multiply-add, which would change score bits
+vs NumPy; every product feeding an add goes through :func:`_fence`
+(a data-dependent ``where`` LLVM cannot contract across).  Masked
+scatter updates add ``±0.0`` on inactive lanes, which is a bitwise
+no-op because the engine's ``used`` values are never ``-0.0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+
+from repro.manyworld import select as _select
+
+CYCLE_PERIOD_S = 10.0
+HORIZON_S = 48 * 3600.0          # SimConfig.max_sim_time_s default
+MAX_CYCLES = int(HORIZON_S / CYCLE_PERIOD_S)   # cycle at t == horizon runs
+
+SCHEDULERS = ("best-fit", "worst-fit", "first-fit", "k8s-default", "weighted")
+
+# bind_seq fill for "no completion candidate" (any value > every real seq).
+_SEQ_INF = np.int32(2**31 - 1)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — the padding quantum that keeps
+    the jit cache small (one compile per (scheduler, N, P) bucket)."""
+    p = 1
+    while p < max(n, 1):
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class LaneBatch:
+    """Stacked fixed-shape inputs for one compiled many-world program.
+
+    Pod axis is padded to ``p_pad`` (``valid`` masks real rows), node axis
+    to ``n_pad`` (``n_nodes`` masks real nodes); every lane in a batch
+    shares one scheduler.  Build via :func:`stack_lanes`.
+    """
+
+    scheduler: str
+    arrival_t: np.ndarray     # (L, P) f64, +inf padded
+    cpu_m: np.ndarray         # (L, P) f64
+    mem_mb: np.ndarray        # (L, P) f64
+    duration_s: np.ndarray    # (L, P) f64
+    is_batch: np.ndarray      # (L, P) bool
+    valid: np.ndarray         # (L, P) bool
+    n_nodes: np.ndarray       # (L,)  i32
+    alloc_cpu: np.ndarray     # (L,)  f64
+    alloc_mem: np.ndarray     # (L,)  f64
+    weights: np.ndarray       # (L, 3) f64 (weighted scheduler; else pack)
+
+    @property
+    def n_lanes(self) -> int:
+        return self.arrival_t.shape[0]
+
+    @property
+    def p_pad(self) -> int:
+        return self.arrival_t.shape[1]
+
+    @property
+    def n_pad(self) -> int:
+        return next_pow2(int(self.n_nodes.max()) if self.n_nodes.size else 1)
+
+
+def stack_lanes(lanes, scheduler: str, p_pad: Optional[int] = None
+                ) -> LaneBatch:
+    """Stack per-lane dicts (``TraceStore.to_lane_arrays`` output plus
+    cluster scalars ``n_nodes`` / ``alloc_cpu`` / ``alloc_mem`` and an
+    optional ``weights`` 3-tuple) into one padded :class:`LaneBatch`."""
+    if scheduler not in SCHEDULERS:
+        raise ValueError(f"unsupported lane scheduler {scheduler!r}")
+    n_max = max((int(d["arrival_t"].size) for d in lanes), default=0)
+    P = p_pad if p_pad is not None else next_pow2(n_max)
+    if n_max > P:
+        raise ValueError(f"p_pad={P} < largest lane ({n_max} pods)")
+    L = len(lanes)
+    arr = np.full((L, P), np.inf)
+    cpu = np.zeros((L, P))
+    mem = np.zeros((L, P))
+    dur = np.zeros((L, P))
+    isb = np.zeros((L, P), bool)
+    val = np.zeros((L, P), bool)
+    n_nodes = np.zeros(L, np.int32)
+    a_cpu = np.zeros(L)
+    a_mem = np.zeros(L)
+    wts = np.zeros((L, 3))
+    for i, d in enumerate(lanes):
+        n = int(d["arrival_t"].size)
+        arr[i, :n] = d["arrival_t"]
+        cpu[i, :n] = d["cpu_m"]
+        mem[i, :n] = d["mem_mb"]
+        dur[i, :n] = d["duration_s"]
+        isb[i, :n] = d["is_batch"]
+        val[i, :n] = True
+        n_nodes[i] = d["n_nodes"]
+        a_cpu[i] = d["alloc_cpu"]
+        a_mem[i] = d["alloc_mem"]
+        w = d.get("weights")
+        wts[i] = (1.0, 0.0, 0.0) if w is None else tuple(w)
+    return LaneBatch(scheduler, arr, cpu, mem, dur, isb, val,
+                     n_nodes, a_cpu, a_mem, wts)
+
+
+def _fence(t):
+    """Contraction fence: route a product through a data-dependent select
+    so LLVM cannot fuse it into a following add (``a*b + c -> fma`` would
+    change score bits vs the serial NumPy path).  ``isfinite`` is always
+    True for real scores, so the value is unchanged."""
+    import jax.numpy as jnp
+    return jnp.where(jnp.isfinite(t), t, jnp.inf)
+
+
+def _wave_scores(sched: str, free_cpu, free_mem, alloc_cpu, alloc_mem,
+                 pc, pm, weights):
+    """Per-node scores for one pod per lane, **negated for max-mode** so a
+    single masked-argmin select serves every policy.  Formulas are the
+    serial ``Scheduler.wave_scores`` ops verbatim (same order, float64);
+    ``pc``/``pm`` are the pod's request broadcast to ``(L, 1)``.
+    """
+    import jax.numpy as jnp
+    if sched == "best-fit":
+        return free_mem                       # min free_mem
+    if sched == "worst-fit":
+        return -free_mem                      # max free_mem
+    if sched == "first-fit":
+        return jnp.zeros_like(free_mem)       # first feasible rank
+    # k8s-default / weighted share the request-fraction core (serial:
+    # int64 subtract then true-divide -> f64; these columns are already
+    # f64-exact ints, so subtract/divide bits match).
+    cpu_frac = (free_cpu - pc) / jnp.maximum(alloc_cpu, 1.0)
+    mem_frac = (free_mem - pm) / jnp.maximum(alloc_mem, 1e-9)
+    # Both blend terms are fenced: XLA rewrites the trailing /2.0 into
+    # *0.5 and would contract either term's product into an FMA with the
+    # (lr + bal) add otherwise, shifting the last ulp vs NumPy.
+    least_requested = _fence(10.0 * (cpu_frac + mem_frac) / 2.0)
+    balanced = _fence(10.0 * (1.0 - jnp.abs(cpu_frac - mem_frac)))
+    if sched == "k8s-default":
+        return -((least_requested + balanced) / 2.0)
+    # weighted: w_pack*pack + w_lr*lr + w_bal*bal, left-to-right adds.
+    # pack is fenced like the other composite terms — unfenced, XLA
+    # rewrites the nested w*(10*(1-x)) chain non-IEEE.
+    pack = _fence(10.0 * (1.0 - mem_frac))
+    s = (_fence(weights[:, 0:1] * pack)
+         + _fence(weights[:, 1:2] * least_requested)
+         ) + _fence(weights[:, 2:3] * balanced)
+    return -s
+
+
+def _program_factory(sched: str, backend: str, n_pad: int):
+    """Build the jitted many-world program for one (scheduler, select
+    backend, padded node count); XLA retraces per (L, P) bucket."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def select(scores, mask):
+        return _select.masked_argmin(scores, mask, backend)
+
+    def run(arr_t, cpu, mem, dur, isb, valid, n_nodes,
+            alloc_cpu, alloc_mem, weights):
+        L, P = arr_t.shape
+        li = jnp.arange(L)
+        node_active = (jnp.arange(n_pad, dtype=jnp.int32)[None, :]
+                       < n_nodes[:, None])                    # (L, N)
+        ac = alloc_cpu[:, None]
+        am = alloc_mem[:, None]
+
+        def completions(t, st):
+            """Commit due batch completions one pod per lane per step, in
+            (done_time, bind_seq) order — the serial POD_DONE event order
+            (heap pops ascending time; push order == bind order within a
+            timestamp)."""
+            def due_of(c):
+                done_c, done_t, bound, active = c[3], c[4], c[5], c[9]
+                return (valid & isb & bound & ~done_c
+                        & (done_t <= t) & active[:, None])
+
+            def cond(c):
+                return due_of(c).any()
+
+            def body(c):
+                (used_cpu, used_mem, pcount, done_c, done_t, bound,
+                 bind_node, bind_seq, bind_cycle, active, completed,
+                 done_time, done_is_cycle) = c
+                due = due_of(c)
+                has = due.any(axis=1)
+                # Two-stage extremum: earliest done_time, then lowest
+                # bind_seq among its ties (seq is unique per lane).
+                t1 = jnp.where(due, done_t, jnp.inf)
+                tmin = t1.min(axis=1, keepdims=True)
+                s1 = jnp.where(due & (t1 == tmin), bind_seq, _SEQ_INF)
+                p = jnp.argmin(s1, axis=1)
+                node = jnp.where(has, bind_node[li, p], 0)
+                dc = jnp.where(has, cpu[li, p], 0.0)
+                dm = jnp.where(has, mem[li, p], 0.0)
+                # serial: node._used_* -= req, one pod at a time.
+                used_cpu = used_cpu.at[li, node].add(-dc)
+                used_mem = used_mem.at[li, node].add(-dm)
+                pcount = pcount.at[li, node].add(-has.astype(jnp.int32))
+                done_c = done_c.at[li, p].set(done_c[li, p] | has)
+                # _done() check after this POD_DONE event: all arrived at
+                # the *event's* time, every batch row committed, every
+                # service bound.
+                td = jnp.where(has, done_t[li, p], jnp.inf)
+                arrived_td = (~valid | (arr_t <= td[:, None])).all(axis=1)
+                batch_done = (~valid | ~isb | done_c).all(axis=1)
+                svc_bound = (~valid | isb | bound).all(axis=1)
+                now_done = has & active & arrived_td & batch_done & svc_bound
+                completed = completed | now_done
+                done_time = jnp.where(now_done, td, done_time)
+                active = active & ~now_done
+                return (used_cpu, used_mem, pcount, done_c, done_t, bound,
+                        bind_node, bind_seq, bind_cycle, active, completed,
+                        done_time, done_is_cycle)
+
+            return lax.while_loop(cond, body, st)
+
+        def wave(t, k, st):
+            """One scheduling cycle's wave: walk the pending snapshot in
+            row (FIFO) order, one pod per lane per step.  Blocked pods are
+            counted (the serial void/void fallback bumps one scale-out
+            request per blocked pod) and skipped — decision-identical to
+            the serial blocked_keys latch, which only memoizes the same
+            outcome (working frees never grow inside a cycle)."""
+            (used_cpu, used_mem, pcount, done_c, done_t, bound,
+             bind_node, bind_seq, bind_cycle, active, completed,
+             done_time, done_is_cycle, seq_ctr, scale_outs) = st
+            arrived = valid & (arr_t <= t)
+
+            def cand_of(c):
+                bound, attempted = c[2], c[8]
+                return arrived & ~bound & ~attempted & active[:, None]
+
+            def cond(c):
+                return cand_of(c).any()
+
+            def body(c):
+                (used_cpu, used_mem, bound, bind_node, bind_seq,
+                 bind_cycle, done_t, pcount, attempted, placed, blocked,
+                 seq_ctr) = c
+                cand = cand_of(c)
+                has = cand.any(axis=1)
+                p = jnp.argmax(cand, axis=1)       # first pending row
+                pc = cpu[li, p][:, None]
+                pm = mem[li, p][:, None]
+                # serial WavePlacer: free = alloc - used (elementwise);
+                # fits = (free_cpu >= cpu) & (free_mem + 1e-9 >= mem).
+                free_cpu = ac - used_cpu
+                free_mem = am - used_mem
+                mask = ((free_cpu >= pc) & ((free_mem + 1e-9) >= pm)
+                        & node_active)
+                scores = _wave_scores(sched, free_cpu, free_mem, ac, am,
+                                      pc, pm, weights)
+                r = select(scores, mask)
+                feas = mask.any(axis=1)
+                do = has & feas
+                blk = has & ~feas
+                r_g = jnp.where(do, r, 0).astype(jnp.int32)
+                add_c = jnp.where(do, pc[:, 0], 0.0)
+                add_m = jnp.where(do, pm[:, 0], 0.0)
+                used_cpu = used_cpu.at[li, r_g].add(add_c)
+                used_mem = used_mem.at[li, r_g].add(add_m)
+                pcount = pcount.at[li, r_g].add(do.astype(jnp.int32))
+                bound = bound.at[li, p].set(bound[li, p] | do)
+                bind_node = bind_node.at[li, p].set(
+                    jnp.where(do, r_g, bind_node[li, p]))
+                bind_seq = bind_seq.at[li, p].set(
+                    jnp.where(do, seq_ctr, bind_seq[li, p]))
+                bind_cycle = bind_cycle.at[li, p].set(
+                    jnp.where(do, k, bind_cycle[li, p]))
+                # Completion timestamp: now + duration (speed factor 1);
+                # services never complete (+inf).
+                td = jnp.where(do & isb[li, p], t + dur[li, p], jnp.inf)
+                done_t = done_t.at[li, p].set(
+                    jnp.where(do, td, done_t[li, p]))
+                seq_ctr = seq_ctr + do.astype(jnp.int32)
+                placed = placed + do.astype(jnp.int32)
+                blocked = blocked + blk.astype(jnp.int32)
+                attempted = attempted.at[li, p].set(attempted[li, p] | has)
+                return (used_cpu, used_mem, bound, bind_node, bind_seq,
+                        bind_cycle, done_t, pcount, attempted, placed,
+                        blocked, seq_ctr)
+
+            zeros_i = jnp.zeros(L, jnp.int32)
+            (used_cpu, used_mem, bound, bind_node, bind_seq, bind_cycle,
+             done_t, pcount, _att, placed, blocked, seq_ctr
+             ) = lax.while_loop(
+                cond, body,
+                (used_cpu, used_mem, bound, bind_node, bind_seq,
+                 bind_cycle, done_t, pcount, jnp.zeros_like(bound),
+                 zeros_i, zeros_i, seq_ctr))
+            scale_outs = scale_outs + blocked
+
+            # -- post-cycle bookkeeping (serial order: wave stats, the
+            # _done() check after the CYCLE event, then stuck detection).
+            all_arrived = (~valid | (arr_t <= t)).all(axis=1)
+            pending_after = (arrived & ~bound).any(axis=1)
+            running_batch = (valid & isb & bound & ~done_c).any(axis=1)
+            batch_done = (~valid | ~isb | done_c).all(axis=1)
+            svc_bound = (~valid | isb | bound).all(axis=1)
+            has_pods = valid.any(axis=1)
+            done_b = (active & has_pods & all_arrived & batch_done
+                      & svc_bound)
+            completed = completed | done_b
+            done_time = jnp.where(done_b, t, done_time)
+            done_is_cycle = done_is_cycle | done_b
+            active = active & ~done_b
+            # _permanently_stuck: static cluster, everything arrived,
+            # nothing placed, something blocked, nothing running.
+            stuck_now = (active & all_arrived & (placed == 0)
+                         & (blocked > 0) & ~running_batch & pending_after)
+            active = active & ~stuck_now
+            # Quiescent: all arrived, nothing pending, nothing running,
+            # not done (zero-pod lanes) — state can never change again;
+            # the lane just samples to the horizon (host-side).
+            quies = active & all_arrived & ~pending_after & ~running_batch
+            active = active & ~quies
+            return (used_cpu, used_mem, pcount, done_c, done_t, bound,
+                    bind_node, bind_seq, bind_cycle, active, completed,
+                    done_time, done_is_cycle, seq_ctr, scale_outs)
+
+        def cycle_body(st):
+            k = st[0]
+            t = k.astype(jnp.float64) * CYCLE_PERIOD_S
+            # POD_DONE events at times <= t all fire before CYCLE(t).
+            mid = completions(t, st[1:14])
+            out = wave(t, k, mid + st[14:])
+            return (k + 1,) + out
+
+        def cycle_cond(st):
+            k, active = st[0], st[10]
+            return active.any() & (k <= MAX_CYCLES)
+
+        init = (
+            jnp.zeros((), jnp.int32),                      # k
+            jnp.zeros((L, n_pad)),                         # used_cpu
+            jnp.zeros((L, n_pad)),                         # used_mem
+            jnp.zeros((L, n_pad), jnp.int32),              # pcount
+            jnp.zeros((L, P), bool),                       # done_c
+            jnp.full((L, P), jnp.inf),                     # done_t
+            jnp.zeros((L, P), bool),                       # bound
+            jnp.full((L, P), -1, jnp.int32),               # bind_node
+            jnp.full((L, P), -1, jnp.int32),               # bind_seq
+            jnp.full((L, P), -1, jnp.int32),               # bind_cycle
+            valid.any(axis=1),                             # active
+            jnp.zeros(L, bool),                            # completed
+            jnp.full(L, HORIZON_S),                        # done_time
+            jnp.zeros(L, bool),                            # done_is_cycle
+            jnp.zeros(L, jnp.int32),                       # seq_ctr
+            jnp.zeros(L, jnp.int32),                       # scale_outs
+        )
+        (k, used_cpu, used_mem, pcount, done_c, done_t, bound,
+         bind_node, bind_seq, bind_cycle, active, completed, done_time,
+         done_is_cycle, seq_ctr, scale_outs) = lax.while_loop(
+            cycle_cond, cycle_body, init)
+        return {
+            "bound": bound, "done_committed": done_c,
+            "bind_node": bind_node, "bind_seq": bind_seq,
+            "bind_cycle": bind_cycle, "done_t": done_t,
+            "completed": completed, "done_time": done_time,
+            "done_is_cycle": done_is_cycle, "scale_outs": scale_outs,
+            "n_cycles": k, "used_cpu": used_cpu, "used_mem": used_mem,
+            "pcount": pcount,
+        }
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_cache(sched: str, backend: str, n_pad: int):
+    return _program_factory(sched, backend, n_pad)
+
+
+def run_lane_batch(batch: LaneBatch, backend: Optional[str] = None) -> dict:
+    """Execute one :class:`LaneBatch`; returns numpy lane outputs.
+
+    Per lane: ``completed`` / ``done_time`` / ``done_is_cycle`` /
+    ``scale_outs``; per pod: ``bound``, ``bind_node`` (node *rank* —
+    serial parity maps ``node_slot`` through ``ClusterArrays.id_rank``),
+    ``bind_seq`` (per-lane bind order), ``bind_cycle`` (bind time is
+    exactly ``bind_cycle * 10.0``), ``done_t`` and ``done_committed``.
+    """
+    from jax.experimental import enable_x64
+    backend = _select.active_backend(backend)
+    with enable_x64():
+        import jax.numpy as jnp
+        run = _jit_cache(batch.scheduler, backend, batch.n_pad)
+        out = run(jnp.asarray(batch.arrival_t), jnp.asarray(batch.cpu_m),
+                  jnp.asarray(batch.mem_mb), jnp.asarray(batch.duration_s),
+                  jnp.asarray(batch.is_batch), jnp.asarray(batch.valid),
+                  jnp.asarray(batch.n_nodes), jnp.asarray(batch.alloc_cpu),
+                  jnp.asarray(batch.alloc_mem), jnp.asarray(batch.weights))
+        return {key: np.asarray(v) for key, v in out.items()}

@@ -1,0 +1,108 @@
+"""Masked-extremum select kernels for the many-world lane engine.
+
+The inner decision of every wave placement is *select the first extremum
+of a masked score buffer* — ``argmin``/``argmax`` over ``(lane, node)``
+scores where infeasible nodes are masked out and ties break to the lowest
+rank (serial: first extremum of a ±inf-filled NumPy buffer).  This module
+provides that select as a batched ``(L, N) -> (L,)`` primitive in two
+interchangeable backends:
+
+* ``jnp`` (default) — ``jnp.argmin`` over a ``+inf``-filled buffer.  XLA
+  guarantees first-occurrence tie-breaking, matching NumPy's ``argmin``.
+* ``pallas`` — a Pallas kernel, one grid row per lane: two-stage reduce
+  (min value, then min index among value-equal entries via a broadcasted
+  iota) inside the kernel block.  On CPU the kernel runs in
+  ``interpret=True`` mode, so tier-1 stays green without an accelerator;
+  on TPU the same kernel compiles natively.
+
+Both backends *minimize*.  Max-mode schedulers negate their scores before
+the call — ``argmax(s) == argmin(-s)`` with ties preserved (negation is
+exact and order-reversing on non-NaN floats, ``±inf`` fills swap roles).
+
+Backend selection: the ``REPRO_MANYWORLD_SELECT`` environment variable
+(``jnp`` | ``pallas``), read per call so tests can flip it; an explicit
+``backend=`` argument overrides.
+
+Rows whose mask is all-False return an arbitrary index (0 in practice):
+callers must gate on ``mask.any(axis=1)`` — the same contract as the
+serial path, where ``buf[argmin] == fill`` flags infeasibility.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+ENV_FLAG = "REPRO_MANYWORLD_SELECT"
+BACKENDS = ("jnp", "pallas")
+
+
+def active_backend(backend: str | None = None) -> str:
+    """Resolve the select backend: explicit arg > env flag > ``jnp``."""
+    name = backend or os.environ.get(ENV_FLAG, "jnp")
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown {ENV_FLAG}={name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def masked_argmin(scores, mask, backend: str | None = None):
+    """First index of the masked minimum, per lane.
+
+    ``scores`` is ``(L, N)`` float64, ``mask`` ``(L, N)`` bool; returns
+    ``(L,)`` int32.  Only rows with ``mask.any()`` are meaningful.
+    """
+    if active_backend(backend) == "pallas":
+        return _pallas_argmin(scores, mask)
+    return _jnp_argmin(scores, mask)
+
+
+def _jnp_argmin(scores, mask):
+    import jax.numpy as jnp
+    buf = jnp.where(mask, scores, jnp.inf)
+    return jnp.argmin(buf, axis=1).astype(jnp.int32)
+
+
+def _pallas_argmin_kernel(scores_ref, mask_ref, out_ref, *, n_nodes: int):
+    # One lane per grid row: block shapes are (1, N) in / (1, 1) out.
+    import jax
+    import jax.numpy as jnp
+    s = scores_ref[...]
+    m = mask_ref[...] != 0
+    buf = jnp.where(m, s, jnp.inf)
+    v = jnp.min(buf, axis=1, keepdims=True)           # (1, 1)
+    # First occurrence: min iota among value-equal entries.  2-D iota via
+    # broadcasted_iota (TPU-safe; 1-D iota is not).
+    idx = jax.lax.broadcasted_iota(jnp.int32, buf.shape, 1)
+    hit = jnp.where(buf == v, idx, n_nodes)
+    out_ref[...] = jnp.min(hit, axis=1, keepdims=True)
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_call(n_lanes: int, n_nodes: int, interpret: bool):
+    import functools as ft
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    return pl.pallas_call(
+        ft.partial(_pallas_argmin_kernel, n_nodes=n_nodes),
+        grid=(n_lanes,),
+        in_specs=[
+            pl.BlockSpec((1, n_nodes), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_nodes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_lanes, 1), jnp.int32),
+        interpret=interpret,
+    )
+
+
+def _pallas_argmin(scores, mask):
+    import jax
+    import jax.numpy as jnp
+    n_lanes, n_nodes = scores.shape
+    interpret = jax.default_backend() == "cpu"
+    call = _pallas_call(n_lanes, n_nodes, interpret)
+    out = call(scores, mask.astype(jnp.int8))
+    return out[:, 0]

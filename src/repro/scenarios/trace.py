@@ -206,6 +206,23 @@ class TraceStore:
         ``Orchestrator.submit_trace``)."""
         return self.slice(lo, hi).to_arrivals()
 
+    def to_lane_arrays(self) -> Dict:
+        """Per-lane workload columns for the many-world engine
+        (`repro.manyworld.lanes.stack_lanes`): float64 request/duration
+        columns plus the batch-kind mask, in trace row order.  The caller
+        adds the cluster scalars (``n_nodes`` / ``alloc_*`` / weights);
+        ``stack_lanes`` pads the pod axis across lanes.  Integer CPU
+        milli-units are exact in float64 (far below 2^53), so the lane
+        program's comparisons and divisions match the serial engine
+        bit-for-bit."""
+        return {
+            "arrival_t": self.arrival_time.astype(np.float64),
+            "cpu_m": self.cpu_m.astype(np.float64),
+            "mem_mb": self.mem_mb.astype(np.float64),
+            "duration_s": self.duration_s.astype(np.float64),
+            "is_batch": self.kind == KIND_BATCH,
+        }
+
     # -- slicing / composition -------------------------------------------------
     def slice(self, lo: int, hi: Optional[int] = None) -> "TraceStore":
         """Row-range copy keeping the full template table (columns are

@@ -173,7 +173,7 @@ def run_cell(cell: CellSpec) -> dict:
     return row
 
 
-def run_cells(cells: Sequence[CellSpec], workers: int = 1,
+def run_cells(cells: Sequence[CellSpec], workers=1,
               max_tasks_per_child: Optional[int] = None) -> List[dict]:
     """Run every cell; results come back in the order cells were given.
 
@@ -183,8 +183,18 @@ def run_cells(cells: Sequence[CellSpec], workers: int = 1,
     is the same whichever worker finished first.  A failing cell raises
     `CellError` naming the cell; a dying worker (hard exit) raises
     `CellError` instead of hanging the remaining futures.
+
+    ``workers="lanes"`` evaluates the list on the many-world lane engine
+    (`repro.manyworld`): void/void static-cluster cells run batched in
+    one JAX program per bucket, anything outside that envelope (and
+    everything, when JAX is absent) falls back to the serial ``run_cell``
+    — same rows, same order, bit-identical metrics (``wall_s`` becomes
+    the lane's share of its batch).
     """
     cells = list(cells)
+    if workers == "lanes":
+        from repro.manyworld.evaluator import run_cells_lanes
+        return run_cells_lanes(cells)
     if workers <= 1:
         rows = []
         for cell in cells:

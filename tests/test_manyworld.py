@@ -1,0 +1,341 @@
+"""Many-world lane engine (repro.manyworld): lane-vs-serial parity and
+padded-shape/masking edge cases.
+
+The parity suite is the engine's contract: inside the relaxed envelope
+(void/void static cluster) every lane reproduces the serial engine's bind
+sequence **bit-identically** — same rows bound, to the same nodes (rank ==
+lexicographic node_id order), at the same cycle times, in the same order —
+and the evaluator reconstructs `run_cells` rows whose 17 metric fields are
+bitwise equal to the serial runner's.  The edge battery pins the padding
+and masking behaviors (zero-pod lanes, all-infeasible lanes, non-pow2 lane
+counts, mixed lane sizes in one bucket) and the FMA score fence.
+"""
+import math
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")   # lane engine is JAX-gated by design
+
+from repro.cloud.adapter import M2_SMALL
+from repro.core import build_simulation, reset_id_counters
+from repro.manyworld import lanes as ml
+from repro.manyworld import select as msel
+from repro.manyworld.evaluator import lane_eligible, run_cells_lanes
+from repro.scenarios.trace import KIND_BATCH
+from repro.search.runner import _RESULT_FIELDS, CellSpec, _get_trace, run_cells
+
+ALLOC_CPU = float(M2_SMALL.allocatable.cpu_m)
+ALLOC_MEM = float(M2_SMALL.allocatable.mem_mb)
+
+
+def _lane_of(trace, n_nodes, weights=None):
+    d = trace.to_lane_arrays()
+    d["n_nodes"] = n_nodes
+    d["alloc_cpu"] = ALLOC_CPU
+    d["alloc_mem"] = ALLOC_MEM
+    d["weights"] = weights
+    return d
+
+
+def _serial_bind_columns(cell, trace):
+    """(bound, rank, bind_t) columns from a serial array-engine run, with
+    node slots mapped through ``id_rank`` into the lane engine's rank
+    space (lexicographic node_id order)."""
+    reset_id_counters()
+    sim = build_simulation(cell.to_experiment_spec(trace))
+    res = sim.run()
+    store, arr = sim.orch.store, sim.orch.cluster.arrays
+    n = trace.n
+    bound = np.array([store.node_slot[i] >= 0 for i in range(n)])
+    rank = np.array([arr.id_rank[store.node_slot[i]]
+                     if store.node_slot[i] >= 0 else -1 for i in range(n)])
+    bind_t = np.array([store.bound_time[i] if store.bound_time[i] is not None
+                       else np.nan for i in range(n)])
+    return res, bound, rank, bind_t
+
+
+CASES = [
+    # (scenario, scheduler, n_nodes): batch-only completing lanes,
+    # service lanes that run to the horizon, a saturated 1-node lane, and
+    # >10-node fleets (node-ids sort lexicographically: rank permutation).
+    ("heavy-tail", "best-fit", 4),
+    ("heavy-tail", "worst-fit", 1),
+    ("heavy-tail", "first-fit", 3),
+    ("heavy-tail", "k8s-default", 4),
+    ("heavy-tail", "weighted", 12),
+    ("capacity-crunch", "best-fit", 2),
+    ("diurnal", "k8s-default", 3),
+    ("mix-ramp", "worst-fit", 12),
+]
+
+
+class TestLaneParity:
+    @pytest.mark.parametrize("scen,sched,nw", CASES)
+    def test_bind_sequence_bitwise(self, scen, sched, nw):
+        """Lane bind sequence == serial bind sequence: same rows, nodes,
+        times, order; same completion flag, time, and scale-out count."""
+        trace = _get_trace(scen, 0, 40)
+        out = ml.run_lane_batch(ml.stack_lanes([_lane_of(trace, nw)], sched))
+        cell = CellSpec(scenario=scen, scheduler=sched, autoscaler="void",
+                        rescheduler="void", seed=0, n_jobs=40, engine="array",
+                        initial_workers=nw)
+        res, bound_s, rank_s, bt_s = _serial_bind_columns(cell, trace)
+        n = trace.n
+        bl = out["bound"][0, :n]
+        assert np.array_equal(bound_s, bl)
+        assert np.array_equal(rank_s[bl], out["bind_node"][0, :n][bl])
+        assert np.array_equal(bt_s[bl], out["bind_cycle"][0, :n][bl] * 10.0)
+        assert res.completed == bool(out["completed"][0])
+        assert res.scale_outs == int(out["scale_outs"][0])
+        # Bind *order*: lane seq sorts rows exactly like serial
+        # (bound_time, row) — waves walk the FIFO snapshot in row order.
+        seq = out["bind_seq"][0, :n]
+        lane_order = sorted(np.nonzero(bl)[0], key=lambda i: seq[i])
+        serial_order = sorted(np.nonzero(bound_s)[0],
+                              key=lambda i: (bt_s[i], i))
+        assert lane_order == serial_order
+
+    def test_many_lanes_one_batch(self):
+        """Stacked lanes don't interfere: each lane of a mixed batch
+        (different seeds/sizes/fleets, one scheduler) equals its own
+        single-lane run."""
+        specs = [(0, 40, 4), (1, 40, 2), (2, 24, 3), (3, 40, 1), (4, 32, 5)]
+        lanes = []
+        for seed, nj, nw in specs:
+            lanes.append(_lane_of(_get_trace("heavy-tail", seed, nj), nw))
+        batch_out = ml.run_lane_batch(ml.stack_lanes(lanes, "best-fit"))
+        for li, lane in enumerate(lanes):
+            solo = ml.run_lane_batch(ml.stack_lanes([lane], "best-fit"))
+            for key in ("bound", "bind_node", "bind_seq", "bind_cycle"):
+                p = lane["arrival_t"].size
+                assert np.array_equal(batch_out[key][li, :p],
+                                      solo[key][0, :p]), (key, li)
+            assert batch_out["completed"][li] == solo["completed"][0]
+            assert batch_out["done_time"][li] == solo["done_time"][0]
+
+
+class TestEvaluatorRows:
+    def test_rows_bitwise_equal_serial(self):
+        """workers='lanes' rows == serial rows on every metric field,
+        including ineligible-cell fallback and the infeasible
+        short-circuit, in submission order."""
+        cells = [
+            CellSpec(scenario="heavy-tail", scheduler="best-fit",
+                     autoscaler="void", rescheduler="void", seed=0,
+                     n_jobs=40, engine="array", initial_workers=4),
+            CellSpec(scenario="diurnal", scheduler="k8s-default",
+                     autoscaler="void", rescheduler="void", seed=0,
+                     n_jobs=24, engine="array", initial_workers=3),
+            CellSpec(scenario="heavy-tail", scheduler="weighted",
+                     autoscaler="void", rescheduler="void", seed=1,
+                     n_jobs=40, engine="array", initial_workers=5,
+                     scheduler_weights=(0.2, 0.5, 0.3)),
+            # ineligible: binding autoscaler -> serial fallback
+            CellSpec(scenario="heavy-tail", scheduler="best-fit",
+                     autoscaler="binding", seed=0, n_jobs=16,
+                     engine="array"),
+            # infeasible short-circuit: heavy-tail pods exceed m2.tiny
+            CellSpec(scenario="heavy-tail", scheduler="best-fit",
+                     autoscaler="void", rescheduler="void", seed=0,
+                     n_jobs=40, engine="array", initial_workers=2,
+                     template_name="m2.tiny"),
+        ]
+        serial = run_cells(cells, workers=1)
+        rows = run_cells(cells, workers="lanes")
+        assert [r["label"] for r in rows] == [r["label"] for r in serial]
+        for s, l in zip(serial, rows):
+            for field in _RESULT_FIELDS:
+                assert s[field] == l[field], (s["label"], field)
+            assert s["infeasible"] == l["infeasible"]
+            assert s["n_jobs"] == l["n_jobs"]
+
+    def test_eligibility_gate(self):
+        base = dict(scenario="heavy-tail", scheduler="best-fit",
+                    autoscaler="void", rescheduler="void", engine="array")
+        assert lane_eligible(CellSpec(**base))
+        assert lane_eligible(CellSpec(**{**base, "engine": None}))
+        assert not lane_eligible(CellSpec(**{**base, "autoscaler": "binding"}))
+        assert not lane_eligible(CellSpec(**{**base, "rescheduler": "non-binding"}))
+        assert not lane_eligible(CellSpec(**{**base, "engine": "object"}))
+        assert not lane_eligible(
+            CellSpec(**{**base, "scenario": "zone-outage", "chaos": True}))
+        assert not lane_eligible(   # weights demand the weighted scheduler
+            CellSpec(**{**base, "scheduler_weights": (1.0, 0.0, 0.0)}))
+
+
+class TestPaddingAndMasking:
+    def test_zero_pod_lane(self):
+        """An empty trace never completes: the lane runs (host-side) to
+        the horizon with a flat-zero utilisation series — and a zero-pod
+        lane stacked with real lanes doesn't disturb them."""
+        trace = _get_trace("heavy-tail", 0, 40)
+        empty = trace.slice(0, 0)
+        cells = [CellSpec(scenario="heavy-tail", scheduler="best-fit",
+                          autoscaler="void", rescheduler="void", seed=0,
+                          n_jobs=nj, engine="array", initial_workers=2)
+                 for nj in (0, 40)]
+        serial = run_cells(cells, workers=1)
+        rows = run_cells(cells, workers="lanes")
+        for s, l in zip(serial, rows):
+            for field in _RESULT_FIELDS:
+                assert s[field] == l[field], (s["label"], field)
+        assert rows[0]["completed"] is False
+        assert rows[0]["max_nodes"] == 2
+        assert empty.n == 0 and empty.to_lane_arrays()["arrival_t"].size == 0
+
+    def test_all_infeasible_lane_blocks_forever(self):
+        """A lane none of whose pods ever fit (requests larger than the
+        whole node) binds nothing, counts every attempt as a scale-out
+        request, and goes permanently stuck — without perturbing a
+        feasible neighbor lane in the same batch."""
+        big = {"arrival_t": np.array([0.0, 5.0]),
+               "cpu_m": np.array([2000.0, 2000.0]),       # > 940 alloc
+               "mem_mb": np.array([100.0, 100.0]),
+               "duration_s": np.array([60.0, 60.0]),
+               "is_batch": np.array([True, True]),
+               "n_nodes": 3, "alloc_cpu": ALLOC_CPU, "alloc_mem": ALLOC_MEM}
+        ok = _lane_of(_get_trace("heavy-tail", 0, 24), 3)
+        out = ml.run_lane_batch(ml.stack_lanes([big, ok], "best-fit"))
+        assert not out["bound"][0].any()
+        assert not out["completed"][0]
+        # Stuck on the first cycle with both pods arrived: the engine
+        # stops cycling that lane; by then each pending pod was counted
+        # once per cycle it was attempted.
+        assert int(out["scale_outs"][0]) >= 2
+        solo = ml.run_lane_batch(ml.stack_lanes([ok], "best-fit"))
+        p = ok["arrival_t"].size
+        assert np.array_equal(out["bound"][1, :p], solo["bound"][0, :p])
+
+    def test_non_pow2_lane_counts(self):
+        """3 and 5 lanes (not a multiple of any tile) give the same
+        per-lane outputs as 1-lane batches."""
+        lanes = [_lane_of(_get_trace("heavy-tail", s, 24), 2)
+                 for s in range(5)]
+        for cnt in (3, 5):
+            out = ml.run_lane_batch(ml.stack_lanes(lanes[:cnt], "best-fit"))
+            for li in range(cnt):
+                solo = ml.run_lane_batch(ml.stack_lanes([lanes[li]],
+                                                        "best-fit"))
+                p = lanes[li]["arrival_t"].size
+                assert np.array_equal(out["bind_seq"][li, :p],
+                                      solo["bind_seq"][0, :p])
+
+    def test_pad_rejects_oversized_lane(self):
+        lane = _lane_of(_get_trace("heavy-tail", 0, 40), 2)
+        with pytest.raises(ValueError, match="p_pad"):
+            ml.stack_lanes([lane], "best-fit", p_pad=16)
+        with pytest.raises(ValueError, match="scheduler"):
+            ml.stack_lanes([lane], "round-robin")
+
+    def test_next_pow2(self):
+        assert [ml.next_pow2(n) for n in (0, 1, 2, 3, 40, 64, 65)] \
+            == [1, 1, 2, 4, 64, 64, 128]
+
+
+class TestSelectKernels:
+    def test_backends_agree_with_numpy(self):
+        """jnp and pallas backends both implement first-occurrence masked
+        argmin, including tie rows and all-masked rows (callers gate on
+        mask.any — the index just has to be in range)."""
+        rng = np.random.default_rng(7)
+        scores = rng.standard_normal((17, 13))
+        scores[3, 4] = scores[3, 9] = scores[3].min() - 1.0   # exact tie
+        mask = rng.random((17, 13)) < 0.6
+        mask[5] = False                                        # all masked
+        mask[3, 4] = mask[3, 9] = True
+        from jax.experimental import enable_x64
+        with enable_x64():
+            import jax.numpy as jnp
+            s, m = jnp.asarray(scores), jnp.asarray(mask)
+            got_j = np.asarray(msel.masked_argmin(s, m, "jnp"))
+            got_p = np.asarray(msel.masked_argmin(s, m, "pallas"))
+        buf = np.where(mask, scores, np.inf)
+        ref = buf.argmin(axis=1)
+        rows = mask.any(axis=1)
+        assert np.array_equal(got_j[rows], ref[rows])
+        assert np.array_equal(got_p[rows], ref[rows])
+        assert got_j[3] == 4 and got_p[3] == 4                 # first tie
+
+    def test_backend_env_flag(self, monkeypatch):
+        monkeypatch.setenv(msel.ENV_FLAG, "pallas")
+        assert msel.active_backend() == "pallas"
+        assert msel.active_backend("jnp") == "jnp"             # arg wins
+        monkeypatch.setenv(msel.ENV_FLAG, "cuda")
+        with pytest.raises(ValueError, match="cuda"):
+            msel.active_backend()
+
+
+class TestScoreFence:
+    @pytest.mark.parametrize("sched,weights", [
+        ("k8s-default", None), ("weighted", (0.2, 0.5, 0.3))])
+    def test_scores_match_numpy_bits(self, sched, weights):
+        """The `_fence` around products feeding adds must keep XLA's CPU
+        backend from contracting them into FMAs: jitted lane scores must
+        equal the serial NumPy formula bit-for-bit."""
+        rng = np.random.default_rng(3)
+        free_cpu = rng.integers(0, 941, (8, 6)).astype(np.float64)
+        free_mem = rng.random((8, 6)) * 3584.0
+        pc, pm = 250.0, 433.3
+        w = np.tile(np.array(weights or (1.0, 0.0, 0.0)), (8, 1))
+        from jax.experimental import enable_x64
+        with enable_x64():
+            import jax
+            import jax.numpy as jnp
+            # alloc / requests enter as runtime args, like the lane
+            # program's traced operands — baked-in constants would let
+            # XLA fold divisions into reciprocal multiplies, which the
+            # real program never exposes itself to.
+            f = jax.jit(lambda fc, fm, ac, am, c, m, wt: ml._wave_scores(
+                sched, fc, fm, ac, am, c, m, wt))
+            got = np.asarray(f(jnp.asarray(free_cpu), jnp.asarray(free_mem),
+                               jnp.full((8, 1), 940.0),
+                               jnp.full((8, 1), 3584.0),
+                               jnp.float64(pc), jnp.float64(pm),
+                               jnp.asarray(w)))
+        cpu_frac = (free_cpu - pc) / np.maximum(940.0, 1)
+        mem_frac = (free_mem - pm) / np.maximum(3584.0, 1e-9)
+        lr = 10.0 * (cpu_frac + mem_frac) / 2.0
+        bal = 10.0 * (1.0 - np.abs(cpu_frac - mem_frac))
+        if sched == "k8s-default":
+            ref = (lr + bal) / 2.0
+        else:
+            pack = 10.0 * (1.0 - mem_frac)
+            ref = (w[:, 0:1] * pack + w[:, 1:2] * lr) + w[:, 2:3] * bal
+        assert np.array_equal(got, -ref)       # lane scores are negated
+
+
+class TestLaneExports:
+    def test_trace_to_lane_arrays(self):
+        trace = _get_trace("mix-ramp", 0, 24)
+        d = trace.to_lane_arrays()
+        assert d["arrival_t"].dtype == np.float64
+        assert d["cpu_m"].dtype == np.float64
+        assert np.array_equal(d["cpu_m"], trace.cpu_m.astype(np.float64))
+        assert np.array_equal(d["is_batch"], trace.kind == KIND_BATCH)
+        assert all(d[k].size == trace.n for k in
+                   ("arrival_t", "cpu_m", "mem_mb", "duration_s", "is_batch"))
+
+    def test_engine_lane_snapshot_and_columns(self):
+        """ClusterArrays.lane_snapshot is rank-ordered (id order) and
+        PodStore.lane_columns lists pending rows in FIFO order."""
+        cell = CellSpec(scenario="heavy-tail", scheduler="best-fit",
+                        autoscaler="void", rescheduler="void", seed=0,
+                        n_jobs=24, engine="array", initial_workers=3)
+        trace = _get_trace("heavy-tail", 0, 24)
+        reset_id_counters()
+        sim = build_simulation(cell.to_experiment_spec(trace))
+        sim.orch.submit_trace(trace, 0, 8)
+        cols = sim.orch.store.lane_columns()
+        assert np.array_equal(cols["arrival_t"], trace.arrival_time[:8])
+        assert np.array_equal(cols["cpu_m"],
+                              trace.cpu_m[:8].astype(np.float64))
+        snap = sim.orch.cluster.arrays.lane_snapshot()
+        assert snap["ready"].all() and snap["used_mem"].shape == (3,)
+        sim.orch.cycle(0.0)                     # bind the snapshot
+        snap2 = sim.orch.cluster.arrays.lane_snapshot()
+        arr = sim.orch.cluster.arrays
+        rank = arr._sorted_slots
+        assert np.array_equal(snap2["used_mem"], arr.used_mem[rank])
+        assert sim.orch.store.lane_columns()["arrival_t"].size \
+            < cols["arrival_t"].size            # some rows left PENDING->BOUND

@@ -83,10 +83,12 @@ class TestTimelineOrdering:
             Timeline([]).pop()
 
 
-class TestCompletionMapBounded:
-    """Satellite: _completion_scheduled entries must drop when their
-    POD_DONE event fires (live or stale), so the map is bounded by in-flight
-    pods instead of growing for the whole trace."""
+class TestCompletionLogBounded:
+    """Satellite: the PodStore completion log (sorted finish-time column +
+    consumed cursor) must reset once every scheduled POD_DONE range has
+    fired, so its footprint tracks the in-flight completion window instead
+    of growing for the whole trace — the role the old per-pod
+    ``_completion_scheduled`` dict played, without any per-pod dict."""
 
     def _spec(self, rescheduler="void"):
         arrivals = [Arrival(float(i), _SPEC) for i in range(40)]
@@ -94,30 +96,48 @@ class TestCompletionMapBounded:
                               rescheduler=rescheduler, autoscaler="binding",
                               initial_workers=2)
 
+    def test_scheduling_dict_is_gone(self):
+        reset_id_counters()
+        sim = build_simulation(self._spec())
+        assert not hasattr(sim, "_completion_scheduled")
+
     @pytest.mark.parametrize("engine", ["array", "object"])
-    def test_map_empty_after_completed_run(self, engine):
+    def test_log_empty_after_completed_run(self, engine):
         reset_id_counters()
         spec = dataclasses.replace(self._spec(), engine=engine)
         sim = build_simulation(spec)
         result = sim.run()
         assert result.completed
-        assert sim._completion_scheduled == {}
+        store = sim.orch.store
+        if store is None:
+            return   # object engine schedules list payloads, no log
+        assert store.done_rows == [] and store.done_incs == []
+        assert store.done_consumed == 0
 
-    def test_map_bounded_during_run(self):
-        """At every cycle the map holds at most one entry per bound batch
-        pod incarnation — nothing accumulates across completions."""
+    def test_log_sorted_and_bounded_during_run(self):
+        """Each cycle appends its buckets in ascending finish-time order
+        (bind order within a timestamp), and the log never outgrows the
+        pods currently in flight plus the cycle's own wave."""
         reset_id_counters()
         sim = build_simulation(self._spec(rescheduler="non-binding"))
+        store = sim.orch.store
         orig = sim._on_cycle
         high_water = []
 
         def spy():
+            before = len(store.done_rows)
             orig()
-            high_water.append(len(sim._completion_scheduled))
-            assert len(sim._completion_scheduled) <= len(sim.orch.pods)
+            high_water.append(len(store.done_rows) - store.done_consumed)
+            # Entries appended this cycle are finish-time sorted: their
+            # (duration-derived) completion times never decrease.
+            new = store.done_rows[before:]
+            times = [store.duration_s[r] for r in new]
+            assert times == sorted(times)
+            assert len(store.done_rows) - store.done_consumed \
+                <= len(sim.orch.pods)
 
         sim._on_cycle = spy
         result = sim.run()
         assert result.completed
         assert high_water, "no cycles observed"
-        assert sim._completion_scheduled == {}   # drained with the heap
+        assert store.done_rows == []   # drained with the heap
