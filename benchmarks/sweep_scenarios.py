@@ -43,7 +43,7 @@ from repro.search.runner import CellSpec, run_cells
 DEFAULT_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp",
                      "scale-stress", "multi-tenant")
 DEFAULT_SCHEDULERS = ("best-fit", "k8s-default", "first-fit", "worst-fit")
-DEFAULT_AUTOSCALERS = ("binding", "non-binding")
+DEFAULT_AUTOSCALERS = ("binding", "non-binding", "predictive")
 
 SMOKE_SCENARIOS = ("diurnal", "flash-crowd", "heavy-tail", "mix-ramp")
 SMOKE_SCHEDULERS = ("best-fit", "k8s-default")

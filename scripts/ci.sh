@@ -180,6 +180,51 @@ print(f"full-run gate OK: {full['wall_s']}s vs committed {base_wall}s "
 EOF
 fi
 
+echo "== forecaster smoke (train + predict on the JAX substrate) =="
+# The learned-forecaster gate: a small train run must show decreasing
+# loss and a checkpoint save/load round-trip that still serves the
+# online observe/predict contract (the script asserts both).  Needs JAX
+# (mLSTM + jitted train step); the numpy forecast pieces are covered by
+# tier-1 either way.
+if ! python -c "import jax" >/dev/null 2>&1; then
+    echo "forecaster smoke skipped (JAX not importable)"
+else
+    python scripts/forecast.py --smoke --out /tmp/FORECAST_smoke.json
+fi
+
+echo "== predictive-autoscaler gate (flash-crowd dominance vs NBAS) =="
+# The predictive autoscaler must beat the paper's non-binding autoscaler
+# (Alg. 5) on mean pending time at equal-or-lower cost on the burst
+# scenario prediction exists for — and, since sweep cells are fully
+# deterministic, reproduce the committed BENCH_sched.json baseline pair
+# exactly (no tolerance: same spec, same floats).
+python benchmarks/sweep_scenarios.py --scenarios flash-crowd \
+    --schedulers best-fit --autoscalers non-binding,predictive \
+    --jobs 600 --out /tmp/SWEEP_predictive_smoke.json
+python - <<'EOF'
+import json
+cells = {c["autoscaler"]: c
+         for c in json.load(open("/tmp/SWEEP_predictive_smoke.json"))["cells"]}
+nbas, pred = cells["non-binding"], cells["predictive"]
+assert pred["mean_pending_s"] < nbas["mean_pending_s"], (
+    f"predictive lost on pending: {pred['mean_pending_s']} vs "
+    f"NBAS {nbas['mean_pending_s']}")
+assert pred["cost"] <= nbas["cost"], (
+    f"predictive dominance broke on cost: {pred['cost']} vs "
+    f"NBAS {nbas['cost']}")
+base = json.load(open("BENCH_sched.json"))["predictive_flash"]
+for name, cell in (("non-binding", nbas), ("predictive", pred)):
+    for metric in ("cost", "mean_pending_s"):
+        got, want = cell[metric], base[name][metric]
+        assert got == want, (
+            f"{name} {metric} drifted from committed baseline: "
+            f"{got} != {want} (deterministic cell — regen the baseline "
+            f"only with an intended behavior change)")
+print(f"predictive gate OK: mean pending {pred['mean_pending_s']}s vs "
+      f"NBAS {nbas['mean_pending_s']}s at cost {pred['cost']} vs "
+      f"{nbas['cost']}, matching committed baseline")
+EOF
+
 echo "== many-world lane gates (parity smoke + speedup + regression) =="
 # The lane evaluator's end-to-end gates.  All of them need JAX — without
 # it `workers="lanes"` falls back to serial `run_cell` (covered by

@@ -2,8 +2,8 @@
 autoscaling for container/job orchestration (Rodriguez & Buyya, 2018)."""
 
 from repro.core.autoscaler import (AUTOSCALERS, Autoscaler, BindingAutoscaler,
-                                   NodeProvider, SimpleAutoscaler,
-                                   VoidAutoscaler)
+                                   NodeProvider, PredictiveAutoscaler,
+                                   SimpleAutoscaler, VoidAutoscaler)
 from repro.core.cluster import Cluster, Node, NodeState
 from repro.core.cost import CostModel
 from repro.core.disruption import (CrashLoopInjector, DisruptionInjector,
@@ -45,7 +45,8 @@ def reset_id_counters() -> None:
 
 __all__ = [
     "AUTOSCALERS", "Autoscaler", "BindingAutoscaler", "NodeProvider",
-    "SimpleAutoscaler", "VoidAutoscaler", "Cluster", "Node", "NodeState",
+    "PredictiveAutoscaler", "SimpleAutoscaler", "VoidAutoscaler",
+    "Cluster", "Node", "NodeState",
     "CostModel", "CrashLoopInjector", "DisruptionInjector",
     "SpotReclaimInjector", "ZoneOutageInjector", "FailureInjector",
     "StragglerInjector", "ExperimentSpec", "build_simulation", "run_all_combos",

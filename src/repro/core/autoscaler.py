@@ -47,6 +47,12 @@ class NodeProvider(abc.ABC):
 class Autoscaler(abc.ABC):
     name = "autoscaler"
 
+    #: Set (by instances) that want `observe_arrivals` called with every
+    #: arrival batch.  A plain class attribute so the simulation's hot
+    #: path can gate on one attribute read; False keeps existing
+    #: autoscalers' event handling byte-identical.
+    observes_arrivals = False
+
     def __init__(self, provider: NodeProvider,
                  scale_in_util_ceiling: Optional[float] = None):
         self.provider = provider
@@ -79,11 +85,28 @@ class Autoscaler(abc.ABC):
         trigger replacement capacity instead of staying stranded.
         Default: stateless autoscalers have nothing to clean up."""
 
+    def notify_node_removed(self, node: Node) -> None:
+        """Scale-in (Alg. 6) removed ``node`` from the cluster.  A node
+        that leaves this way never gets its pending NODE_FAIL delivered
+        (the kill early-returns once the node is gone), so per-node
+        bookkeeping keyed on the node id must be released here.
+        Default: stateless autoscalers track nothing per node."""
+
     def notify_preemption_notice(self, cluster: Cluster, node: Node,
                                  now: float) -> None:
         """``node`` received a spot reclaim notice and will be killed when
         the notice window closes (``Simulation._on_node_notice``).
         Default: do nothing — react after the kill like any failure."""
+
+    def observe_arrivals(self, times, cpu_m=None, mem_mb=None) -> None:
+        """Arrival observation feed (only delivered when
+        ``observes_arrivals`` is True): the batch's arrival instants plus,
+        when available, per-arrival requested cpu_m/mem_mb columns.
+        Default: reactive autoscalers ignore demand history."""
+
+    def on_cycle(self, cluster: Cluster, now: float) -> None:
+        """Per-scheduling-cycle hook, called before placement.  Default:
+        no-op — the paper's autoscalers act only on unschedulable pods."""
 
     # -- shared Alg. 6 body ----------------------------------------------------
     @staticmethod
@@ -135,6 +158,7 @@ class Autoscaler(abc.ABC):
         for node in self._step1_candidates(cluster):
             self.provider.terminate_node(node, now)
             cluster.remove_node(node, now)
+            self.notify_node_removed(node)
             touched.append(node.node_id)
 
         # 2./3. Consolidate moveable pods off candidate nodes.
@@ -145,6 +169,7 @@ class Autoscaler(abc.ABC):
                         cluster.unbind(pod, now)   # recreated -> next cycle
                     self.provider.terminate_node(node, now)
                     cluster.remove_node(node, now)
+                    self.notify_node_removed(node)
                     touched.append(node.node_id)
             elif node.has_moveable_and_batch():
                 movers = node.moveable_pods()
@@ -282,6 +307,12 @@ class BindingAutoscaler(Autoscaler):
         for uid in tracker.assigned:
             self._pod_to_node.pop(uid, None)
 
+    def notify_node_removed(self, node: Node) -> None:
+        """A noticed node that drains during its notice window is reaped
+        by Alg. 6 step 1 before the kill fires; without this hook its id
+        would sit in ``_noticed`` forever."""
+        self._noticed.discard(node.node_id)
+
     def notify_preemption_notice(self, cluster: Cluster, node: Node,
                                  now: float) -> None:
         """Launch replacement capacity *during* the notice window instead
@@ -310,7 +341,245 @@ class BindingAutoscaler(Autoscaler):
         return self._scale_in_impl(cluster, now)
 
 
+class PredictiveAutoscaler(SimpleAutoscaler):
+    """Forecast-ahead extension of Alg. 5 (beyond-paper, ROADMAP item 2).
+
+    The reactive algorithms pay one full provisioning delay per burst:
+    capacity is requested only after pods are already unschedulable.  This
+    autoscaler additionally feeds observed arrivals into a rate forecaster
+    (``repro.forecast`` contract: ``observe_bin`` / ``predict``) and, each
+    scheduling cycle, converts the predicted rate over the next
+    ``lead_time_s`` into node demand via the provider template's capacity
+    — launching *ahead* of the burst so nodes are READY when it lands.
+
+    Fallback contract: with ``forecaster=None``, or whenever the
+    forecaster's confidence is below ``conf_min``, behavior is exactly
+    inherited Alg. 5 + Alg. 6 — the predictive path adds no launches, no
+    RNG, and no event-order perturbation, so a disabled instance is
+    bit-identical to `SimpleAutoscaler`.
+
+    Freshly prelaunched nodes are protected from Alg. 6 step 1 for one
+    provisioning-delay + lead window; without that grace period, scale-in
+    would reap a speculative node the cycle after it boots empty and the
+    deficit would relaunch it — a churn loop that burns cost without ever
+    holding capacity through the predicted burst.
+
+    Demand model: while the cluster is keeping up, speculation covers
+    only the *unexpected* part of demand — the forecast rate in excess of
+    a slow EWMA of the same bin stream (``trend_min`` scales the
+    reference).  The reactive base algorithm already matches capacity to
+    a steady rate, so holding ``rate * lead`` of free capacity through a
+    plateau is pure idle cost, and launching into a falling rate (the
+    forecaster's lag after a cliff) is worse.  But while pods are
+    actually unschedulable (``scale_out`` fired within the last bin) the
+    cluster is in sustained overload — Alg. 5's one-node-per-interval
+    ramp is the bottleneck — and the full forecast rate drives the
+    deficit so the fleet keeps building until the backlog clears.
+
+    The overload ramp *escalates*: one node per cycle at onset, rising to
+    ``max_prelaunch_per_cycle`` once the overload has persisted past
+    ``escalate_s``.  A brief overload (a staircase climb the reactive
+    path nearly keeps up with) gets a gentle nudge that does not
+    overshoot the next cliff; a flash crowd that stays unschedulable for
+    many minutes is provably beyond Alg. 5's one-node-per-interval ramp
+    and gets the full-speed build-out.
+    """
+
+    name = "predictive"
+
+    def __init__(self, provider: NodeProvider,
+                 provisioning_interval_s: float = 60.0,
+                 scale_out_bypass_util: Optional[float] = None,
+                 scale_in_util_ceiling: Optional[float] = None,
+                 forecaster=None,
+                 bin_s: float = 30.0,
+                 lead_time_s: float = 90.0,
+                 headroom: float = 1.15,
+                 conf_min: float = 0.35,
+                 trend_min: float = 1.0,
+                 slow_alpha: float = 0.08,
+                 escalate_s: float = 900.0,
+                 max_prelaunch_per_cycle: int = 2):
+        super().__init__(provider,
+                         provisioning_interval_s=provisioning_interval_s,
+                         scale_out_bypass_util=scale_out_bypass_util,
+                         scale_in_util_ceiling=scale_in_util_ceiling)
+        self.forecaster = forecaster
+        self.observes_arrivals = forecaster is not None
+        self.bin_s = bin_s
+        self.lead_time_s = lead_time_s
+        self.headroom = headroom
+        self.conf_min = conf_min
+        self.trend_min = trend_min
+        self.slow_alpha = slow_alpha
+        self.escalate_s = escalate_s
+        self.max_prelaunch_per_cycle = max_prelaunch_per_cycle
+        template = getattr(provider, "template", None)
+        boot_s = (template.provisioning_delay_s if template is not None
+                  else provisioning_interval_s)
+        self._protect_s = boot_s + lead_time_s
+        self._cur_bin = 0          # index of the still-open arrival bin
+        self._cur_count = 0        # arrivals observed in the open bin
+        self._slow_rate: Optional[float] = None   # trend-gate reference
+        self._last_bin_rate = 0.0  # most recent *closed* bin's rate
+        self._arr_n = 0            # running per-arrival request means
+        self._arr_cpu = 0.0
+        self._arr_mem = 0.0
+        self._prelaunched_at: Dict[str, float] = {}
+        self._last_unsched = -np.inf   # last time Alg. 5 saw an unschedulable pod
+        self._overload_since = -np.inf   # start of the current overload episode
+        self._scale_in_now = 0.0
+        self.prelaunched = 0       # diagnostic: speculative launches
+
+    # -- arrival feed ---------------------------------------------------------
+    def observe_arrivals(self, times, cpu_m=None, mem_mb=None) -> None:
+        times = np.asarray(times, np.float64)
+        if times.size == 0:
+            return
+        self._arr_n += times.size
+        if cpu_m is not None:
+            self._arr_cpu += float(np.sum(cpu_m))
+        if mem_mb is not None:
+            self._arr_mem += float(np.sum(mem_mb))
+        for b in np.floor_divide(times, self.bin_s).astype(np.int64):
+            self._roll_to(int(b))
+            self._cur_count += 1
+
+    def _roll_to(self, b: int) -> None:
+        """Close (emit) every bin strictly before ``b``, including empty
+        ones — a quiet stretch is signal, not missing data."""
+        while self._cur_bin < b:
+            r = self._cur_count / self.bin_s
+            self.forecaster.observe_bin(r)
+            self._last_bin_rate = r
+            if self._slow_rate is None:
+                self._slow_rate = r
+            else:
+                self._slow_rate += self.slow_alpha * (r - self._slow_rate)
+            self._cur_count = 0
+            self._cur_bin += 1
+
+    def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
+        """Alg. 5 scale-out, plus an overload stamp: a call here means a
+        pod was unschedulable this cycle, which switches the next
+        ``on_cycle`` from rise-only speculation to full-rate ramping."""
+        if now - self._last_unsched > self.bin_s:
+            self._overload_since = now   # a fresh episode, not a continuation
+        self._last_unsched = now
+        super().scale_out(cluster, pod, now)
+
+    # -- predictive prelaunch -------------------------------------------------
+    def on_cycle(self, cluster: Cluster, now: float) -> None:
+        if self.forecaster is None:
+            return
+        if self._prelaunched_at:
+            cutoff = now - self._protect_s
+            expired = [nid for nid, t0 in self._prelaunched_at.items()
+                       if t0 <= cutoff]
+            for nid in expired:
+                del self._prelaunched_at[nid]
+        self._roll_to(int(now // self.bin_s))
+        rate, conf = self.forecaster.predict()
+        if conf < self.conf_min or rate <= 0.0 or self._arr_n == 0:
+            return   # fallback contract: stay purely reactive
+        slow = self._slow_rate if self._slow_rate is not None else 0.0
+        if rate < slow:
+            # Forecast says demand fell: stop shielding speculative nodes
+            # from Alg. 6 step 1 — let the cliff drain.
+            self._prelaunched_at.clear()
+        overloaded = now - self._last_unsched <= self.bin_s
+        # Escalation needs the overload to be *fed*: persistent backlog
+        # with arrivals still landing (a non-empty last bin) means Alg. 5's
+        # ramp is losing the race; a backlog with arrivals gone is a fixed
+        # drain the existing fleet retires without further build-out.
+        escalated = (overloaded
+                     and now - self._overload_since >= self.escalate_s
+                     and self._last_bin_rate > 0.0)
+        if not escalated:
+            # Alg. 5's launch rate limit applies to speculative launches
+            # too (the stamp below is shared): un-escalated prediction
+            # *shifts* the reactive launch earlier — ahead of the pods
+            # going unschedulable — it does not add fleet beyond what the
+            # reactive ramp would build.  That keeps cost pinned to the
+            # NBAS trajectory while capacity arrives one boot earlier.
+            if (self._last_launch is not None
+                    and now - self._last_launch < self.provisioning_interval_s):
+                return
+        if overloaded:
+            target_rate = rate   # sustained overload: ramp at forecast rate
+        else:
+            # Keeping up: speculate only on the rise the reactive path
+            # cannot see yet (forecast in excess of the slow trend).
+            target_rate = rate - self.trend_min * slow
+            if target_rate <= 0.0:
+                return   # steady or falling: leave it to reactive Alg. 5
+        allowed = self.max_prelaunch_per_cycle if escalated else 1
+        jobs = target_rate * self.lead_time_s * self.headroom
+        need_cpu = jobs * (self._arr_cpu / self._arr_n)
+        need_mem = jobs * (self._arr_mem / self._arr_n)
+        free_cpu, free_mem = self._free_capacity(cluster)
+        alloc = self.provider.template.allocatable
+        deficit = max((need_cpu - free_cpu) / max(alloc.cpu_m, 1),
+                      (need_mem - free_mem) / max(alloc.mem_mb, 1e-9))
+        if deficit <= 0.0:
+            return
+        for _ in range(min(allowed, int(np.ceil(deficit)))):
+            node = self.provider.launch_node(now)
+            cluster.add_node(node)
+            self._prelaunched_at[node.node_id] = now
+            self.prelaunched += 1
+            self._last_launch = now   # shared with the Alg. 5 rate limiter
+
+    @staticmethod
+    def _free_capacity(cluster: Cluster):
+        """(cpu_m, mem_mb) the cluster can still absorb within the lead
+        window: free room on READY nodes plus the full allocatable of
+        nodes already PROVISIONING (they will be up by then)."""
+        arr = cluster.arrays
+        if arr is not None:
+            active = arr.live("active")
+            state = arr.live("state")
+            ready = active & (state == _engine.STATE_READY)
+            prov = active & (state == _engine.STATE_PROVISIONING)
+            free_cpu, free_mem = arr.free_views()
+            cpu = (float(np.sum(free_cpu[ready]))
+                   + float(np.sum(arr.live("alloc_cpu")[prov])))
+            mem = (float(np.sum(free_mem[ready]))
+                   + float(np.sum(arr.live("alloc_mem")[prov])))
+            return cpu, mem
+        cpu = mem = 0.0
+        for node in cluster.nodes.values():
+            if node.state == NodeState.READY:
+                free = node.free
+                cpu += free.cpu_m
+                mem += free.mem_mb
+            elif node.state == NodeState.PROVISIONING:
+                cpu += node.allocatable.cpu_m
+                mem += node.allocatable.mem_mb
+        return cpu, mem
+
+    # -- scale-in protection --------------------------------------------------
+    def scale_in(self, cluster: Cluster, now: float) -> List[str]:
+        self._scale_in_now = now
+        return self._scale_in_impl(cluster, now)
+
+    def _step1_candidates(self, cluster: Cluster) -> List[Node]:
+        cands = Autoscaler._step1_candidates(cluster)
+        if not self._prelaunched_at:
+            return cands
+        cutoff = self._scale_in_now - self._protect_s
+        return [node for node in cands
+                if self._prelaunched_at.get(node.node_id, -np.inf) <= cutoff]
+
+    def notify_node_removed(self, node: Node) -> None:
+        self._prelaunched_at.pop(node.node_id, None)
+
+    def notify_node_lost(self, node: Node) -> None:
+        self._prelaunched_at.pop(node.node_id, None)
+
+
 AUTOSCALERS = {
     cls.name: cls
-    for cls in (VoidAutoscaler, SimpleAutoscaler, BindingAutoscaler)
+    for cls in (VoidAutoscaler, SimpleAutoscaler, BindingAutoscaler,
+                PredictiveAutoscaler)
 }

@@ -46,10 +46,13 @@ class EmaEstimator:
         self.prior = prior
         self._ratio: Dict[str, float] = {}
 
+    #: Single zero-division guard for usage/request ratios on both axes.
+    EPS = 1e-9
+
     def observe(self, pod: Pod, used: Resources) -> None:
         req = pod.requests
-        ratio = max(used.cpu_m / max(req.cpu_m, 1),
-                    used.mem_mb / max(req.mem_mb, 1e-9))
+        ratio = max(used.cpu_m / max(req.cpu_m, self.EPS),
+                    used.mem_mb / max(req.mem_mb, self.EPS))
         prev = self._ratio.get(pod.spec.type_name, self.prior)
         self._ratio[pod.spec.type_name] = (
             self.alpha * ratio + (1 - self.alpha) * prev)
@@ -61,8 +64,11 @@ class EmaEstimator:
                           cpu_floor: float = 0.3,
                           headroom: float = 1.2) -> Resources:
         r = min(1.0, self.ratio(pod.spec.type_name) * headroom)
+        # Round half-up with a floor of 1 millicore: plain int() truncates
+        # toward zero, so a 1-millicore request at any ratio < 1 would
+        # estimate to 0 cpu_m and look free to every feasibility check.
         return Resources(
-            cpu_m=int(pod.requests.cpu_m * max(r, cpu_floor)),
+            cpu_m=max(1, int(pod.requests.cpu_m * max(r, cpu_floor) + 0.5)),
             mem_mb=pod.requests.mem_mb * max(r, mem_floor),
         )
 

@@ -10,7 +10,8 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.autoscaler import (AUTOSCALERS, BindingAutoscaler,
-                                   SimpleAutoscaler, VoidAutoscaler)
+                                   PredictiveAutoscaler, SimpleAutoscaler,
+                                   VoidAutoscaler)
 from repro.core.cluster import Cluster
 from repro.core.cost import CostModel
 from repro.core.metrics import ExperimentResult
@@ -54,6 +55,19 @@ class ExperimentSpec:
     scheduler_weights: Optional[tuple] = None
     scale_out_bypass_util: Optional[float] = None
     scale_in_util_ceiling: Optional[float] = None
+    # Predictive-autoscaler knobs (autoscaler="predictive" only — see
+    # repro.core.autoscaler.PredictiveAutoscaler + repro.forecast).
+    # `forecaster` names the built-in online forecaster ("ewma"); None
+    # disables prediction entirely (bit-identical to autoscaler
+    # "non-binding").  `forecaster_obj` injects a programmatic forecaster
+    # (e.g. a trained repro.forecast.model.LearnedForecaster restored
+    # from a checkpoint) and takes precedence over the name.
+    forecaster: Optional[str] = "ewma"
+    forecaster_obj: object = None
+    forecast_bin_s: float = 30.0
+    forecast_lead_s: float = 90.0
+    forecast_headroom: float = 1.15
+    forecast_conf_min: float = 0.35
     failure_injector: object = None
     straggler_threshold: float = 0.0
     # repro.core.failures.StragglerInjector — wired into the provider's
@@ -171,6 +185,25 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
     elif spec.autoscaler == "binding":
         autoscaler = BindingAutoscaler(
             provider, scale_in_util_ceiling=spec.scale_in_util_ceiling)
+    elif spec.autoscaler == "predictive":
+        if spec.forecaster_obj is not None:
+            forecaster = spec.forecaster_obj
+        elif spec.forecaster is None:
+            forecaster = None
+        elif spec.forecaster == "ewma":
+            from repro.forecast import EwmaForecaster
+            forecaster = EwmaForecaster()
+        else:
+            raise KeyError(f"unknown forecaster {spec.forecaster!r}; "
+                           f"known: 'ewma', None, or set forecaster_obj")
+        autoscaler = PredictiveAutoscaler(
+            provider, provisioning_interval_s=spec.provisioning_interval_s,
+            scale_out_bypass_util=spec.scale_out_bypass_util,
+            scale_in_util_ceiling=spec.scale_in_util_ceiling,
+            forecaster=forecaster, bin_s=spec.forecast_bin_s,
+            lead_time_s=spec.forecast_lead_s,
+            headroom=spec.forecast_headroom,
+            conf_min=spec.forecast_conf_min)
     else:
         raise KeyError(spec.autoscaler)
 

@@ -116,7 +116,8 @@ class ExperimentResult:
 
     def combo(self) -> str:
         abbrev = {"void": "VR", "non-binding": "NBR", "binding": "BR"}
-        as_abbrev = {"void": "VAS", "non-binding": "NBAS", "binding": "BAS"}
+        as_abbrev = {"void": "VAS", "non-binding": "NBAS", "binding": "BAS",
+                     "predictive": "PAS"}
         return f"{abbrev.get(self.rescheduler, self.rescheduler)}-" \
                f"{as_abbrev.get(self.autoscaler, self.autoscaler)}"
 

@@ -459,6 +459,10 @@ class Orchestrator:
         stats = CycleStats()
         if self.straggler_threshold > 0:
             self._mitigate_stragglers(now)
+        # Predictive prelaunch hook (no-op for the paper's autoscalers):
+        # runs before placement so capacity requested for a forecast burst
+        # starts booting in the same cycle that observes the demand.
+        self.autoscaler.on_cycle(self.cluster, now)
         if self.store is not None:
             self._cycle_wave(self.pending_rows(), now, stats)
         else:

@@ -271,11 +271,20 @@ class Simulation:
             if self.first_submit is None:
                 self.first_submit = float(times[lo])
             self.now = float(times[hi - 1])
+            if self.orch.autoscaler.observes_arrivals:
+                self.orch.autoscaler.observe_arrivals(
+                    times[lo:hi], self.trace.cpu_m[lo:hi],
+                    self.trace.mem_mb[lo:hi])
             self.orch.submit_trace(self.trace, lo, hi)
             return
         if self.first_submit is None:
             self.first_submit = batch[0].time
         self.now = batch[-1].time
+        if self.orch.autoscaler.observes_arrivals:
+            reqs = [a.spec.requests for a in batch]
+            self.orch.autoscaler.observe_arrivals(
+                [a.time for a in batch],
+                [r.cpu_m for r in reqs], [r.mem_mb for r in reqs])
         self.orch.submit_wave(batch)
 
     def _on_cycle(self) -> None:

@@ -1,0 +1,29 @@
+"""Workload-rate forecasting (ROADMAP open item 2).
+
+The package joins the repo's two halves: the scenario generators
+(`repro.scenarios`) are the data factory, the JAX training substrate
+(`repro.models` + `repro.train`) fits a small learned forecaster, and
+`repro.core.autoscaler.PredictiveAutoscaler` consumes either forecaster
+online to launch capacity *ahead* of bursts (see ARCHITECTURE.md
+"Predictive autoscaling").
+
+Layout:
+
+* `features`  — numpy-only windowed (history → next-window rate) examples
+  from `TraceStore.arrival_time` columns; deterministic per
+  (family, seed, window).
+* `baseline`  — numpy-only online EWMA forecaster + closed-form AR(1)
+  baseline; these run inside hermetic sweep cells with no JAX dependency.
+* `model`     — the learned forecaster: a tiny mLSTM trunk from
+  `repro.models.xlstm` trained with `repro.train.optimizer`, restored via
+  `repro.train.checkpoint`.  Imported lazily so `repro.forecast` works in
+  JAX-free environments.
+"""
+from repro.forecast.baseline import Ar1Baseline, EwmaForecaster
+from repro.forecast.features import (WindowConfig, bin_rates, family_examples,
+                                     make_dataset, windowed_examples)
+
+__all__ = [
+    "Ar1Baseline", "EwmaForecaster", "WindowConfig", "bin_rates",
+    "family_examples", "make_dataset", "windowed_examples",
+]

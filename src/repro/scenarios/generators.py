@@ -271,8 +271,12 @@ class MultiTenant:
     """Independent tenant streams merged into one interleaved trace.
 
     Each tenant is any scenario config with a ``build(seed)`` method; tenant
-    *i* is seeded ``seed + 101·(i+1)`` so streams are independent but the
-    composition stays a pure function of one seed.  ``n_jobs`` sizes the
+    streams are seeded from ``np.random.SeedSequence(seed).spawn(...)`` so
+    they are statistically independent of each other *and* across nearby
+    experiment seeds (the earlier ``seed + 101·(i+1)`` arithmetic made
+    ``(seed=0, tenant 1)`` and ``(seed=101, tenant 0)`` draw identical
+    streams), while the composition stays a pure function of one seed.
+    ``n_jobs`` sizes the
     *default* diurnal/flash-crowd/heavy-tail trio (total jobs, split
     35/35/30); explicit ``tenants`` carry their own sizes, so combining the
     two is rejected rather than silently ignoring one."""
@@ -293,6 +297,6 @@ class MultiTenant:
             n2 = int(round(total * 0.35))
             tenants = (Diurnal(n_jobs=n1), FlashCrowd(n_jobs=n2),
                        HeavyTail(n_jobs=total - n1 - n2))
-        parts = [cfg.build(seed + 101 * (i + 1))
-                 for i, cfg in enumerate(tenants)]
+        streams = np.random.SeedSequence(seed).spawn(len(tenants))
+        parts = [cfg.build(stream) for cfg, stream in zip(tenants, streams)]
         return TraceStore.merge(parts, name=self.name)

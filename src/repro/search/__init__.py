@@ -15,7 +15,8 @@ from repro.search.nsga2 import (DEFAULT_OBJECTIVES, Individual, SearchResult,
                                 sbx_crossover)
 from repro.search.paramspace import (ChoiceParam, FloatParam,
                                      PAPER_DEFAULT_CONFIG, ParamSpace,
-                                     default_space, to_cell_spec)
+                                     default_space, predictive_space,
+                                     to_cell_spec)
 from repro.search.report import baseline_rows, build_report, summarize
 from repro.search.runner import CellError, CellSpec, run_cell, run_cells
 
@@ -24,6 +25,7 @@ __all__ = [
     "FloatParam", "Individual", "PAPER_DEFAULT_CONFIG", "ParamSpace",
     "SearchResult", "baseline_rows", "build_report", "crowding_distance",
     "default_space", "dominates", "fast_non_dominated_sort", "mutate",
+    "predictive_space",
     "run_cell", "run_cells", "run_search", "sbx_crossover", "summarize",
     "to_cell_spec",
 ]

@@ -166,6 +166,31 @@ def default_space() -> ParamSpace:
     ))
 
 
+def predictive_space() -> ParamSpace:
+    """`default_space()` widened with the predictive autoscaler and its
+    lead-time / headroom knobs (ISSUE: forecast-ahead scaling as a search
+    axis).
+
+    A separate constructor rather than a widened `default_space()`: the
+    NSGA-II golden fixture pins configs drawn from the default space, and
+    sampling draws one value per parameter in space order — adding
+    parameters (or a third autoscaler choice) would shift that stream and
+    silently invalidate the fixture.  The extra knobs are inert for
+    non-predictive autoscaler genes, mirroring how the threshold knobs of
+    `default_space()` are inert at their paper-behavior bounds.
+    """
+    params = []
+    for p in default_space().params:
+        if p.name == "autoscaler":
+            params.append(ChoiceParam(
+                "autoscaler", ("binding", "non-binding", "predictive")))
+        else:
+            params.append(p)
+    params.append(FloatParam("forecast_lead_s", 30.0, 240.0))
+    params.append(FloatParam("forecast_headroom", 1.0, 2.0))
+    return ParamSpace(params)
+
+
 # Table-4 defaults expressed as a point of `default_space()` — the
 # paper's Alg. 3–6 chain (non-binding rescheduler, binding autoscaler,
 # 60 s knobs, m2.small workers).  Thresholds sit at the bounds where
@@ -207,4 +232,9 @@ def to_cell_spec(cfg: Dict[str, Value], scenario: str, seed: int = 0,
         scale_out_bypass_util=cfg["scale_out_bypass_util"],
         scale_in_util_ceiling=cfg["scale_in_util_ceiling"],
         template_name=cfg["template"], chaos=chaos,
-        initial_workers=3 if chaos else 1)
+        initial_workers=3 if chaos else 1,
+        # predictive_space() knobs; absent (default_space configs) they
+        # fall back to the CellSpec defaults, which match the
+        # PredictiveAutoscaler constructor.
+        forecast_lead_s=float(cfg.get("forecast_lead_s", 90.0)),
+        forecast_headroom=float(cfg.get("forecast_headroom", 1.15)))

@@ -74,6 +74,16 @@ class CellSpec:
     scale_in_util_ceiling: Optional[float] = None
     template_name: Optional[str] = None
     initial_workers: int = 1
+    # Predictive-autoscaler knobs (autoscaler="predictive"; see
+    # repro.core.autoscaler.PredictiveAutoscaler).  The forecaster travels
+    # as a builtin name ("ewma"; None = prediction disabled) so cells stay
+    # picklable and are rebuilt fresh worker-side — forecasters are
+    # stateful, a shared instance would leak rate history across cells.
+    forecaster: Optional[str] = "ewma"
+    forecast_bin_s: float = 30.0
+    forecast_lead_s: float = 90.0
+    forecast_headroom: float = 1.15
+    forecast_conf_min: float = 0.35
     # With chaos=True the scenario must be a `CHAOS_SCENARIOS` name; the
     # worker wires in that scenario's seeded disruption injector stack
     # (fresh per run — injectors are stateful) so `lost_work_s` becomes a
@@ -104,6 +114,11 @@ class CellSpec:
             scale_in_util_ceiling=self.scale_in_util_ceiling,
             template_name=self.template_name,
             initial_workers=self.initial_workers,
+            forecaster=self.forecaster,
+            forecast_bin_s=self.forecast_bin_s,
+            forecast_lead_s=self.forecast_lead_s,
+            forecast_headroom=self.forecast_headroom,
+            forecast_conf_min=self.forecast_conf_min,
             failure_injector=injector)
 
 

@@ -38,22 +38,53 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
 
+    def _aside(self, final: str) -> str:
+        """Parking name for the old copy of a step during a re-save swap.
+        Dot-prefixed so `all_steps` never counts it as a checkpoint."""
+        return os.path.join(self.directory,
+                            "." + os.path.basename(final) + ".old")
+
+    def _recover(self, final: str) -> None:
+        """Heal a crash between the aside-rename and the swap in `save`:
+        if the step dir is gone but its aside survives, the aside *is*
+        the newest valid copy of that step — put it back."""
+        aside = self._aside(final)
+        if os.path.isdir(aside):
+            if os.path.isdir(final):
+                shutil.rmtree(aside, ignore_errors=True)
+            else:
+                os.rename(aside, final)
+
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
         leaves = {k: np.asarray(v) for k, v in _flatten_with_paths(tree)}
         final = os.path.join(self.directory, f"step_{step:08d}")
+        self._recover(final)
         tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        aside = None
         try:
             np.savez(os.path.join(tmp, "leaves.npz"), **leaves)
             meta = {"step": step, "extra": extra or {}}
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
             if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
+                # Re-save of an existing step: park the old copy instead
+                # of deleting it, so a crash anywhere in the swap leaves a
+                # restorable version of the step LATEST may still name.
+                aside = self._aside(final)
+                os.rename(final, aside)
+            try:
+                os.rename(tmp, final)
+            except BaseException:
+                if aside is not None:
+                    os.rename(aside, final)
+                    aside = None
+                raise
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        if aside is not None:
+            shutil.rmtree(aside, ignore_errors=True)
         # LATEST last: readers never see a partial checkpoint.
         latest_tmp = os.path.join(self.directory, ".LATEST.tmp")
         with open(latest_tmp, "w") as f:
@@ -84,6 +115,7 @@ class CheckpointManager:
         if os.path.exists(path):
             with open(path) as f:
                 name = f.read().strip()
+            self._recover(os.path.join(self.directory, name))
             if os.path.isdir(os.path.join(self.directory, name)):
                 return int(name[5:])
         steps = self.all_steps()
@@ -100,6 +132,7 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.directory}")
         d = os.path.join(self.directory, f"step_{step:08d}")
+        self._recover(d)
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
         data = np.load(os.path.join(d, "leaves.npz"))

@@ -154,3 +154,51 @@ class TestScaleIn:
         cluster.bind(mover, a, 0.0)   # nowhere else to go
         assert auto.scale_in(cluster, now=100.0) == []
         assert mover.phase == PodPhase.BOUND
+
+
+class TestNoticedBookkeeping:
+    """Regression: `BindingAutoscaler._noticed` must not leak node ids.
+
+    A noticed node that drains during its notice window is reaped by
+    Alg. 6 step 1 (empty + autoscaled) before the scheduled kill fires;
+    the kill then early-returns on the already-removed node, so
+    `notify_node_lost` never runs for it.  Scale-in must clear the
+    notice entry itself via `notify_node_removed`.
+    """
+
+    def test_scale_in_clears_noticed_entry(self):
+        cluster = Cluster()
+        provider = mk_provider()
+        auto = BindingAutoscaler(provider)
+        node = Node(allocatable=M2_SMALL.allocatable, autoscaled=True,
+                    node_id="doomed")
+        provider.cost.on_provision(node, 0.0)
+        node.mark_ready(0.0)
+        cluster.add_node(node)
+        pod = mk_pod(mem_gi=1.0, kind=PodKind.BATCH)
+        cluster.bind(pod, node, 0.0)
+        auto.notify_preemption_notice(cluster, node, now=10.0)
+        assert "doomed" in auto._noticed
+        cluster.complete(pod, 20.0)              # node drains in the window
+        auto.scale_in(cluster, now=30.0)         # Alg. 6 step 1 reaps it
+        assert "doomed" not in cluster.nodes
+        assert auto._noticed == set()
+
+    def test_noticed_empty_after_spot_spike_chaos_run(self):
+        from repro.core import reset_id_counters
+        from repro.core.experiment import build_simulation
+        from repro.scenarios.chaos import chaos_spec
+
+        reset_id_counters()
+        spec = chaos_spec("spot-spike", seed=0, n_jobs=200)
+        sim = build_simulation(spec)
+        result = sim.run()
+        assert result.completed
+        auto = sim.orch.autoscaler
+        # Entries for nodes still in the cluster are open notice windows
+        # (the workload finished before their kill fired) — legitimate
+        # outstanding state.  Entries for nodes that already *left* the
+        # cluster are the leak; there must be none.
+        live = set(sim.cluster.nodes)
+        assert auto._noticed - live == set()
+        assert set(auto._tracked) <= live

@@ -1,0 +1,72 @@
+"""Fault-injection tests for `CheckpointManager.save` re-save atomicity.
+
+Kept separate from tests/test_train_substrate.py (which is skipped wholesale
+when the dev-only `hypothesis` dep is absent) so the crash-safety contract is
+exercised wherever JAX itself is available.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")   # checkpoint module flattens pytrees via jax
+
+from repro.train.checkpoint import CheckpointManager
+
+
+class TestResaveAtomicity:
+    def test_resave_swap_failure_keeps_old_step(self, monkeypatch):
+        """Fault injection: re-saving an existing step must never pass
+        through a state where the step dir is deleted while LATEST still
+        names it.  The old code did `rmtree(final)` before
+        `rename(tmp, final)`; if the rename then failed (or the process
+        died), `restore()` lost the newest valid checkpoint."""
+        v1 = {"a": np.full(2, 1.0, np.float32)}
+        v2 = {"a": np.full(2, 2.0, np.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(7, v1)
+            final = os.path.join(d, "step_00000007")
+            real_rename = os.rename
+
+            def failing_rename(src, dst):
+                if dst == final and ".tmp_" in os.path.basename(src):
+                    raise OSError("injected crash during swap")
+                return real_rename(src, dst)
+
+            monkeypatch.setattr(os, "rename", failing_rename)
+            with pytest.raises(OSError, match="injected"):
+                mgr.save(7, v2)
+            monkeypatch.undo()
+            restored, step, _ = mgr.restore(v1)
+            assert step == 7
+            np.testing.assert_array_equal(restored["a"], v1["a"])
+
+    def test_resave_crash_between_renames_recovers_aside(self):
+        """A hard crash after the old dir was parked aside but before the
+        new dir landed leaves only `.step_XXXXXXXX.old` on disk; a fresh
+        manager must recover it so LATEST keeps resolving."""
+        v1 = {"a": np.arange(3, dtype=np.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            CheckpointManager(d).save(4, v1)
+            final = os.path.join(d, "step_00000004")
+            os.rename(final, os.path.join(d, ".step_00000004.old"))
+            assert not os.path.isdir(final)       # the crash-window state
+            mgr = CheckpointManager(d)
+            assert mgr.latest_step() == 4
+            restored, step, _ = mgr.restore(v1)
+            assert step == 4
+            np.testing.assert_array_equal(restored["a"], v1["a"])
+
+    def test_resave_success_replaces_and_cleans_aside(self):
+        v1 = {"a": np.full(2, 1.0, np.float32)}
+        v2 = {"a": np.full(2, 2.0, np.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(3, v1)
+            mgr.save(3, v2)
+            restored, _, _ = mgr.restore(v1)
+            np.testing.assert_array_equal(restored["a"], v2["a"])
+            assert not os.path.exists(os.path.join(d, ".step_00000003.old"))
+            assert mgr.all_steps() == [3]

@@ -102,6 +102,45 @@ class TestEstimator:
                                              est))
         assert over > plain
 
+    def test_effective_request_never_rounds_cpu_to_zero(self):
+        """Regression: plain int() truncated toward zero, so a 1-millicore
+        request at any ratio < 1 estimated to 0 cpu_m and looked free to
+        every feasibility check."""
+        from repro.core.pods import Pod, PodSpec
+
+        est = EmaEstimator(alpha=1.0)
+        tiny = Pod(spec=PodSpec(type_name="tiny", kind=PodKind.SERVICE,
+                                requests=Resources(cpu_m=1, mem_mb=4.0),
+                                duration_s=10.0), submit_time=0.0)
+        est.observe(tiny, Resources(cpu_m=0, mem_mb=1.0))   # low usage
+        eff = est.effective_request(tiny)
+        assert eff.cpu_m == 1
+
+    def test_effective_request_rounds_half_up(self):
+        from repro.core.pods import Pod, PodSpec
+
+        est = EmaEstimator(alpha=1.0)
+        pod = Pod(spec=PodSpec(type_name="t", kind=PodKind.SERVICE,
+                               requests=Resources(cpu_m=10, mem_mb=100.0),
+                               duration_s=10.0), submit_time=0.0)
+        # ratio 0.375, headroom 1.2 -> r = 0.45; 10 * 0.45 = 4.5 -> 5
+        est.observe(pod, Resources(cpu_m=3, mem_mb=37.5))
+        eff = est.effective_request(pod, cpu_floor=0.0, mem_floor=0.0)
+        assert eff.cpu_m == 5
+        assert eff.mem_mb == pytest.approx(45.0)
+
+    def test_observe_handles_zero_requests_on_both_axes(self):
+        """One epsilon convention: a zero request on either axis must not
+        divide by zero nor blow the ratio up from the other axis."""
+        from repro.core.pods import Pod, PodSpec
+
+        est = EmaEstimator(alpha=1.0)
+        pod = Pod(spec=PodSpec(type_name="z", kind=PodKind.SERVICE,
+                               requests=Resources(cpu_m=0, mem_mb=0.0),
+                               duration_s=10.0), submit_time=0.0)
+        est.observe(pod, Resources(cpu_m=0, mem_mb=0.0))
+        assert est.ratio("z") == 0.0
+
 
 class TestTrainerPreemption:
     def test_preempt_checkpoint_resume(self):

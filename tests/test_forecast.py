@@ -1,0 +1,146 @@
+"""Tests for `repro.forecast` + the predictive autoscaler (ROADMAP item 2).
+
+Numpy-only pieces (features, baselines, the disabled-forecaster parity
+contract) run everywhere; the learned-model smoke is JAX-gated.
+"""
+import numpy as np
+import pytest
+
+from repro.core.experiment import ExperimentSpec, run_experiment
+from repro.forecast import (Ar1Baseline, EwmaForecaster, WindowConfig,
+                            bin_rates, family_examples, make_dataset,
+                            windowed_examples)
+from repro.forecast.features import is_val_seed
+
+
+class TestFeatures:
+    def test_bin_rates_counts_per_bin(self):
+        rates = bin_rates(np.array([0.0, 1.0, 2.0, 10.0, 11.0]), bin_s=10.0)
+        # two bins: 3 arrivals in [0, 10), 2 in [10, 20)
+        assert rates.tolist() == [0.3, 0.2]
+
+    def test_bin_rates_trace_end_closes_series(self):
+        # bins never extend past the last arrival: the scenario ended,
+        # demand didn't drop to zero
+        rates = bin_rates(np.array([5.0]), bin_s=10.0)
+        assert rates.shape == (1,)
+
+    def test_windowed_examples_geometry_and_labels(self):
+        cfg = WindowConfig(bin_s=30.0, history_bins=4, horizon_bins=2)
+        rates = np.arange(10, dtype=np.float64)
+        X, y = windowed_examples(rates, cfg)
+        assert X.shape == (5, 4) and y.shape == (5,)
+        assert X[0].tolist() == [0, 1, 2, 3]
+        assert y[0] == pytest.approx((4 + 5) / 2)   # mean over the horizon
+        assert X[-1].tolist() == [4, 5, 6, 7]
+
+    def test_windowed_examples_short_series_empty(self):
+        cfg = WindowConfig(history_bins=16, horizon_bins=2)
+        X, y = windowed_examples(np.ones(10), cfg)
+        assert X.shape == (0, 16) and y.shape == (0,)
+
+    def test_family_examples_deterministic(self):
+        cfg = WindowConfig()
+        a = family_examples("flash-crowd", seed=1, cfg=cfg, n_jobs=300)
+        b = family_examples("flash-crowd", seed=1, cfg=cfg, n_jobs=300)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+        c = family_examples("flash-crowd", seed=2, cfg=cfg, n_jobs=300)
+        assert a[0].shape != c[0].shape or not np.array_equal(a[0], c[0])
+
+    def test_make_dataset_split_is_seed_pure(self):
+        cfg = WindowConfig()
+        data = make_dataset(("flash-crowd",), range(5), cfg, n_jobs=600)
+        # seeds 0,1,2,4 train / seed 3 val (is_val_seed: seed % 4 == 3)
+        assert [s for s in range(5) if is_val_seed(s)] == [3]
+        X3, y3 = family_examples("flash-crowd", 3, cfg, n_jobs=600)
+        np.testing.assert_array_equal(data["X_val"], X3)
+        np.testing.assert_array_equal(data["y_val"], y3)
+        assert data["X_train"].shape[0] == data["y_train"].shape[0]
+        assert data["X_train"].shape[0] > data["X_val"].shape[0]
+
+
+class TestBaselines:
+    def test_ewma_warmup_then_confident_on_constant(self):
+        f = EwmaForecaster()
+        rate, conf = f.predict()
+        assert conf == 0.0                    # no data yet: never trusted
+        for _ in range(20):
+            f.observe_bin(2.0)
+        rate, conf = f.predict()
+        assert rate == pytest.approx(2.0)
+        assert conf > 0.9                     # error EWMA decayed to ~0
+
+    def test_ewma_tracks_level_shift(self):
+        f = EwmaForecaster()
+        for _ in range(10):
+            f.observe_bin(1.0)
+        for _ in range(30):
+            f.observe_bin(5.0)
+        rate, _ = f.predict()
+        assert rate == pytest.approx(5.0, rel=0.05)
+
+    def test_ar1_recovers_generating_coefficients(self):
+        # Ar1Baseline is mean-reverting: y = mu + phi*(x_last - mu) with
+        # mu anchored at the sample mean of x_last.  Generate data from
+        # exactly that process and check it round-trips.
+        rng = np.random.default_rng(0)
+        X = rng.uniform(0.5, 4.0, size=(400, 16))
+        mu = float(X[:, -1].mean())
+        y = mu + 0.7 * (X[:, -1] - mu)
+        model = Ar1Baseline.fit(X, y)
+        assert model.mu == pytest.approx(mu, abs=1e-12)
+        assert model.phi == pytest.approx(0.7, abs=1e-9)
+        np.testing.assert_allclose(model.predict_batch(X), y, atol=1e-9)
+
+
+def _result_dict(autoscaler, forecaster, n_jobs=300, **kw):
+    spec = ExperimentSpec(scenario="flash-crowd", scenario_jobs=n_jobs,
+                          scheduler="best-fit", rescheduler="non-binding",
+                          autoscaler=autoscaler, forecaster=forecaster,
+                          seed=0, **kw)
+    return run_experiment(spec).as_dict()
+
+
+class TestPredictiveAutoscaler:
+    def test_disabled_forecaster_bit_identical_to_simple(self):
+        """The fallback contract: forecaster=None degrades the predictive
+        autoscaler to *exactly* Alg. 5 — every metric, not approximately."""
+        base = _result_dict("non-binding", forecaster="ewma")  # name inert
+        pred = _result_dict("predictive", forecaster=None)
+        base.pop("autoscaler"), pred.pop("autoscaler")
+        assert pred == base
+
+    def test_enabled_forecaster_prelaunches_and_cuts_pending(self):
+        # 600 jobs is the smallest flash-crowd where the burst outlives
+        # the warmup + confidence gates and prediction actually fires.
+        base = _result_dict("non-binding", forecaster="ewma", n_jobs=600)
+        pred = _result_dict("predictive", forecaster="ewma", n_jobs=600)
+        assert pred["mean_pending_s"] < base["mean_pending_s"]
+        assert pred["cost"] <= base["cost"]
+
+    def test_unknown_forecaster_name_raises(self):
+        with pytest.raises(KeyError, match="unknown forecaster"):
+            _result_dict("predictive", forecaster="prophet")
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+class TestLearnedForecaster:
+    def test_train_smoke_loss_decreases_and_roundtrips(self, tmp_path):
+        pytest.importorskip("jax")
+        from repro.forecast import model as fmodel
+        cfg = WindowConfig()
+        data = make_dataset(("flash-crowd", "scale-stress"), range(4), cfg,
+                            n_jobs=300)
+        result = fmodel.train_forecaster(
+            data["X_train"], data["y_train"], window=cfg,
+            X_val=data["X_val"], y_val=data["y_val"], seed=0, steps=40)
+        assert np.mean(result.losses[-5:]) < np.mean(result.losses[:5])
+
+        fmodel.save_forecaster(str(tmp_path / "ck"), result, step=40)
+        restored = fmodel.load_forecaster(str(tmp_path / "ck"))
+        live = fmodel.LearnedForecaster(result.params, result.arch, cfg)
+        for r in (0.5, 1.0, 2.0) * 8:
+            restored.observe_bin(r)
+            live.observe_bin(r)
+        assert restored.predict() == live.predict()
