@@ -1,6 +1,7 @@
 # Developer entry points.  `make check` is the CI gate.
 
-.PHONY: check test bench-sched sweep-scenarios search search-smoke docs-check
+.PHONY: check test bench-sched sweep-scenarios search search-smoke docs-check \
+        obsreport obs-smoke obs-overhead-gate
 
 check:
 	bash scripts/ci.sh
@@ -22,3 +23,13 @@ search-smoke:
 
 docs-check:
 	python scripts/docs_check.py
+
+# Flight-recorder report for one run (phase table + decision drill-down).
+obsreport:
+	python scripts/obsreport.py --scenario flash-crowd --jobs 400
+
+obs-smoke:
+	python scripts/obsreport.py --smoke
+
+obs-overhead-gate:
+	python scripts/obsreport.py --overhead-gate

@@ -118,6 +118,10 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: fast-path audits + engine parity + "
                          "golden chaos fixture, at the fixture's job count")
+    ap.add_argument("--obs-dir", default=None,
+                    help="also run each scenario with the flight recorder "
+                         "attached and export <dir>/chaos.<name>.npz "
+                         "(inspect with scripts/obsreport.py --load)")
     ap.add_argument("--out", default="CHAOS_resilience.json")
     args = ap.parse_args(argv)
 
@@ -131,6 +135,19 @@ def main(argv=None) -> None:
                             engine=args.engine)
              for name in scenarios]
     write_table(cells, args.out)
+
+    if args.obs_dir:
+        from repro.obs import run_recorded
+        os.makedirs(args.obs_dir, exist_ok=True)
+        for name in scenarios:
+            reset_id_counters()
+            _result, rec = run_recorded(
+                chaos_spec(name, seed=args.seed, n_jobs=args.jobs,
+                           engine=args.engine))
+            path = os.path.join(args.obs_dir,
+                                f"chaos.{name}.seed{args.seed}.npz")
+            rec.export(path)
+            print(f"# obs bundle: {path} ({rec.events.n_seen} events)")
 
 
 if __name__ == "__main__":

@@ -124,6 +124,28 @@ echo "== chaos smoke (seeded disruption schedules, parity + column audits) =="
 # and the array trace must match the committed golden chaos fixture.
 python scripts/chaos.py --smoke --out /tmp/CHAOS_smoke.json
 
+echo "== obs smoke (flight recorder -> export -> report, end to end) =="
+# The observability pipeline's end-to-end gate: record a small run, assert
+# the obs-on ExperimentResult is bit-identical to obs-off, round-trip the
+# event log through .npz and .json bit-exactly, check every reactive
+# scale-out request is attributed in the log, and render the report +
+# Chrome trace.  (Obs *off* is the default path every other gate in this
+# file runs — the throughput/full-run gates against the committed
+# BENCH_sched.json baselines already pin its cost to within noise.)
+python scripts/obsreport.py --smoke --limit 5
+
+echo "== obs overhead gate (obs-on wall vs obs-off, same spec) =="
+# Recording is passive but not free: the obs-on wall on the flash-crowd/
+# predictive stress cell must stay within REPRO_OBS_OVERHEAD_MAX (default
+# 2.0x, measured ~1.6x) of obs-off, and the results must stay
+# bit-identical.  Machine-dependent timing — skipped with the other bench
+# gates on unrelated hardware.
+if [ "${BENCH_REGRESSION_SKIP:-0}" = "1" ]; then
+    echo "obs overhead gate skipped (BENCH_REGRESSION_SKIP=1)"
+else
+    python scripts/obsreport.py --overhead-gate
+fi
+
 echo "== trace-replay gate (100k-arrival columnar ingest, array engine) =="
 # Regression gate for the trace-native submission path (Timeline ->
 # submit_trace -> PodStore.ingest_trace): end-to-end pods/s on a 100k-

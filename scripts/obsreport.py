@@ -1,0 +1,224 @@
+#!/usr/bin/env python
+"""Obs report CLI: run (or load) a flight-recorded experiment and explain it.
+
+Default mode runs one experiment with the flight recorder + cycle-phase
+profiler attached (``repro.obs``) and prints the run report — the phase
+breakdown table, the decision summary, and the per-decision drill-down
+with each decision's attributed inputs::
+
+    python scripts/obsreport.py --scenario flash-crowd --jobs 400 \
+        --autoscaler predictive --rescheduler non-binding
+    python scripts/obsreport.py --scenario diurnal --export run.npz \
+        --chrome-trace trace.json
+    python scripts/obsreport.py --load run.npz --kind evict,resched
+
+``--load`` reports on a previously exported bundle (``.npz`` or the
+exact-round-trip ``.json``) with identical output.  ``--chrome-trace``
+additionally writes the profiler span ring as Chrome-trace/Perfetto JSON
+(open in https://ui.perfetto.dev or chrome://tracing).
+
+CI modes:
+
+* ``--smoke`` — record a small run, export + reload both formats,
+  assert the bit-exact round trip, assert an obs-off rerun produces the
+  bit-identical ``ExperimentResult``, and render the full report and
+  Chrome trace (the observability pipeline end to end).
+* ``--overhead-gate`` — median-of-3 obs-off vs obs-on walls on the same
+  spec; asserts the results stay bit-identical and the obs-on wall is
+  within ``REPRO_OBS_OVERHEAD_MAX`` (default 2.0×) of obs-off
+  (measured ~1.6× on the flash-crowd/predictive stress cell).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core import reset_id_counters
+from repro.core.experiment import ExperimentSpec, run_experiment
+from repro.obs import (ObsConfig, chrome_trace, load_bundle, render_report,
+                       run_recorded)
+
+
+def build_spec(args, obs=None) -> ExperimentSpec:
+    kwargs = dict(scheduler=args.scheduler, rescheduler=args.rescheduler,
+                  autoscaler=args.autoscaler, seed=args.seed,
+                  engine=args.engine, obs=obs)
+    if args.scenario is not None:
+        kwargs["scenario"] = args.scenario
+        kwargs["scenario_jobs"] = args.jobs
+    else:
+        kwargs["workload"] = args.workload
+    return ExperimentSpec(**kwargs)
+
+
+def record(args):
+    reset_id_counters()
+    spec = build_spec(args, obs=ObsConfig(capacity=args.capacity,
+                                          max_spans=args.capacity))
+    result, rec = run_recorded(spec)
+    return result, rec
+
+
+def write_chrome_trace(bundle, path: str) -> int:
+    events = chrome_trace(bundle["profile"])
+    with open(path, "w") as fh:
+        json.dump({"traceEvents": events}, fh)
+    return len(events)
+
+
+def report(args) -> None:
+    if args.load:
+        bundle = load_bundle(args.load)
+    else:
+        _result, rec = record(args)
+        bundle = rec.bundle()
+        if args.export:
+            from repro.obs import save_bundle
+            save_bundle(bundle, args.export)
+            print(f"# exported {args.export}")
+    kinds = ([k for k in args.kind.split(",") if k]
+             if args.kind else None)
+    print(render_report(bundle, kinds=kinds, limit=args.limit))
+    if args.chrome_trace:
+        n = write_chrome_trace(bundle, args.chrome_trace)
+        print(f"# chrome trace: {args.chrome_trace} ({n} spans)")
+
+
+def smoke(args) -> None:
+    """CI gate: the whole obs pipeline on a small run."""
+    from repro.obs.recorder import (EV_SCALE_IN, EV_SCALE_OUT, SO_PRELAUNCH,
+                                    EventLog)
+
+    args.scenario, args.jobs = args.scenario or "flash-crowd", args.jobs or 200
+    result_on, rec = record(args)
+
+    # Obs-off rerun must produce the bit-identical ExperimentResult.
+    reset_id_counters()
+    result_off = run_experiment(build_spec(args, obs=None))
+    assert dataclasses.asdict(result_on) == dataclasses.asdict(result_off), \
+        "obs-on run diverged from obs-off run"
+    print(f"obs smoke: result parity OK (scale_outs={result_on.scale_outs})")
+
+    # Event-log round trip, both formats, bit-exact.
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        for suffix in (".npz", ".json"):
+            path = os.path.join(tmp, f"events{suffix}")
+            rec.events.save(path)
+            assert rec.events.same_as(EventLog.load(path)), \
+                f"event log round trip drifted through {suffix}"
+        bundle_path = os.path.join(tmp, "bundle.npz")
+        rec.export(bundle_path)
+        bundle = load_bundle(bundle_path)
+        ev = bundle["events"]
+        assert ev["n_seen"] == rec.events.n_seen
+        assert ev["n_seen"] <= ev["capacity"], \
+            "smoke run wrapped the event ring; raise --capacity"
+        so_mask = ev["columns"]["kind"] == EV_SCALE_OUT
+        n_out = int((so_mask
+                     & (ev["columns"]["v1"] != SO_PRELAUNCH)).sum())
+        n_in = int((ev["columns"]["kind"] == EV_SCALE_IN).sum())
+        # Every reactive scale-out request must be explained in the log
+        # (predictive prelaunches are recorded too, but they are not
+        # requests — result.scale_outs counts only the reactive chain).
+        assert n_out == result_on.scale_outs, \
+            f"{n_out} scale_out events != result.scale_outs " \
+            f"{result_on.scale_outs}"
+        assert n_in == result_on.scale_ins, \
+            f"{n_in} scale_in events != result.scale_ins {result_on.scale_ins}"
+        print(f"obs smoke: round trip OK ({len(rec.events)} events, "
+              f"{n_out} scale-outs, {n_in} scale-ins attributed)")
+
+        trace_path = os.path.join(tmp, "trace.json")
+        n_spans = write_chrome_trace(bundle, trace_path)
+        with open(trace_path) as fh:
+            loaded = json.load(fh)
+        assert len(loaded["traceEvents"]) == n_spans > 0
+        assert all(e["ph"] == "X" and e["dur"] >= 0.0
+                   for e in loaded["traceEvents"])
+        print(f"obs smoke: chrome trace OK ({n_spans} spans)")
+
+    print(render_report(bundle, limit=args.limit))
+    print("obs smoke OK")
+
+
+def overhead_gate(args) -> None:
+    """CI gate: obs-off must not get slower; obs-on overhead is bounded."""
+    args.scenario, args.jobs = args.scenario or "flash-crowd", args.jobs or 400
+
+    def wall(obs):
+        best = float("inf")
+        for _ in range(args.repeats):
+            reset_id_counters()
+            spec = build_spec(args, obs=obs)
+            t0 = time.perf_counter()
+            result = run_experiment(spec)
+            best = min(best, time.perf_counter() - t0)
+        return best, result
+
+    off_s, r_off = wall(None)
+    on_s, r_on = wall(ObsConfig())
+    assert dataclasses.asdict(r_on) == dataclasses.asdict(r_off), \
+        "obs-on run diverged from obs-off run"
+    limit = float(os.environ.get("REPRO_OBS_OVERHEAD_MAX", "2.0"))
+    ratio = on_s / off_s
+    print(f"obs overhead: off={1e3 * off_s:.1f}ms on={1e3 * on_s:.1f}ms "
+          f"ratio={ratio:.2f} (limit {limit:.2f})")
+    assert ratio <= limit, \
+        f"obs-on overhead {ratio:.2f}x exceeds {limit:.2f}x bound"
+    print("obs overhead gate OK")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--load", help="report on an exported bundle "
+                                   "(.npz/.json) instead of running")
+    ap.add_argument("--scenario", default=None,
+                    help="scenarios.registry name (e.g. flash-crowd)")
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--workload", default="mixed",
+                    help="paper workload when no --scenario is given")
+    ap.add_argument("--scheduler", default="best-fit")
+    ap.add_argument("--rescheduler", default="non-binding")
+    ap.add_argument("--autoscaler", default="predictive")
+    ap.add_argument("--engine", default=None, choices=(None, "array",
+                                                       "object"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--capacity", type=int, default=1 << 16,
+                    help="event/span ring slots")
+    ap.add_argument("--kind", default=None,
+                    help="drill-down filter, comma-separated kind names "
+                         "(default scale_out,scale_in)")
+    ap.add_argument("--limit", type=int, default=50,
+                    help="drill-down: show only the last N events")
+    ap.add_argument("--export", default=None,
+                    help="also export the bundle (.npz or .json)")
+    ap.add_argument("--chrome-trace", default=None,
+                    help="also write Chrome-trace/Perfetto JSON spans")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: pipeline end-to-end on a small run")
+    ap.add_argument("--overhead-gate", action="store_true",
+                    help="CI gate: obs-on wall within bound of obs-off")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="overhead gate: best-of-N walls")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        smoke(args)
+    elif args.overhead_gate:
+        overhead_gate(args)
+    else:
+        report(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,9 @@ from repro.core.cluster import Cluster, Node, NodeState
 from repro.core.pods import Pod
 from repro.core.rescheduler import _ShadowBase, _ShadowCapacity
 from repro.core.resources import Resources
+from repro.obs.recorder import (R_CONSOLIDATE, R_UNSPEC, SO_ABSORBED,
+                                SO_ASSOCIATED, SO_LAUNCH, SO_LIMITED,
+                                SO_PRELAUNCH)
 
 
 class NodeProvider(abc.ABC):
@@ -56,6 +59,9 @@ class Autoscaler(abc.ABC):
     def __init__(self, provider: NodeProvider,
                  scale_in_util_ceiling: Optional[float] = None):
         self.provider = provider
+        # Observability recorder (repro.obs.ObsRecorder.attach sets it);
+        # None = compiled out — decision sites pay one is-None test.
+        self.obs = None
         # Policy-search knob (the "lower threshold" of threshold-based
         # cluster autoscalers): run Alg. 6 consolidation only while mean
         # RAM utilization is at or below this ceiling — a busy cluster
@@ -153,31 +159,46 @@ class Autoscaler(abc.ABC):
                 and self._utilization(cluster) > self.scale_in_util_ceiling):
             return []
         touched: List[str] = []
+        obs = self.obs
 
         # 1. Shut down empty dynamically-created nodes (READY or TAINTED).
         for node in self._step1_candidates(cluster):
+            if obs is not None:   # record before removal mutates utilization
+                obs.scale_in(now, node.node_id, 1)
             self.provider.terminate_node(node, now)
             cluster.remove_node(node, now)
             self.notify_node_removed(node)
             touched.append(node.node_id)
 
         # 2./3. Consolidate moveable pods off candidate nodes.
-        for node in self._step23_candidates(cluster):
-            if node.has_only_moveable():
-                if self._all_placeable(cluster, node, node.moveable_pods()):
-                    for pod in list(node.pods.values()):
-                        cluster.unbind(pod, now)   # recreated -> next cycle
-                    self.provider.terminate_node(node, now)
-                    cluster.remove_node(node, now)
-                    self.notify_node_removed(node)
-                    touched.append(node.node_id)
-            elif node.has_moveable_and_batch():
-                movers = node.moveable_pods()
-                if movers and self._all_placeable(cluster, node, movers):
-                    for pod in movers:
-                        cluster.unbind(pod, now)
-                    node.taint()                    # drains as batch completes
-                    touched.append(node.node_id)
+        if obs is not None:
+            obs.reason = R_CONSOLIDATE   # eviction attribution context
+        try:
+            for node in self._step23_candidates(cluster):
+                if node.has_only_moveable():
+                    if self._all_placeable(cluster, node,
+                                           node.moveable_pods()):
+                        pods = list(node.pods.values())
+                        if obs is not None:
+                            obs.scale_in(now, node.node_id, 2, len(pods))
+                        for pod in pods:
+                            cluster.unbind(pod, now)   # recreated next cycle
+                        self.provider.terminate_node(node, now)
+                        cluster.remove_node(node, now)
+                        self.notify_node_removed(node)
+                        touched.append(node.node_id)
+                elif node.has_moveable_and_batch():
+                    movers = node.moveable_pods()
+                    if movers and self._all_placeable(cluster, node, movers):
+                        if obs is not None:
+                            obs.scale_in(now, node.node_id, 3, len(movers))
+                        for pod in movers:
+                            cluster.unbind(pod, now)
+                        node.taint()                # drains as batch completes
+                        touched.append(node.node_id)
+        finally:
+            if obs is not None:
+                obs.reason = R_UNSPEC
         return touched
 
     def _all_placeable(self, cluster: Cluster, exclude: Node,
@@ -230,11 +251,20 @@ class SimpleAutoscaler(Autoscaler):
                    or now - self._last_launch >= self.provisioning_interval_s)
         if not rate_ok and self.scale_out_bypass_util is not None:
             rate_ok = self._utilization(cluster) >= self.scale_out_bypass_util
+        obs = self.obs
         if rate_ok:
             node = self.provider.launch_node(now)
             cluster.add_node(node)
+            if obs is not None:
+                since = (float("nan") if self._last_launch is None
+                         else now - self._last_launch)
+                obs.scale_out(now, pod.uid, node.node_id, SO_LAUNCH,
+                              detail=since)
             self._last_launch = now
-        # else: ignore the scale-out request (rate limited)
+        elif obs is not None:
+            # Rate limited: _last_launch is set (else rate_ok held).
+            obs.scale_out(now, pod.uid, None, SO_LIMITED,
+                          detail=now - self._last_launch)
 
     def scale_in(self, cluster: Cluster, now: float) -> List[str]:
         return self._scale_in_impl(cluster, now)
@@ -271,7 +301,11 @@ class BindingAutoscaler(Autoscaler):
         self._noticed: set = set()   # node ids already given a replacement
 
     def scale_out(self, cluster: Cluster, pod: Pod, now: float) -> None:
+        obs = self.obs
         if pod.uid in self._pod_to_node:
+            if obs is not None:
+                obs.scale_out(now, pod.uid, self._pod_to_node[pod.uid],
+                              SO_ASSOCIATED)
             return  # already associated with a booting node — ignore
         # Is there still room in one of the nodes being provisioned?
         for tracker in sorted(self._tracked.values(),
@@ -279,6 +313,10 @@ class BindingAutoscaler(Autoscaler):
             if pod.requests.fits_in(tracker.planned_free):
                 tracker.assigned[pod.uid] = pod.requests
                 self._pod_to_node[pod.uid] = tracker.node.node_id
+                if obs is not None:
+                    obs.scale_out(now, pod.uid, tracker.node.node_id,
+                                  SO_ABSORBED,
+                                  detail=float(len(tracker.assigned)))
                 return
         # Launch a new node and assign the pod to it.
         node = self.provider.launch_node(now)
@@ -286,6 +324,8 @@ class BindingAutoscaler(Autoscaler):
         self._tracked[node.node_id] = _ProvisioningTracker(
             node=node, assigned={pod.uid: pod.requests})
         self._pod_to_node[pod.uid] = node.node_id
+        if obs is not None:
+            obs.scale_out(now, pod.uid, node.node_id, SO_LAUNCH)
 
     def notify_node_ready(self, node: Node) -> None:
         tracker = self._tracked.pop(node.node_id, None)
@@ -480,6 +520,12 @@ class PredictiveAutoscaler(SimpleAutoscaler):
                 del self._prelaunched_at[nid]
         self._roll_to(int(now // self.bin_s))
         rate, conf = self.forecaster.predict()
+        obs = self.obs
+        if obs is not None:
+            obs.forecast(now, rate, conf,
+                         now - self._last_unsched <= self.bin_s,
+                         self._slow_rate if self._slow_rate is not None
+                         else 0.0)
         if conf < self.conf_min or rate <= 0.0 or self._arr_n == 0:
             return   # fallback contract: stay purely reactive
         slow = self._slow_rate if self._slow_rate is not None else 0.0
@@ -529,6 +575,10 @@ class PredictiveAutoscaler(SimpleAutoscaler):
             self._prelaunched_at[node.node_id] = now
             self.prelaunched += 1
             self._last_launch = now   # shared with the Alg. 5 rate limiter
+            if obs is not None:
+                obs.scale_out(now, -1, node.node_id, SO_PRELAUNCH, rate=rate,
+                              conf=conf, headroom=self.headroom,
+                              detail=deficit)
 
     @staticmethod
     def _free_capacity(cluster: Cluster):

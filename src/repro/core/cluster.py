@@ -309,6 +309,14 @@ class Cluster:
         self.on_bind: Optional[Callable[[Pod], None]] = None
         self.on_unbind: Optional[Callable[[Pod], None]] = None
         self.on_complete: Optional[Callable[[Pod], None]] = None
+        # Flight recorder (repro.obs.ObsRecorder), attached by
+        # build_simulation when ExperimentSpec.obs is set.  Unlike the
+        # on_bind/on_unbind observers, the recorder hooks at the *commit*
+        # points below, so it sees every bind/evict on both engines without
+        # deoptimizing the shell-less fast paths (which key on the observer
+        # callbacks staying the orchestrator's own).  None = compiled out:
+        # each commit pays one attribute test.
+        self.obs = None
 
     # -- membership ----------------------------------------------------------
     def add_node(self, node: Node) -> Node:
@@ -362,6 +370,10 @@ class Cluster:
         pod.bind(node.node_id, now)
         if self.pod_store is not None:
             self.pod_store.sync_bind(pod, node._slot)
+        if self.obs is not None:
+            # Pod.bind leaves pending_since at the interval it just closed.
+            self.obs.bind(now, pod.uid, node.node_id,
+                          now - pod.pending_since, pod.incarnation)
         if self.on_bind is not None:
             self.on_bind(pod)
 
@@ -382,6 +394,7 @@ class Cluster:
         """
         touched: Dict[str, Node] = {}
         on_bind = self.on_bind
+        obs = self.obs
         store = self.pod_store
         for pod, node in bindings:
             node.pods[pod.uid] = pod
@@ -390,6 +403,9 @@ class Cluster:
             pod.bind(node.node_id, now)
             if store is not None:
                 store.sync_bind(pod, node._slot)
+            if obs is not None:
+                obs.bind(now, pod.uid, node.node_id,
+                         now - pod.pending_since, pod.incarnation)
             if on_bind is not None:
                 on_bind(pod)
         for node in touched.values():
@@ -426,6 +442,15 @@ class Cluster:
         touched: Dict[int, Node] = {}
         F_BATCH = _engine.POD_F_BATCH
         F_MOVE = _engine.POD_F_MOVEABLE
+        obs = self.obs
+        if obs is not None:
+            ps_col = store.pending_since
+            inc_col = store.incarnation
+            for row, slot in bindings:
+                # Columns are untouched until the commit loop below, so the
+                # open pending interval and incarnation read exactly.
+                obs.bind(now, uid_col[row], slot_nodes[slot].node_id,
+                         now - ps_col[row], inc_col[row])
         for row, slot in bindings:
             node = slot_nodes[slot]
             uid = uid_col[row]
@@ -467,6 +492,10 @@ class Cluster:
         pod.evict(now, failed=failed)
         if self.pod_store is not None:
             self.pod_store.sync_unbind(pod)
+        if self.obs is not None:
+            self.obs.evict(now, pod.uid,
+                           node.node_id if node is not None else None,
+                           pod.incarnation, failed)
         if self.on_unbind is not None:
             self.on_unbind(pod)
 
@@ -516,6 +545,7 @@ class Cluster:
         F_MOVE = _engine.POD_F_MOVEABLE
         F_CKPT = _engine.POD_F_CHECKPOINTABLE
         on_unbind = self.on_unbind
+        obs = self.obs
         victims = list(dict.keys(node.pods))
         for uid in victims:
             row = index[uid]
@@ -533,6 +563,8 @@ class Cluster:
                 node._account_remove(pod)
                 pod.evict(now, failed=True)
                 store.sync_unbind(pod)
+                if obs is not None:
+                    obs.evict(now, uid, node.node_id, pod.incarnation, True)
                 if on_unbind is not None:
                     on_unbind(pod)
                 continue
@@ -563,6 +595,8 @@ class Cluster:
             bt_col[row] = None
             ps_col[row] = now
             inc_col[row] += 1
+            if obs is not None:
+                obs.evict(now, uid, node.node_id, int(inc_col[row]), True)
             if on_row is not None:
                 on_row(row)
         node._notify_usage()

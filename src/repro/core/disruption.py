@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.cluster import Node, NodeState
 from repro.core.simulation import NODE_NOTICE, POD_CRASH, ZONE_OUTAGE
+from repro.obs.recorder import R_CRASH, R_UNSPEC
 
 
 @dataclasses.dataclass
@@ -179,7 +180,14 @@ class CrashLoopInjector:
             self._crashes[uid] = n
             self._eligible_at[uid] = (
                 sim.now + self.backoff_base_s * 2.0 ** (n - 1))
-            sim.cluster.unbind(pod, sim.now, failed=True)
+            obs = sim.obs
+            if obs is not None:
+                obs.reason = R_CRASH   # eviction attribution context
+            try:
+                sim.cluster.unbind(pod, sim.now, failed=True)
+            finally:
+                if obs is not None:
+                    obs.reason = R_UNSPEC
             sim.disruption_log.append((sim.now, "pod_crash", uid, [n]))
         self._schedule_next(sim)
 

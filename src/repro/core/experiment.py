@@ -91,6 +91,12 @@ class ExperimentSpec:
     # nodes — the kernels are decision-identical, so this is purely a
     # performance choice); None defers to the REPRO_WAVE_SELECT env var.
     wave_select: Optional[str] = None
+    # Observability (repro.obs): an ObsConfig (or True for defaults)
+    # attaches a flight recorder + cycle-phase profiler to the built
+    # simulation.  None (default) compiles observability out — the hot
+    # paths pay one is-None test and results are untouched; with it set,
+    # recording is passive and ExperimentResult stays bit-identical.
+    obs: object = None
 
     def workload_source(self):
         """Resolve this spec's workload to ``(arrivals, trace)`` — exactly
@@ -214,6 +220,15 @@ def build_simulation(spec: ExperimentSpec) -> Simulation:
                      config=SimConfig(cycle_period_s=spec.cycle_period_s),
                      failure_injector=spec.failure_injector)
     provider.attach(sim)
+    if spec.obs is not None and spec.obs is not False:
+        from repro.obs import ObsConfig, ObsRecorder
+        config = spec.obs if isinstance(spec.obs, ObsConfig) else None
+        recorder = ObsRecorder(config).attach(sim)
+        recorder.meta = {
+            "workload": spec.workload_label(), "scheduler": spec.scheduler,
+            "rescheduler": spec.rescheduler, "autoscaler": spec.autoscaler,
+            "seed": spec.seed,
+            "engine": "array" if cluster.arrays is not None else "object"}
     return sim
 
 

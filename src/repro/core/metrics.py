@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster, NodeState
 
@@ -31,7 +31,10 @@ class MetricsCollector:
     def __init__(self):
         self.samples: List[Sample] = []
         self.pending_intervals: List[float] = []
-        self.node_count_series: List[tuple] = []
+        # (sample time, live node count) at every 20 s tick — exported
+        # through the obs bundle (repro.obs.ObsRecorder.bundle) alongside
+        # pending_intervals for fleet-size-over-time plots.
+        self.node_count_series: List[Tuple[float, int]] = []
 
     def sample(self, cluster: Cluster, now: float) -> None:
         # cluster.utilization_totals() reads the SoA mirror's incrementally

@@ -141,6 +141,10 @@ class Orchestrator:
         self.total_evictions = 0
         self.total_scale_outs = 0
         self.total_scale_ins = 0
+        # Flight recorder (repro.obs.ObsRecorder), attached by
+        # build_simulation when ExperimentSpec.obs is set; None = obs
+        # compiled out (one attribute test per cycle phase).
+        self.obs = None
         # Fleet extension: evict checkpointable batch pods running on nodes
         # slower than `straggler_threshold` × nominal speed (0 disables).
         self.straggler_threshold = straggler_threshold
@@ -457,18 +461,30 @@ class Orchestrator:
         and to the seed per-pod loop otherwise; both produce bit-identical
         bindings and stats."""
         stats = CycleStats()
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
         if self.straggler_threshold > 0:
             self._mitigate_stragglers(now)
         # Predictive prelaunch hook (no-op for the paper's autoscalers):
         # runs before placement so capacity requested for a forecast burst
         # starts booting in the same cycle that observes the demand.
-        self.autoscaler.on_cycle(self.cluster, now)
+        if prof is None:
+            self.autoscaler.on_cycle(self.cluster, now)
+        else:
+            t0 = prof.start()
+            self.autoscaler.on_cycle(self.cluster, now)
+            prof.stop("autoscaler_step", t0, now)
         if self.store is not None:
             self._cycle_wave(self.pending_rows(), now, stats)
         else:
             self._cycle_per_pod(self.pending_pods(), now, stats)
         if stats.all_placed:
-            removed = self.autoscaler.scale_in(self.cluster, now)
+            if prof is None:
+                removed = self.autoscaler.scale_in(self.cluster, now)
+            else:
+                t0 = prof.start()
+                removed = self.autoscaler.scale_in(self.cluster, now)
+                prof.stop("scale_in", t0, now)
             stats.scale_ins = len(removed)
             self.total_scale_ins += len(removed)
         # Fast (vectorized) invariant every cycle; full object-walk +
@@ -511,14 +527,23 @@ class Orchestrator:
         # of thousands of pending pods every cycle.
         void_fallback = (type(self.rescheduler) is VoidRescheduler
                          and type(self.autoscaler) is VoidAutoscaler)
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
         placer = None
         start = 0
         while start < len(snapshot):
             if placer is None or not placer.in_sync():
                 placer = _engine.WavePlacer(arr)
-            bindings, blocked = self.scheduler.select_wave_store(
-                placer, store, snapshot, start)
+            if prof is None:
+                bindings, blocked = self.scheduler.select_wave_store(
+                    placer, store, snapshot, start)
+            else:
+                t0 = prof.start()
+                bindings, blocked = self.scheduler.select_wave_store(
+                    placer, store, snapshot, start)
+                prof.stop("wave_select", t0, now)
             if bindings:
+                t0 = prof.start() if prof is not None else 0.0
                 if fast:
                     self.cluster.bind_wave_store(bindings, now)
                     self._note_bound_rows(bindings)
@@ -527,6 +552,8 @@ class Orchestrator:
                     self.cluster.bind_wave(
                         [(store.pod_at(row), by_slot(slot))
                          for row, slot in bindings], now)
+                if prof is not None:
+                    prof.stop("bind_commit", t0, now)
                 placer.version = arr.version   # re-arm: our own commit
                 stats.placed += len(bindings)
             if blocked is None:
@@ -538,6 +565,9 @@ class Orchestrator:
                 stats.all_placed = False
                 stats.scale_out_requests += 1
                 self.total_scale_outs += 1
+                if obs is not None:
+                    # Same event _handle_unschedulable records, shell-less.
+                    obs.resched(now, store.uid[snapshot[blocked]], 2)
             else:
                 self._handle_unschedulable(store.pod_at(snapshot[blocked]),
                                            now, stats)
@@ -567,10 +597,18 @@ class Orchestrator:
     def _cycle_per_pod(self, snapshot: List[Pod], now: float,
                        stats: CycleStats) -> None:
         """Seed per-pod loop (object engine): the parity reference."""
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
         for pod in snapshot:
             if pod.phase != PodPhase.PENDING:
                 continue   # a binding rescheduler may have placed it already
-            if self.scheduler.schedule(self.cluster, pod, now):
+            if prof is None:
+                placed = self.scheduler.schedule(self.cluster, pod, now)
+            else:
+                t0 = prof.start()
+                placed = self.scheduler.schedule(self.cluster, pod, now)
+                prof.stop("wave_select", t0, now)
+            if placed:
                 stats.placed += 1
                 continue
             self._handle_unschedulable(pod, now, stats)
@@ -581,16 +619,30 @@ class Orchestrator:
         failure request scale-out (shared by both cycle engines)."""
         stats.unschedulable += 1
         stats.all_placed = False
-        outcome = self.rescheduler.reschedule(self.cluster, pod, now)
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
+        if prof is None:
+            outcome = self.rescheduler.reschedule(self.cluster, pod, now)
+        else:
+            t0 = prof.start()
+            outcome = self.rescheduler.reschedule(self.cluster, pod, now)
+            prof.stop("reschedule", t0, now)
         if outcome == RescheduleOutcome.WAIT:
+            if obs is not None:
+                obs.resched(now, pod.uid, 0)   # RS_WAIT
             return   # age gate: suppress autoscaling for this pod too
         if outcome == RescheduleOutcome.RESCHEDULED:
             stats.rescheduled += 1
             # Binding rescheduler may have bound the pod itself.
+            # (The RESCHEDULED event — with victim node + relocation count
+            # attribution — is recorded by the rescheduler, which knows
+            # the plan it committed.)
             if pod.phase != PodPhase.PENDING:
                 stats.placed += 1
                 stats.unschedulable -= 1
             return
+        if obs is not None:
+            obs.resched(now, pod.uid, 2)       # RS_FAILED
         stats.scale_out_requests += 1
         self.total_scale_outs += 1
         self.autoscaler.scale_out(self.cluster, pod, now)
@@ -618,6 +670,13 @@ class Orchestrator:
                 continue
             if self.on_evict:
                 self.on_evict(pod, now)
-            self.cluster.unbind(pod, now)   # checkpoint + requeue elsewhere
+            obs = self.obs
+            if obs is not None:
+                obs.reason = 4   # R_STRAGGLER eviction attribution
+            try:
+                self.cluster.unbind(pod, now)   # checkpoint + requeue
+            finally:
+                if obs is not None:
+                    obs.reason = 0
             node.taint()                    # cordon the straggler
             self.total_evictions += 1

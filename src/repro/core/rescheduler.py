@@ -35,6 +35,7 @@ from repro.core import engine as _engine
 from repro.core.cluster import Cluster, Node
 from repro.core.pods import Pod
 from repro.core.resources import Resources
+from repro.obs.recorder import R_RESCHED, R_UNSPEC, RS_RESCHEDULED
 
 
 class RescheduleOutcome(enum.Enum):
@@ -185,6 +186,9 @@ class Rescheduler(abc.ABC):
     def __init__(self, max_pod_age_s: float = 60.0, sort_ascending: bool = False):
         self.max_pod_age_s = max_pod_age_s
         self.sort_ascending = sort_ascending
+        # Observability recorder (repro.obs.ObsRecorder.attach sets it);
+        # None = compiled out.
+        self.obs = None
         # Array-engine plan-construction cache, version-invalidated (see
         # _ShadowBase): shared across every blocked pod of a cycle as long
         # as nothing mutates the cluster in between.
@@ -234,7 +238,14 @@ class Rescheduler(abc.ABC):
             key = (pod.requests.cpu_m, pod.requests.mem_mb)
             if key in base.failed_keys:
                 return None
-        plan = self._build_plan_uncached(cluster, pod, base)
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
+        if prof is None:
+            plan = self._build_plan_uncached(cluster, pod, base)
+        else:
+            t0 = prof.start()
+            plan = self._build_plan_uncached(cluster, pod, base)
+            prof.stop("shadow_plan", t0)
         if plan is None and base is not None:
             base.failed_keys.add(key)
         return plan
@@ -292,8 +303,18 @@ class NonBindingRescheduler(Rescheduler):
         plan = self._build_plan(cluster, pod)
         if plan is None:
             return RescheduleOutcome.FAILED
-        for mover, _target in plan.relocations.values():
-            cluster.unbind(mover, now)    # -> PENDING, recreated by controller
+        obs = self.obs
+        if obs is not None:
+            obs.resched(now, pod.uid, RS_RESCHEDULED,
+                        victim=plan.victim.node_id,
+                        n_moved=len(plan.relocations))
+            obs.reason = R_RESCHED   # eviction attribution context
+        try:
+            for mover, _target in plan.relocations.values():
+                cluster.unbind(mover, now)   # -> PENDING, recreated next cycle
+        finally:
+            if obs is not None:
+                obs.reason = R_UNSPEC
         return RescheduleOutcome.RESCHEDULED
 
 
@@ -309,9 +330,19 @@ class BindingRescheduler(Rescheduler):
         plan = self._build_plan(cluster, pod)
         if plan is None:
             return RescheduleOutcome.FAILED
-        for mover, target in plan.relocations.values():
-            cluster.unbind(mover, now)
-            cluster.bind(mover, cluster.get(target), now)
+        obs = self.obs
+        if obs is not None:
+            obs.resched(now, pod.uid, RS_RESCHEDULED,
+                        victim=plan.victim.node_id,
+                        n_moved=len(plan.relocations))
+            obs.reason = R_RESCHED   # eviction attribution context
+        try:
+            for mover, target in plan.relocations.values():
+                cluster.unbind(mover, now)
+                cluster.bind(mover, cluster.get(target), now)
+        finally:
+            if obs is not None:
+                obs.reason = R_UNSPEC
         # Place the unschedulable pod on the freed victim node.
         if plan.victim.fits(pod.requests):
             cluster.bind(pod, plan.victim, now)

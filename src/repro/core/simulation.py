@@ -196,6 +196,9 @@ class Simulation:
         # disruption event (kind >= NODE_FAIL); the chaos harness audits
         # the pod columns here.
         self.on_disruption = None
+        # Observability recorder (repro.obs.ObsRecorder.attach sets it);
+        # None = compiled out — the run loop pays one is-None test per event.
+        self.obs = None
         self._stuck = False
         self.first_submit: Optional[float] = None
         self.last_batch_done: Optional[float] = None
@@ -223,21 +226,43 @@ class Simulation:
 
         max_t = self.config.max_sim_time_s
         completed = False
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
         while tl:
-            t, kind, payload = tl.pop()
+            if prof is None:
+                t, kind, payload = tl.pop()
+            else:
+                t0 = prof.start()
+                t, kind, payload = tl.pop()
+                prof.stop("timeline_drain", t0, self.now)
             if t > max_t:
                 break
             self.now = t
             if kind == ARRIVAL:
-                self._on_arrivals(payload)
+                if prof is None:
+                    self._on_arrivals(payload)
+                else:
+                    t0 = prof.start()
+                    self._on_arrivals(payload)
+                    prof.stop("arrival_ingest", t0, t)
             elif kind == CYCLE:
                 self._on_cycle()
             elif kind == POD_DONE:
-                self._on_pod_done(payload)
+                if prof is None:
+                    self._on_pod_done(payload)
+                else:
+                    t0 = prof.start()
+                    self._on_pod_done(payload)
+                    prof.stop("completion_commit", t0, t)
             elif kind == NODE_READY:
                 self._on_node_ready(payload)
             elif kind == SAMPLE:
-                self._on_sample()
+                if prof is None:
+                    self._on_sample()
+                else:
+                    t0 = prof.start()
+                    self._on_sample()
+                    prof.stop("metrics_sample", t0, t)
             elif kind == NODE_FAIL:
                 self._on_node_fail(payload)
             elif kind == NODE_NOTICE:
@@ -290,7 +315,14 @@ class Simulation:
     def _on_cycle(self) -> None:
         t0 = time.perf_counter() if self.config.record_cycle_times else 0.0
         stats = self.orch.cycle(self.now)
-        self._schedule_completions()
+        obs = self.obs
+        prof = obs.prof if obs is not None else None
+        if prof is None:
+            self._schedule_completions()
+        else:
+            ts = prof.start()
+            self._schedule_completions()
+            prof.stop("completion_schedule", ts, self.now)
         if self.config.record_cycle_times:
             self.cycle_wall_s.append(time.perf_counter() - t0)
             self.cycle_placed.append(stats.placed)
@@ -515,6 +547,10 @@ class Simulation:
         self.preemption_notices += 1
         self.disruption_log.append(
             (self.now, "reclaim_notice", node.node_id, [len(node.pods)]))
+        obs = self.obs
+        if obs is not None:
+            obs.preempt_notice(self.now, node.node_id, len(node.pods),
+                               kill_delay_s)
         node.taint()
         self.orch.autoscaler.notify_preemption_notice(
             self.cluster, node, self.now)

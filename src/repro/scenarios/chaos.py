@@ -154,10 +154,13 @@ GOLDEN_JOBS = 120
 def chaos_spec(name: str, seed: int = 0, n_jobs: Optional[int] = None,
                engine: Optional[str] = None, scheduler: str = "best-fit",
                rescheduler: str = "non-binding", autoscaler: str = "binding",
-               with_disruptions: bool = True):
+               with_disruptions: bool = True, obs: object = None):
     """An `ExperimentSpec` for one chaos scenario — trace + fresh
     disruption schedule (or, with ``with_disruptions=False``, the same
-    trace undisturbed: the baseline for cost/recovery deltas)."""
+    trace undisturbed: the baseline for cost/recovery deltas).  ``obs``
+    (an ``repro.obs.ObsConfig``) attaches the flight recorder, which
+    captures the disruption decisions — preemption notices, node-fail
+    evictions, crash loops — with their attributed inputs."""
     from repro.core.experiment import ExperimentSpec
     cfg = CHAOS_SCENARIOS[name]
     if n_jobs is not None:
@@ -165,7 +168,8 @@ def chaos_spec(name: str, seed: int = 0, n_jobs: Optional[int] = None,
     return ExperimentSpec(
         trace=cfg.build(seed), scheduler=scheduler, rescheduler=rescheduler,
         autoscaler=autoscaler, seed=seed, engine=engine, initial_workers=3,
-        failure_injector=cfg.injector(seed) if with_disruptions else None)
+        failure_injector=cfg.injector(seed) if with_disruptions else None,
+        obs=obs)
 
 
 def capture_chaos_trace(name: str, engine: str, seed: int = 0,

@@ -89,6 +89,11 @@ class CellSpec:
     # (fresh per run — injectors are stateful) so `lost_work_s` becomes a
     # meaningful objective.
     chaos: bool = False
+    # Per-cell trace capture: a directory path (primitive, so cells stay
+    # picklable) makes the worker run with the flight recorder attached
+    # and export ``<obs_dir>/<label>.npz`` — recording is passive, so the
+    # row's metrics stay bit-identical to an uninstrumented run.
+    obs_dir: Optional[str] = None
 
     @property
     def label(self) -> str:
@@ -178,7 +183,13 @@ def run_cell(cell: CellSpec) -> dict:
     reset_id_counters()
     spec = cell.to_experiment_spec(trace)
     t0 = time.perf_counter()
-    result = run_experiment(spec)
+    if cell.obs_dir is not None:
+        from repro.obs import run_recorded
+        result, recorder = run_recorded(spec)
+        os.makedirs(cell.obs_dir, exist_ok=True)
+        recorder.export(os.path.join(cell.obs_dir, f"{cell.label}.npz"))
+    else:
+        result = run_experiment(spec)
     wall = time.perf_counter() - t0
     row = {"label": cell.label, "cell": dataclasses.asdict(cell),
            "n_jobs": trace.n, "infeasible": False}

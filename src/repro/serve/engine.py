@@ -51,11 +51,16 @@ class EngineConfig:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig,
-                 extra_inputs: Optional[Dict[str, np.ndarray]] = None):
+                 extra_inputs: Optional[Dict[str, np.ndarray]] = None,
+                 clock: Callable[[], float] = time.time):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.extra = extra_inputs or {}
+        # Injectable wall clock: request timestamps (first_token_at /
+        # done_at) come from here, so tests can drive a deterministic
+        # virtual clock instead of sleeping on real time.
+        self.clock = clock
         B = ecfg.num_slots
         self.states = tf.init_decode_state(cfg, B, ecfg.cache_len,
                                            dtype=jnp.dtype(cfg.dtype))
@@ -107,7 +112,7 @@ class ServeEngine:
                       logits[0].astype(jnp.float32), -1e30)))
         self._insert_slot(slot, row_states, first)
         req.tokens.append(first)
-        req.first_token_at = time.time()
+        req.first_token_at = self.clock()
         self.active[slot] = req
         self.remaining[slot] = req.max_new_tokens - 1
         return True
@@ -127,7 +132,7 @@ class ServeEngine:
             req.tokens.append(tok)
             self.remaining[slot] -= 1
             if self.remaining[slot] <= 0 or tok == self.ecfg.eos_id:
-                req.done_at = time.time()
+                req.done_at = self.clock()
                 finished.append(req)
                 self.active[slot] = None
         return finished
@@ -162,15 +167,27 @@ def _batch_axis(batched: jax.Array, row: jax.Array) -> int:
 
 
 def run_server(engine: ServeEngine, requests: List[Request],
-               log: Callable[[str], None] = print) -> Dict[str, float]:
+               log: Callable[[str], None] = print,
+               clock: Optional[Callable[[], float]] = None,
+               sleep: Callable[[float], None] = time.sleep
+               ) -> Dict[str, float]:
     """Drive the engine over a request list (arrival times respected via
-    submitted_at ordering); returns latency/throughput metrics."""
+    submitted_at ordering); returns latency/throughput metrics.
+
+    ``clock``/``sleep`` default to wall time; a test can pass a virtual
+    clock (and a sleep that advances it) for a deterministic run — the
+    engine's own timestamps follow ``engine.clock``, which defaults to the
+    same ``clock`` when one is given here."""
+    if clock is None:
+        clock = engine.clock
+    else:
+        engine.clock = clock
     pending = sorted(requests, key=lambda r: r.submitted_at)
-    t0 = time.time()
+    t0 = clock()
     done: List[Request] = []
     qi = 0
     while len(done) < len(requests):
-        now = time.time() - t0
+        now = clock() - t0
         while qi < len(pending) and pending[qi].submitted_at <= now:
             if engine.admit(pending[qi]):
                 qi += 1
@@ -181,9 +198,9 @@ def run_server(engine: ServeEngine, requests: List[Request],
         if not finished and qi < len(pending) and \
            not any(engine.active):
             # idle: jump to next arrival
-            time.sleep(max(0.0, pending[qi].submitted_at - (time.time() - t0)))
+            sleep(max(0.0, pending[qi].submitted_at - (clock() - t0)))
     total_tokens = sum(len(r.tokens) for r in done)
-    dt = time.time() - t0
+    dt = clock() - t0
     ttfts = [r.first_token_at - t0 - r.submitted_at for r in done
              if r.first_token_at]
     return {"requests": len(done), "tokens": total_tokens,

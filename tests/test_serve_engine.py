@@ -74,6 +74,45 @@ def test_snapshot_restore_continues_generation(engine_parts):
     assert list(req_b.tokens) == full_a   # greedy: identical continuation
 
 
+def test_injectable_clock_deterministic_timestamps(engine_parts):
+    """The engine's timestamps follow the injected clock, so a virtual
+    clock (plus a sleep that advances it) makes run_server deterministic —
+    no real sleeping, no wall-time in the metrics."""
+    cfg, params = engine_parts
+
+    def run_once():
+        now = [0.0]
+
+        def clock():
+            now[0] += 0.25      # every read ticks a virtual quarter-second
+            return now[0]
+
+        def sleep(dt):
+            now[0] += dt
+
+        eng = ServeEngine(cfg, params,
+                          EngineConfig(num_slots=2, cache_len=64))
+        reqs = [Request(uid=i, prompt=np.arange(4 + i) % 50,
+                        max_new_tokens=4, submitted_at=float(i))
+                for i in range(3)]
+        m = run_server(eng, reqs, log=lambda s: None, clock=clock,
+                       sleep=sleep)
+        return m, [(r.first_token_at, r.done_at) for r in reqs]
+
+    m1, stamps1 = run_once()
+    m2, stamps2 = run_once()
+    assert m1 == m2                       # bit-identical metrics
+    assert stamps1 == stamps2
+    assert all(f is not None and d is not None and d > f
+               for f, d in stamps1)
+    assert m1["elapsed_s"] > 0.0
+    # timestamps are multiples of the virtual tick — proof no wall clock
+    # leaked into the run
+    for f, d in stamps1:
+        assert abs(f / 0.25 - round(f / 0.25)) < 1e-9
+        assert abs(d / 0.25 - round(d / 0.25)) < 1e-9
+
+
 def test_sampling_modes():
     logits = jax.numpy.asarray([[0.0, 5.0, 1.0, -2.0]])
     greedy = sample(jax.random.key(0), logits, SamplingConfig(temperature=0.0))
